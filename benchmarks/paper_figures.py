@@ -1,0 +1,309 @@
+"""One function per paper table/figure (assignment deliverable d).
+
+Every function returns a list of CSV rows ``(name, value, derived)`` and is
+invoked by ``benchmarks.run``.  Values are model-predicted times (µs) from
+the extended α–β cost model / planner — the paper's own evaluation
+methodology (§5: Eq. 1 with congestion & dilation; §6: FlexFlow-style graph
+simulation).  Paper-claim checks are asserted where the text states numbers.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core import schedules as S
+from repro.core import topology as T
+from repro.core.circuits import MZIMesh, random_requests, route_circuits
+from repro.core.fibers import random_demands, route_fibers, server_grid
+from repro.core.pccl import CollectiveRequest, baseline_cost, plan_collective
+from repro.core.planner import plan
+
+from .taskgraph import CommScheme, Workload, simulate_training
+
+HW = cm.H100_DGX  # α=3µs, β=1/450GB/s, r=5µs (§5)
+
+Row = Tuple[str, float, str]
+
+MB = 1024.0 ** 2
+GB = 1024.0 ** 3
+
+
+def _std(n: int) -> List[T.Topology]:
+    return [T.ring(n), T.torus2d(*T.square_dims2(n))]
+
+
+def _topos(n: int) -> Dict[str, T.Topology]:
+    t = T.standard_topologies(n)
+    return {k: t[k] for k in ["ring", "torus2d", "torus3d", "grid2d", "grid3d"]}
+
+
+def _baseline_algos(n: int, topo_name: str):
+    a2, b2 = T.square_dims2(n)
+    a3, b3, c3 = T.square_dims3(n)
+    return {
+        "ring": ("ring", None),
+        "rhd": ("rhd", None),
+        "swing": ("swing", None),
+        "bucket2d": ("bucket2d", (a2, b2)),
+        "bucket3d": ("bucket3d", (a3, b3, c3)),
+    }
+
+
+# ---------------------------------------------------------------- Figure 1
+def fig1_alltoall_3d_torus() -> List[Row]:
+    """AllToAll + AllReduce on a 4×4×4 torus: PCCL matches the torus-ideal
+    bucket AllReduce and beats hypercube-DEX AllToAll ~7.5× (paper Fig. 1)."""
+    n = 64
+    topo = T.torus3d(4, 4, 4)
+    # Fig. 1 does not state its buffer size; 16 MB (a typical MoE dispatch)
+    # reproduces the paper's ~7.5× — the α·dilation cost of 63 direct-
+    # exchange rounds on the torus vs PCCL's 6 contention-free DEX rounds.
+    # The full size sweep is in fig7/fig10a.
+    buf = 16 * MB
+    rows: List[Row] = []
+
+    direct_fixed = cm.schedule_cost_fixed(topo, S.direct_all_to_all(n, buf), HW).total
+    dex_fixed = cm.schedule_cost_fixed(topo, S.dex_all_to_all(n, buf), HW).total
+    pccl_a2a = plan_collective(
+        CollectiveRequest("all_to_all", n, buf), topo, HW, standard=_std(n)
+    ).cost
+    rows.append(("fig1/alltoall_direct_on_3dtorus", direct_fixed * 1e6, "us"))
+    rows.append(("fig1/alltoall_dex_on_3dtorus", dex_fixed * 1e6, "us"))
+    rows.append(("fig1/alltoall_pccl", pccl_a2a * 1e6, "us"))
+    speedup = direct_fixed / pccl_a2a
+    rows.append(("fig1/alltoall_speedup", speedup, "x (paper: ~7.5x)"))
+    assert 5.0 < speedup < 12.0, f"Fig.1 speedup out of band: {speedup}"
+    assert pccl_a2a <= dex_fixed
+
+    bucket = cm.schedule_cost_fixed(
+        topo, S.bucket_all_reduce((4, 4, 4), buf), HW
+    ).total
+    pccl_ar = plan_collective(
+        CollectiveRequest("all_reduce", n, buf, algorithm="auto"), topo, HW,
+        standard=_std(n),
+    ).cost
+    rows.append(("fig1/allreduce_bucket3d", bucket * 1e6, "us"))
+    rows.append(("fig1/allreduce_pccl", pccl_ar * 1e6, "us"))
+    rows.append(("fig1/allreduce_ratio", bucket / pccl_ar, "x (paper: PCCL matches)"))
+    assert pccl_ar <= bucket * 1.05
+    return rows
+
+
+# ---------------------------------------------------------------- Figure 7
+def fig7_reduce_scatter_sweep(n: int = 128) -> List[Row]:
+    """ReduceScatter across buffer sizes/topologies/algorithms @ r=5µs.
+    Claims: PCCL ≤ every baseline on every topology (the only system optimal
+    everywhere); up to 2.5× over the best baseline somewhere."""
+    rows: List[Row] = []
+    best_gain = 0.0
+    for topo_name, topo in _topos(n).items():
+        for buf in [1 * MB, 32 * MB, 256 * MB, 1 * GB]:
+            pccl = plan_collective(
+                CollectiveRequest("reduce_scatter", n, buf, algorithm="auto"),
+                topo, HW, standard=_std(n),
+            ).cost
+            rows.append(
+                (f"fig7/{topo_name}/{int(buf/MB)}MB/pccl", pccl * 1e6, "us")
+            )
+            for algo, (aname, dims) in _baseline_algos(n, topo_name).items():
+                c = baseline_cost("reduce_scatter", aname, topo, n, buf, HW, dims=dims).total
+                rows.append(
+                    (f"fig7/{topo_name}/{int(buf/MB)}MB/{algo}", c * 1e6, "us")
+                )
+                assert pccl <= c * 1.001, (
+                    f"PCCL beaten by {algo} on {topo_name} @ {buf/MB}MB: {pccl} vs {c}"
+                )  # optimal everywhere: auto mode may adopt the baseline schedule
+                best_gain = max(best_gain, c / pccl)
+    rows.append(("fig7/max_speedup_vs_best_known", best_gain, "x (paper: up to 2.5x+)"))
+    return rows
+
+
+# ----------------------------------------------------------- Figures 17/18
+def fig17_18_smaller_domains() -> List[Row]:
+    """Appendix Figs. 17/18: the Fig. 7 ReduceScatter sweep at 64 and 32
+    GPUs — same trends, PCCL optimal everywhere."""
+    rows: List[Row] = []
+    for n, tag in [(64, "fig17"), (32, "fig18")]:
+        for r in fig7_reduce_scatter_sweep(n):
+            rows.append((r[0].replace("fig7", tag), r[1], r[2]))
+    return rows
+
+
+# -------------------------------------------------------------- Figures 8/9
+def fig8_9_breakdown() -> List[Row]:
+    """Cost breakdown @128 GPUs: 256 MB/r=5µs (reconfigures log2 N = 7×) and
+    1 GB/r=1 ms (reconfigures < 7×, trades congestion for reconfig)."""
+    n = 128
+    rows: List[Row] = []
+    for tag, buf, hw in [
+        ("fig8_256MB_5us", 256 * MB, HW),
+        ("fig9_1GB_1ms", 1 * GB, cm.H100_DGX_R1MS),
+    ]:
+        for topo_name, topo in _topos(n).items():
+            p = plan_collective(
+                CollectiveRequest("reduce_scatter", n, buf), topo, hw, standard=_std(n)
+            )
+            b = p.breakdown()
+            for k in ("alpha", "beta", "dilation", "congestion", "reconfig"):
+                rows.append((f"{tag}/{topo_name}/pccl/{k}", b[k] * 1e6, "us"))
+            rows.append(
+                (f"{tag}/{topo_name}/pccl/n_reconfigs", p.num_reconfigs, "count")
+            )
+            rs = baseline_cost("reduce_scatter", "ring", topo, n, buf, hw)
+            for k, v in rs.breakdown().items():
+                if k != "total":
+                    rows.append((f"{tag}/{topo_name}/ring/{k}", v * 1e6, "us"))
+    # headline claims
+    p5 = plan_collective(
+        CollectiveRequest("reduce_scatter", n, 256 * MB), T.ring(n), HW, standard=_std(n)
+    )
+    assert p5.num_reconfigs == 7, p5.num_reconfigs
+    p1ms = plan_collective(
+        CollectiveRequest("reduce_scatter", n, 1 * GB), T.ring(n), cm.H100_DGX_R1MS,
+        standard=_std(n),
+    )
+    assert p1ms.num_reconfigs < 7
+    rows.append(("fig8/reconfigs_at_5us", p5.num_reconfigs, "count (paper: 7)"))
+    rows.append(("fig9/reconfigs_at_1ms", p1ms.num_reconfigs, "count (paper: ~4)"))
+    return rows
+
+
+# --------------------------------------------------------------- Figure 10a
+def fig10a_alltoall_32mb() -> List[Row]:
+    """AllToAll 32 MB @128 GPUs, r=5µs: PCCL (DEX input schedule) beats DEX
+    on every fixed topology."""
+    n, buf = 128, 32 * MB
+    rows: List[Row] = []
+    for topo_name, topo in _topos(n).items():
+        dex = cm.schedule_cost_fixed(topo, S.dex_all_to_all(n, buf), HW).total
+        pccl = plan_collective(
+            CollectiveRequest("all_to_all", n, buf), topo, HW, standard=_std(n)
+        ).cost
+        rows.append((f"fig10a/{topo_name}/dex", dex * 1e6, "us"))
+        rows.append((f"fig10a/{topo_name}/pccl", pccl * 1e6, "us"))
+        assert pccl <= dex * 1.001, topo_name
+    return rows
+
+
+# --------------------------------------------------------------- Figure 10b
+def fig10b_bert_allreduce_buffers() -> List[Row]:
+    """AllReduce buffer-size histogram of the paper's transformer (§6):
+    per-layer gradient buckets span latency-sensitive (~1 MB) to
+    BW-sensitive (~64 MB)."""
+    wl = Workload()
+    rows: List[Row] = []
+    # per-layer buckets: qkv+o (4d²), mlp (8d²), embeddings
+    d = wl.d_model
+    buckets = {
+        "attn_grad": 4 * d * d * 4,
+        "mlp_grad": 8 * d * d * 4,
+        "embed_grad": wl.vocab * d * 4,
+        "lnorm_grad": 2 * d * 4,
+    }
+    for k, v in buckets.items():
+        rows.append((f"fig10b/{k}", v / MB, "MB"))
+    lo, hi = min(buckets.values()) / MB, max(buckets.values()) / MB
+    assert lo < 1.0 and hi > 30.0  # paper: 1 MB .. 64 MB span
+    return rows
+
+
+# ------------------------------------------------------------ Figures 12-16
+def fig12_16_end_to_end(ns=(32, 64, 128)) -> List[Row]:
+    """Training throughput of the §6 transformer across cluster sizes and
+    reconfiguration delays.  Claims: PCCL ≥ ideal algorithm per topology;
+    beats everything on grids; outperforms ring-on-ring (log α); ≥1.3×
+    somewhere vs a deployed baseline algorithm."""
+    wl = Workload()
+    rows: List[Row] = []
+    max_vs_baseline = 0.0
+    for n in ns:
+        topos = _topos(n)
+        for r_us, tag in [(5, "fig12"), (10, "fig13"), (25, "fig14"),
+                          (50, "fig15"), (500, "fig16")]:
+            hw = HW.with_reconfig(r_us * 1e-6)
+            for topo_name, topo in topos.items():
+                pccl = simulate_training(wl, CommScheme("pccl", "pccl"), topo, hw)
+                rows.append(
+                    (f"{tag}/n{n}/{topo_name}/pccl", pccl.throughput, "samples_per_s")
+                )
+                for algo, (aname, dims) in _baseline_algos(n, topo_name).items():
+                    base = simulate_training(
+                        wl, CommScheme(algo, "fixed", aname, dims), topo, hw
+                    )
+                    rows.append(
+                        (f"{tag}/n{n}/{topo_name}/{algo}", base.throughput, "samples_per_s")
+                    )
+                    if tag == "fig12":
+                        assert pccl.throughput >= base.throughput * 0.999, (
+                            n, topo_name, algo
+                        )
+                        max_vs_baseline = max(
+                            max_vs_baseline, pccl.throughput / base.throughput
+                        )
+    rows.append(
+        ("fig12/max_throughput_gain", max_vs_baseline, "x (paper: up to 1.3x e2e)")
+    )
+    assert max_vs_baseline >= 1.25, max_vs_baseline
+    return rows
+
+
+# --------------------------------------------------------------- Figure 19a
+def fig19a_circuit_routing() -> List[Row]:
+    """Algorithm 3 routing time on MZI meshes (paper: <2.5 s on 256×256)."""
+    rows: List[Row] = []
+    for size, k in [(64, 16), (128, 16), (256, 16)]:
+        mesh = MZIMesh(size, size)
+        reqs = random_requests(mesh, k, n_wavelengths=4, seed=0)
+        res = route_circuits(mesh, reqs)
+        rows.append((f"fig19a/{size}x{size}/{k}circuits", res.elapsed_s, "s"))
+        assert not res.failed
+        if size == 256:
+            assert res.elapsed_s < 2.5
+    return rows
+
+
+# ------------------------------------------------------------- fibers table
+def tab_fibers() -> List[Row]:
+    """§4.2: 64-server grid needs ≤7 fibers for 100 circuits, ≤31 for 512."""
+    topo = server_grid(64)
+    rows: List[Row] = []
+    for k, bound in [(100, 7), (512, 31)]:
+        r = route_fibers(topo, random_demands(topo, k, seed=0))
+        rows.append((f"fibers/64servers/{k}circuits", r.z, f"fibers (paper: <={bound})"))
+        rows.append((f"fibers/64servers/{k}circuits_time", r.elapsed_s, "s (paper: <10s)"))
+        assert r.z <= bound and r.elapsed_s < 10.0
+    return rows
+
+
+# ------------------------------------------------------------ planner speed
+def tab_planner_runtime() -> List[Row]:
+    """§4.1: planner solves the largest scale-up domains in <1 s."""
+    rows: List[Row] = []
+    for n in (32, 64, 128, 256, 512, 1024):
+        topo = T.ring(n)
+        sched = S.rhd_all_reduce(n, 256 * MB)
+        t0 = time.perf_counter()
+        plan(topo, _std(n), sched, HW)
+        dt = time.perf_counter() - t0
+        rows.append((f"planner/n{n}/rhd_allreduce", dt, "s (paper: <1s)"))
+    assert dt < 1.0
+    return rows
+
+
+ALL_FIGURES = [
+    ("fig1", fig1_alltoall_3d_torus),
+    ("fig7", fig7_reduce_scatter_sweep),
+    ("fig17_18", fig17_18_smaller_domains),
+    ("fig8_9", fig8_9_breakdown),
+    ("fig10a", fig10a_alltoall_32mb),
+    ("fig10b", fig10b_bert_allreduce_buffers),
+    ("fig12_16", fig12_16_end_to_end),
+    ("fig19a", fig19a_circuit_routing),
+    ("fibers", tab_fibers),
+    ("planner", tab_planner_runtime),
+]

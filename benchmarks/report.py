@@ -1,0 +1,80 @@
+"""Render EXPERIMENTS.md tables from results/*.json.
+
+  PYTHONPATH=src python -m benchmarks.report dryrun|roofline|perf [--dir ...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent / "results"
+
+
+def _load(d):
+    return [json.loads(p.read_text()) for p in sorted(d.glob("*.json"))]
+
+
+def dryrun_table(dirname="dryrun"):
+    recs = _load(ROOT / dirname)
+    print("| arch | shape | mesh | chips | compile_s | args GB/dev | "
+          "collective ops (count) | status |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] == "skipped":
+            if r["mesh"] == "single":
+                print(f"| {r['arch']} | {r['shape']} | both | — | — | — | — | "
+                      f"SKIP: {r['reason'][:60]} |")
+            continue
+        if r["status"] == "error":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — | ERROR |")
+            continue
+        mem = r.get("memory", {})
+        args = mem.get("argument_size_in_bytes", 0) / 1e9
+        cc = r["collectives"]["count_by_op"]
+        ops = ", ".join(f"{k}:{v}" for k, v in sorted(cc.items()) if v)
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chips']} | "
+              f"{r['compile_s']:.1f} | {args:.2f} | {ops} | OK |")
+
+
+def roofline_table(dirname="roofline"):
+    recs = _load(ROOT / dirname)
+    print("| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+          "dominant | MODEL_FLOPS | HLO_FLOPS | useful |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["status"] != "ok":
+            continue
+        rl = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {rl['compute_s']*1e3:.1f} | "
+              f"{rl['memory_s']*1e3:.1f} | {rl['collective_s']*1e3:.1f} | "
+              f"**{rl['dominant']}** | {r['model_flops']:.2e} | "
+              f"{rl['flops']:.2e} | {r['useful_ratio']:.3f} |")
+
+
+def perf_table():
+    recs = _load(ROOT / "perf")
+    print("| variant | compute (ms) | memory (ms) | collective (ms) | dominant | useful |")
+    print("|---|---|---|---|---|---|")
+    for r in recs:
+        if r.get("status") == "error":
+            print(f"| {r['variant']} | ERROR | | | | |")
+            continue
+        rl = r["roofline"]
+        print(f"| {r['variant']} | {rl['compute_s']*1e3:.1f} | "
+              f"{rl['memory_s']*1e3:.1f} | {rl['collective_s']*1e3:.1f} | "
+              f"{rl['dominant']} | {r['useful_ratio']:.3f} |")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("which", choices=["dryrun", "roofline", "perf"])
+    ap.add_argument("--dir", default=None)
+    a = ap.parse_args()
+    if a.which == "dryrun":
+        dryrun_table(a.dir or "dryrun")
+    elif a.which == "roofline":
+        roofline_table(a.dir or "roofline")
+    else:
+        perf_table()

@@ -1,0 +1,57 @@
+"""Benchmark harness entry point: ``python -m benchmarks.run [--only fig7]``.
+
+One function per paper table/figure (see paper_figures.py); prints
+``name,value,derived`` CSV and writes results/benchmarks.csv.  Paper-claim
+assertions fire inside the figure functions — a passing run IS the
+§Paper-validation evidence.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="run a single figure, e.g. fig7")
+    args = ap.parse_args()
+
+    from .paper_figures import ALL_FIGURES
+
+    rows = []
+    failures = []
+    for name, fn in ALL_FIGURES:
+        if args.only and args.only != name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            out = fn()
+            rows.extend(out)
+            print(f"# {name}: {len(out)} rows ({time.perf_counter()-t0:.1f}s)",
+                  file=sys.stderr)
+        except AssertionError as e:
+            failures.append((name, repr(e)))
+            print(f"# {name}: CLAIM FAILED: {e}", file=sys.stderr)
+
+    print("name,value,derived")
+    for name, value, derived in rows:
+        print(f"{name},{value},{derived}")
+
+    out_path = pathlib.Path(__file__).resolve().parent.parent / "results"
+    out_path.mkdir(exist_ok=True)
+    with open(out_path / "benchmarks.csv", "w") as f:
+        f.write("name,value,derived\n")
+        for name, value, derived in rows:
+            f.write(f"{name},{value},{derived}\n")
+
+    if failures:
+        print(f"\n# {len(failures)} paper-claim failures", file=sys.stderr)
+        sys.exit(1)
+    print(f"# all paper-claim assertions passed ({len(rows)} rows)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

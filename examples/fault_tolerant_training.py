@@ -1,0 +1,38 @@
+"""Fault-tolerant training demo: checkpoints, an injected node failure, and
+bit-exact resume (assignment large-scale-runnability features).
+
+  PYTHONPATH=src python examples/fault_tolerant_training.py
+"""
+
+import tempfile
+
+from repro.ckpt.checkpoint import CheckpointConfig
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig
+from repro.runtime.fault import FailureInjector
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    cfg = get_config("olmoe-1b-7b").reduced()  # tiny MoE, same code paths
+    steps = 24
+    with tempfile.TemporaryDirectory() as d:
+        trainer = Trainer(
+            model_cfg=cfg,
+            data_cfg=DataConfig(global_batch=4, seq_len=32),
+            opt_cfg=OptimizerConfig(lr=1e-3, total_steps=steps, warmup_steps=2),
+            trainer_cfg=TrainerConfig(total_steps=steps, ckpt_every=6, log_every=6),
+            ckpt_cfg=CheckpointConfig(d, keep=2, async_write=True),
+            failure_injector=FailureInjector(fail_at_steps=(10, 17)),
+        )
+        out = trainer.run()
+        print(f"\nsurvived 2 injected failures; final loss "
+              f"{out['final_metrics']['loss']:.4f}")
+        print(f"PCCL planned '{out['grad_allreduce_algorithm']}' for the "
+              f"gradient all-reduce")
+        print(f"straggler report: {out['stragglers'] or 'none flagged'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""End-to-end driver: data-parallel training where the gradient all-reduce is
+executed by PCCL's schedule-driven collectives (ppermute rounds) instead of
+XLA's built-in psum — the paper's library, actually moving the gradients.
+
+Runs a ~100 M-parameter dense transformer for a few hundred steps on 8 host
+devices (sets the device count itself; run as a standalone script):
+
+  PYTHONPATH=src python examples/pccl_dp_training.py --steps 300
+
+The same PcclComm object reports which algorithm the planner chose for the
+gradient buffer size (paper §2.2 size-aware selection).
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.comm import PcclComm
+from repro.configs import get_config
+from repro.core import cost_model as cm
+from repro.data.pipeline import DataConfig, SyntheticLMData
+from repro.models import build_model, unbox
+from repro.models.module import param_count
+from repro.train.optimizer import OptimizerConfig, adamw_update, init_opt_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    args = ap.parse_args()
+
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    # ~100M params: d=512, 8L, vocab 32k → ≈ 60M; bump ff for ~100M
+    cfg = dataclasses.replace(
+        get_config("chatglm3-6b").reduced(),
+        n_layers=args.layers, d_model=args.d_model, n_heads=8, n_kv_heads=2,
+        head_dim=64, d_ff=4 * args.d_model, vocab=32000, dtype="float32",
+    )
+    model = build_model(cfg)
+    params = unbox(model.init(jax.random.PRNGKey(0)))
+    n_params = param_count(params)
+    print(f"model: {n_params/1e6:.1f} M params on {n_dev} devices (pure DP)")
+
+    grad_bytes = 4.0 * n_params
+    comm = PcclComm(axis_name="data", n=n_dev, hw=cm.TPU_V5E_PHOTONIC)
+    print(f"PCCL chose '{comm.chosen_algorithm('all_reduce', grad_bytes)}' "
+          f"for the {grad_bytes/1e6:.0f} MB gradient all-reduce")
+
+    opt_cfg = OptimizerConfig(lr=1e-3, total_steps=args.steps, warmup_steps=10)
+    opt_state = init_opt_state(params)
+    data = SyntheticLMData(cfg, DataConfig(global_batch=args.batch, seq_len=args.seq))
+
+    def per_shard_step(params, opt_state, batch):
+        # per-device loss on the local batch shard; grads averaged via the
+        # schedule-driven PCCL all-reduce (ppermute rounds)
+        def loss_fn(p):
+            loss, _ = model.loss(p, batch)
+            return loss
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        grads = jax.tree.map(lambda g: comm.all_reduce(g) / n_dev, grads)
+        loss = jax.lax.psum(loss, "data") / n_dev
+        new_params, new_opt, _ = adamw_update(opt_cfg, grads, params, opt_state)
+        return new_params, new_opt, loss
+
+    step_fn = jax.jit(
+        jax.shard_map(
+            per_shard_step,
+            mesh=mesh,
+            in_specs=(P(), P(), {"tokens": P("data", None)}),
+            out_specs=(P(), P(), P()),
+            check_vma=False,
+        ),
+        donate_argnums=(0, 1),
+    )
+
+    t0 = time.perf_counter()
+    for step in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.global_batch(step).items()}
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        if step % 20 == 0 or step == args.steps - 1:
+            print(f"step {step:4d}  loss {float(loss):.4f}")
+    dt = time.perf_counter() - t0
+    toks = args.steps * args.batch * args.seq
+    print(f"trained {args.steps} steps in {dt:.1f}s ({toks/dt:.0f} tok/s) — "
+          f"gradients moved by PCCL ring/RHD ppermute rounds")
+
+
+if __name__ == "__main__":
+    main()

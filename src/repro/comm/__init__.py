@@ -1,0 +1,18 @@
+"""Executable PCCL collectives for JAX (shard_map + ppermute)."""
+
+from .pccl_collectives import (
+    ErrorFeedbackState,
+    PcclComm,
+    compressed_all_reduce,
+    compressed_all_reduce_ef,
+)
+from .primitives import (
+    ScheduleExecutionError,
+    all_gather,
+    all_reduce,
+    all_to_all,
+    execute_schedule,
+    reduce_scatter,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

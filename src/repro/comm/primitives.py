@@ -1,0 +1,159 @@
+"""Executable PCCL collectives: schedules → ``jax.lax.ppermute`` rounds.
+
+This is the TPU-native realization of PCCL's "one circuit set per round"
+(DESIGN.md §2): every :class:`~repro.core.schedules.Round` of a schedule is a
+permutation (each rank ≤1 Tx, ≤1 Rx — the paper's per-tile transmitter
+constraint), so it lowers to exactly one ``ppermute`` whose permutation *is*
+the circuit set PCCL would program on the photonic fabric.
+
+``execute_schedule`` is a generic interpreter: it reads the chunk metadata of
+the *same* Schedule objects the analytical planner prices, so the modeled and
+executed communication cannot drift apart.  Per round it
+
+1. gathers the chunks this rank must send (a static per-rank table indexed by
+   the runtime ``axis_index``),
+2. ppermutes them along the mesh axis, and
+3. scatter-adds (reduce rounds) or scatter-stores (gather rounds) the payload
+   into the local chunk buffer.
+
+Requirements on the schedule (all generators in ``core.schedules`` satisfy
+them; asserted at trace time):
+* every round is a permutation in which **every** rank sends, and
+* within a round all ranks send the same number of chunks.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.schedules import Round, Schedule
+
+
+class ScheduleExecutionError(ValueError):
+    pass
+
+
+def _round_tables(rnd: Round, n: int) -> Tuple[List[Tuple[int, int]], np.ndarray, np.ndarray, bool]:
+    """Static per-round tables: (perm, send_ids[n,k], recv_ids[n,k], reduce)."""
+    if not rnd.is_permutation():
+        raise ScheduleExecutionError("round is not a permutation (Tx/Rx > 1)")
+    senders = {t.src for t in rnd.transfers}
+    if len(senders) != n:
+        raise ScheduleExecutionError(
+            f"round must have all {n} ranks sending, got {len(senders)}"
+        )
+    ks = {len(t.chunks) for t in rnd.transfers}
+    if len(ks) != 1:
+        raise ScheduleExecutionError(f"non-uniform chunk counts per rank: {ks}")
+    k = ks.pop()
+    if k == 0:
+        raise ScheduleExecutionError("schedule has no chunk metadata (e.g. swing)")
+    reduces = {t.reduce for t in rnd.transfers}
+    if len(reduces) != 1:
+        raise ScheduleExecutionError("mixed reduce/store within one round")
+    perm = sorted((t.src, t.dst) for t in rnd.transfers)
+    send_ids = np.zeros((n, k), dtype=np.int32)
+    recv_ids = np.zeros((n, k), dtype=np.int32)
+    for t in rnd.transfers:
+        send_ids[t.src] = np.asarray(t.chunks, dtype=np.int32)
+        recv_ids[t.dst] = np.asarray(t.chunks, dtype=np.int32)
+    return perm, send_ids, recv_ids, reduces.pop()
+
+
+def execute_schedule(
+    chunks: jax.Array, schedule: Schedule, axis_name: str
+) -> jax.Array:
+    """Run a schedule's rounds on a local chunk buffer inside ``shard_map``.
+
+    Args:
+      chunks: (n_chunks, *chunk_shape) local buffer; chunk ids as in the
+        schedule (RS/AG: n_chunks == n; AllToAll: n_chunks == n with id
+        src*n+dst mapped to local block dst — see callers).
+      schedule: permutation-round schedule from ``repro.core.schedules``.
+      axis_name: mesh axis of size ``schedule.n``.
+
+    Returns the updated local chunk buffer.
+    """
+    n = schedule.n
+    me = lax.axis_index(axis_name)
+    for rnd in schedule.rounds:
+        perm, send_ids, recv_ids, reduce = _round_tables(rnd, n)
+        my_send = jnp.take(jnp.asarray(send_ids), me, axis=0)       # (k,)
+        my_recv = jnp.take(jnp.asarray(recv_ids), me, axis=0)       # (k,)
+        payload = jnp.take(chunks, my_send, axis=0)                 # (k, …)
+        got = lax.ppermute(payload, axis_name, perm)
+        if reduce:
+            chunks = chunks.at[my_recv].add(got)
+        else:
+            chunks = chunks.at[my_recv].set(got)
+    return chunks
+
+
+# --------------------------------------------------------------------------
+# Collective wrappers (call inside shard_map over `axis_name`).
+# --------------------------------------------------------------------------
+
+
+def _split_chunks(x: jax.Array, n: int) -> jax.Array:
+    if x.shape[0] % n:
+        raise ScheduleExecutionError(
+            f"leading dim {x.shape[0]} not divisible by {n} ranks"
+        )
+    return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+
+def reduce_scatter(x: jax.Array, schedule: Schedule, axis_name: str) -> jax.Array:
+    """x: full per-rank buffer (each rank holds its own addend).
+    Returns this rank's fully reduced chunk (1/n of the buffer)."""
+    n = schedule.n
+    chunks = _split_chunks(x, n)
+    chunks = execute_schedule(chunks, schedule, axis_name)
+    me = lax.axis_index(axis_name)
+    return jnp.take(chunks, me, axis=0)
+
+
+def all_gather(x: jax.Array, schedule: Schedule, axis_name: str) -> jax.Array:
+    """x: this rank's shard. Returns the concatenated full buffer."""
+    n = schedule.n
+    me = lax.axis_index(axis_name)
+    chunks = jnp.zeros((n,) + x.shape, x.dtype).at[me].set(x)
+    chunks = execute_schedule(chunks, schedule, axis_name)
+    return chunks.reshape((n * x.shape[0],) + x.shape[1:])
+
+
+def all_reduce(x: jax.Array, schedule: Schedule, axis_name: str) -> jax.Array:
+    """x: full per-rank buffer. Returns sum over ranks, replicated.
+    The schedule must be an all_reduce composition (RS rounds + AG rounds)."""
+    n = schedule.n
+    chunks = _split_chunks(x, n)
+    chunks = execute_schedule(chunks, schedule, axis_name)
+    return chunks.reshape(x.shape)
+
+
+def all_to_all(x: jax.Array, schedule: Schedule, axis_name: str) -> jax.Array:
+    """x: (n*blk, …) where block j is this rank's payload for rank j.
+    Returns (n*blk, …) where block j is the payload received from rank j.
+
+    Chunk ids in all_to_all schedules are ``src*n + dst``; locally each rank
+    stores the block for chunk id c at slot that depends on the phase: we keep
+    a full n×n-addressable buffer indexed by origin — memory-inefficient for
+    huge n but exact w.r.t. the schedule semantics (blocks in flight from
+    different origins can coexist at one rank, e.g. DEX)."""
+    n = schedule.n
+    blocks = _split_chunks(x, n)                       # (n, blk, …) dest-major
+    me = lax.axis_index(axis_name)
+    # state[o, t] = block from origin o to target t, held locally (zeros if
+    # not present). Initially we hold row `me`.
+    state = jnp.zeros((n, n) + blocks.shape[1:], blocks.dtype)
+    state = state.at[me].set(blocks)
+    flat = state.reshape((n * n,) + blocks.shape[1:])
+    flat = execute_schedule(flat, schedule, axis_name)
+    state = flat.reshape((n, n) + blocks.shape[1:])
+    # post-condition: we hold (o -> me) for every origin o
+    return jnp.take(state, me, axis=1).reshape(x.shape)

@@ -1,0 +1,253 @@
+"""Extended α–β cost model with congestion and dilation (paper §3, Alg. 2).
+
+``comm_cost_round`` is Algorithm 2 verbatim: route every transfer of a round
+on the candidate topology via BFS shortest paths, then
+
+* ``dilation``   = max path hops across transfers (latency multiplier on α),
+* ``congestion`` = max number of transfers sharing one *directed* edge
+  (bandwidth divisor, paper Fig. 6), and
+
+``cost = α · dilation + β · congestion · w``  (Alg. 2 line 15; Eq. 1 summed
+over rounds).  A transfer with no path returns the large penalty.
+
+Hardware presets carry the constants used in the paper's evaluation (§5) and
+the TPU-v5e adaptation target used by the launch/roofline stack.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .schedules import Round, Schedule
+from .topology import Topology, _BIG
+
+LARGE_PENALTY = 1.0e18  # seconds; Alg. 2 line 10
+
+
+@dataclass(frozen=True)
+class HardwareParams:
+    """α–β coefficients plus reconfiguration delay (all seconds / bytes)."""
+
+    name: str
+    alpha: float            # fixed per-transfer cost (s)
+    beta: float             # 1 / link bandwidth (s per byte)
+    reconfig_delay: float   # r: optical fabric reprogram time (s)
+    tx_per_gpu: int = 1     # optical transmitters per accelerator tile
+    rx_per_gpu: int = 1
+
+    def with_reconfig(self, r: float) -> "HardwareParams":
+        return replace(self, name=f"{self.name}_r{r:g}", reconfig_delay=r)
+
+
+# §5: α = 3 µs (H100 DGX p2p latency), β = 1/450 GB/s (NVLink), r = 5 µs
+# (Passage-class MZI switching).  Appendix A sweeps r ∈ {10, 25, 50, 500} µs;
+# Fig. 9 uses 1 ms (MEMS-class).
+H100_DGX = HardwareParams("h100_dgx", alpha=3e-6, beta=1.0 / (450e9), reconfig_delay=5e-6)
+H100_DGX_R10US = H100_DGX.with_reconfig(10e-6)
+H100_DGX_R25US = H100_DGX.with_reconfig(25e-6)
+H100_DGX_R50US = H100_DGX.with_reconfig(50e-6)
+H100_DGX_R500US = H100_DGX.with_reconfig(500e-6)
+H100_DGX_R1MS = H100_DGX.with_reconfig(1e-3)
+
+# TPU v5e adaptation target: 50 GB/s per ICI link, ~1 µs software α,
+# OCS-class reconfiguration (ms) and Passage-class (µs) variants.
+TPU_V5E_OCS = HardwareParams("tpu_v5e_ocs", alpha=1e-6, beta=1.0 / (50e9), reconfig_delay=2e-3)
+TPU_V5E_PHOTONIC = HardwareParams("tpu_v5e_photonic", alpha=1e-6, beta=1.0 / (50e9), reconfig_delay=5e-6)
+
+PRESETS: Dict[str, HardwareParams] = {
+    p.name: p
+    for p in [
+        H100_DGX,
+        H100_DGX_R10US,
+        H100_DGX_R25US,
+        H100_DGX_R50US,
+        H100_DGX_R500US,
+        H100_DGX_R1MS,
+        TPU_V5E_OCS,
+        TPU_V5E_PHOTONIC,
+    ]
+}
+
+
+@dataclass(frozen=True)
+class RoundCost:
+    """Per-round cost with the decomposition used by Figs. 8/9."""
+
+    total: float
+    dilation: int
+    congestion: int
+    alpha_base: float        # α (one hop, no dilation)
+    beta_base: float         # β·w (full bandwidth, no congestion)
+    dilation_extra: float    # (dilation-1)·α
+    congestion_extra: float  # (congestion-1)·β·w
+    feasible: bool
+
+
+_SP_CACHE: Dict = {}
+
+
+def _scipy_paths(topo: Topology):
+    """(dist, pred) all-pairs unweighted shortest paths — C-speed via scipy.
+    Cached per topology; the planner prices O(rounds × states) rounds so this
+    is the hot path (paper claims <1 s for the largest scale-up domains)."""
+    import numpy as np
+
+    key = (topo.n, topo.edges)
+    hit = _SP_CACHE.get(key)
+    if hit is not None:
+        return hit
+    if len(_SP_CACHE) > 64:  # bound memory across benchmark sweeps
+        _SP_CACHE.clear()
+    from scipy.sparse import csr_matrix
+    from scipy.sparse.csgraph import shortest_path as sp
+
+    n = topo.n
+    if topo.edges:
+        rows, cols = zip(*topo.edges)
+    else:
+        rows, cols = (), ()
+    g = csr_matrix(
+        (np.ones(len(rows)), (np.asarray(rows), np.asarray(cols))), shape=(n, n)
+    )
+    dist, pred = sp(g, method="D", directed=True, unweighted=True,
+                    return_predecessors=True)
+    _SP_CACHE[key] = (dist, pred)
+    return dist, pred
+
+
+def round_factors(topo: Topology, rnd: Round) -> Tuple[int, int, bool]:
+    """Algorithm 2 lines 1–14: (dilation, congestion, feasible).
+
+    Vectorized: all transfers' shortest paths are walked simultaneously via
+    the predecessor matrix (one numpy step per hop depth)."""
+    import numpy as np
+
+    pairs = [(t.src, t.dst) for t in rnd.transfers if t.src != t.dst]
+    if not pairs:
+        return (0, 0, True)
+
+    # Fast path 1: every transfer is a direct circuit (a round priced on its
+    # own ideal graph — the planner's most common query).
+    if all(p in topo.edges for p in pairs):
+        from collections import Counter
+
+        cong = max(Counter(pairs).values())
+        return (1, cong, True)
+
+    # Fast path 2: functional graphs (out-degree ≤ 1, i.e. other rounds'
+    # ideal graphs): the only path from u is the unique outgoing chain.
+    out: Dict[int, int] = {}
+    functional = True
+    for u, v in topo.edges:
+        if u in out:
+            functional = False
+            break
+        out[u] = v
+    if functional:
+        edge_usage: Dict[Tuple[int, int], int] = {}
+        dil = 0
+        for s, d in pairs:
+            cur, hops = s, 0
+            while cur != d:
+                nxt = out.get(cur)
+                if nxt is None or hops > topo.n:
+                    return (_BIG, _BIG, False)
+                edge_usage[(cur, nxt)] = edge_usage.get((cur, nxt), 0) + 1
+                cur = nxt
+                hops += 1
+            dil = max(dil, hops)
+        return (dil, max(edge_usage.values(), default=0), True)
+
+    srcs = np.asarray([p[0] for p in pairs])
+    dsts = np.asarray([p[1] for p in pairs])
+    dist, pred = _scipy_paths(topo)
+    d = dist[srcs, dsts]
+    if not np.all(np.isfinite(d)):
+        return (_BIG, _BIG, False)
+    dilation = int(d.max())
+
+    # walk every path back from dst to src in lockstep
+    cur = dsts.copy()
+    codes: List = []
+    active = cur != srcs
+    while active.any():
+        prev = pred[srcs[active], cur[active]]
+        codes.append(prev.astype(np.int64) * topo.n + cur[active])
+        nxt = cur.copy()
+        nxt[active] = prev
+        cur = nxt
+        active = cur != srcs
+    all_codes = np.concatenate(codes)
+    _, counts = np.unique(all_codes, return_counts=True)
+    return (dilation, int(counts.max()), True)
+
+
+def comm_cost_round(
+    topo: Topology, rnd: Round, w: Optional[float], hw: HardwareParams
+) -> RoundCost:
+    """Algorithm 2: α·dilation + β·congestion·w, or the large penalty."""
+    size = rnd.size if w is None else w
+    dilation, congestion, feasible = round_factors(topo, rnd)
+    if not feasible:
+        return RoundCost(LARGE_PENALTY, dilation, congestion, 0, 0, 0, 0, False)
+    if dilation == 0:  # empty round
+        return RoundCost(0.0, 0, 0, 0.0, 0.0, 0.0, 0.0, True)
+    alpha_base = hw.alpha
+    beta_base = hw.beta * size
+    dil_extra = (dilation - 1) * hw.alpha
+    con_extra = (congestion - 1) * hw.beta * size
+    total = hw.alpha * dilation + hw.beta * congestion * size
+    return RoundCost(total, dilation, congestion, alpha_base, beta_base, dil_extra, con_extra, True)
+
+
+@dataclass(frozen=True)
+class ScheduleCost:
+    """Fixed-topology cost of a whole schedule (baseline algorithms, Eq. 1)."""
+
+    total: float
+    rounds: Tuple[RoundCost, ...]
+
+    @property
+    def alpha_base(self) -> float:
+        return sum(r.alpha_base for r in self.rounds)
+
+    @property
+    def beta_base(self) -> float:
+        return sum(r.beta_base for r in self.rounds)
+
+    @property
+    def dilation_extra(self) -> float:
+        return sum(r.dilation_extra for r in self.rounds)
+
+    @property
+    def congestion_extra(self) -> float:
+        return sum(r.congestion_extra for r in self.rounds)
+
+    def breakdown(self) -> Dict[str, float]:
+        return {
+            "alpha": self.alpha_base,
+            "beta": self.beta_base,
+            "dilation": self.dilation_extra,
+            "congestion": self.congestion_extra,
+            "reconfig": 0.0,
+            "total": self.total,
+        }
+
+
+def schedule_cost_fixed(topo: Topology, schedule: Schedule, hw: HardwareParams) -> ScheduleCost:
+    """Eq. 1: Σ_i (α·d_i + β·c_i·w_i) on a topology that never changes."""
+    per = tuple(comm_cost_round(topo, rnd, None, hw) for rnd in schedule.rounds)
+    return ScheduleCost(sum(r.total for r in per), per)
+
+
+def ideal_cost(schedule: Schedule, hw: HardwareParams) -> float:
+    """Textbook α–β cost: every round on its perfectly matched topology."""
+    return sum(hw.alpha + hw.beta * r.size for r in schedule.rounds if r.transfers)
+
+
+def lower_bound_reduce_scatter(n: int, d: float, hw: HardwareParams) -> float:
+    """β lower bound (each rank must move (n-1)/n·d) + α lower bound (log2 n)."""
+    import math
+
+    return hw.alpha * math.ceil(math.log2(n)) + hw.beta * d * (n - 1) / n

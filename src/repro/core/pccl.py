@@ -1,0 +1,169 @@
+"""PCCL facade — the library's user-facing planning API.
+
+Given a collective request (primitive, #ranks, buffer size), an initial
+fabric state ``G0``, and hardware parameters, :func:`plan_collective`
+
+1. builds the candidate algorithm schedules for that primitive (§2.2: the
+   right algorithm depends on buffer size and hardware — there is no silver
+   bullet),
+2. runs the reconfiguration planner (Algorithm 1) on each schedule, and
+3. returns the cheapest :class:`PcclPlan`, alongside fixed-topology baseline
+   costs so callers (benchmarks, the training integration) can report the
+   paper's comparisons directly.
+
+The default input schedules follow the paper: RHD for reduce-scatter /
+all-reduce (§5 "PCCL Inputs"), DEX for all-to-all (Fig. 10a), with ``auto``
+additionally considering Ring (large-buffer β-optimal) and letting the
+planner arbitrate — this is the "selecting the right algorithm" knob PCCL
+exposes to distributed-ML programmers.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from . import schedules as S
+from .cost_model import HardwareParams, ScheduleCost, ideal_cost, schedule_cost_fixed
+from .planner import Plan, plan
+from .schedules import Schedule
+from .topology import Topology, ring, standard_topologies
+
+
+@dataclass(frozen=True)
+class PcclPlan:
+    request: "CollectiveRequest"
+    schedule: Schedule
+    plan: Plan
+    candidates: Tuple[Tuple[str, float], ...]  # (algorithm, planned cost)
+
+    @property
+    def cost(self) -> float:
+        return self.plan.total_cost
+
+    @property
+    def algorithm(self) -> str:
+        return self.schedule.algorithm
+
+    @property
+    def num_reconfigs(self) -> int:
+        return self.plan.num_reconfigs
+
+    def breakdown(self) -> Dict[str, float]:
+        return self.plan.breakdown()
+
+
+@dataclass(frozen=True)
+class CollectiveRequest:
+    collective: str          # reduce_scatter | all_gather | all_reduce | all_to_all
+    n: int
+    buffer_bytes: float
+    algorithm: str = "paper_default"  # or explicit name, or "auto"
+
+
+def _pow2(n: int) -> bool:
+    return n >= 2 and (n & (n - 1)) == 0
+
+
+def candidate_algorithms(collective: str, n: int, mode: str) -> List[str]:
+    if mode not in ("auto", "paper_default"):
+        return [mode]
+    if collective in ("reduce_scatter", "all_gather", "all_reduce"):
+        if mode == "paper_default":
+            return ["rhd"] if _pow2(n) else ["ring"]
+        # §2.2: PCCL lets the user pick ANY known algorithm as the input
+        # schedule — auto mode arbitrates over the full zoo via the planner.
+        algos = ["ring", "bucket2d", "bucket3d"]
+        if _pow2(n):
+            algos.append("rhd")
+        return algos
+    if collective == "all_to_all":
+        if mode == "paper_default":
+            return ["dex"] if _pow2(n) else ["direct"]
+        algos = ["direct"]
+        if _pow2(n):
+            algos.append("dex")
+        return algos
+    if collective == "p2p":
+        return ["p2p"]
+    raise ValueError(f"unknown collective {collective!r}")
+
+
+def default_standard_set(n: int) -> List[Topology]:
+    """S of Algorithm 1: standard connected graphs the planner may fall back
+    to when per-round ideal graphs would strand future rounds (§4.1)."""
+    std = standard_topologies(n)
+    return [std["ring"], std["torus2d"]]
+
+
+def plan_collective(
+    request: CollectiveRequest,
+    g0: Topology,
+    hw: HardwareParams,
+    standard: Optional[Sequence[Topology]] = None,
+    dims: Optional[Sequence[int]] = None,
+) -> PcclPlan:
+    if standard is None:
+        standard = default_standard_set(request.n)
+    best: Optional[PcclPlan] = None
+    cands: List[Tuple[str, float]] = []
+    for algo in candidate_algorithms(request.collective, request.n, request.algorithm):
+        algo_dims = dims
+        if algo_dims is None and algo.startswith("bucket"):
+            from .topology import square_dims2, square_dims3
+
+            algo_dims = (
+                square_dims2(request.n) if algo == "bucket2d" else square_dims3(request.n)
+            )
+            if min(algo_dims) == 1:
+                continue  # degenerate factorization
+        sched = S.get_schedule(
+            request.collective, algo, request.n, request.buffer_bytes, dims=algo_dims
+        )
+        p = plan(g0, standard, sched, hw)
+        cands.append((algo, p.total_cost))
+        if best is None or p.total_cost < best.cost:
+            best = PcclPlan(request, sched, p, ())
+    assert best is not None
+    return PcclPlan(request, best.schedule, best.plan, tuple(cands))
+
+
+def baseline_cost(
+    collective: str,
+    algorithm: str,
+    topo: Topology,
+    n: int,
+    buffer_bytes: float,
+    hw: HardwareParams,
+    dims: Optional[Sequence[int]] = None,
+) -> ScheduleCost:
+    """Fixed-topology cost of a named algorithm (the §5 baselines)."""
+    sched = S.get_schedule(collective, algorithm, n, buffer_bytes, dims=dims)
+    return schedule_cost_fixed(topo, sched, hw)
+
+
+def theoretical_cost(
+    collective: str, algorithm: str, n: int, buffer_bytes: float,
+    hw: HardwareParams, dims: Optional[Sequence[int]] = None,
+) -> float:
+    """Textbook α–β cost of the algorithm (every round contention-free)."""
+    sched = S.get_schedule(collective, algorithm, n, buffer_bytes, dims=dims)
+    return ideal_cost(sched, hw)
+
+
+# --------------------------------------------------------------------------
+# Size-aware algorithm choice used by the training integration: the paper's
+# §2.2 guidance (latency-optimal for small buffers, bandwidth-optimal for
+# large) falls out of planned costs rather than a hand-tuned threshold.
+# --------------------------------------------------------------------------
+
+def choose_algorithm(
+    collective: str, n: int, buffer_bytes: float, hw: HardwareParams,
+    g0: Optional[Topology] = None,
+) -> str:
+    g0 = g0 or ring(n)
+    p = plan_collective(
+        CollectiveRequest(collective, n, buffer_bytes, algorithm="auto"), g0, hw
+    )
+    return p.algorithm

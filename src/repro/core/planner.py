@@ -1,0 +1,358 @@
+"""PCCL's reconfiguration planner (paper Algorithm 1).
+
+The paper formulates "when to reconfigure" as an ILP over binary ``t_{i,j}``
+(round *i* uses topology *j*) with
+
+* one-topology-per-round (Eq. 4),
+* contiguous use of round-derived ideal topologies (Eq. 5: an ideal graph can
+  only be *entered* in the round that generates it, then carried forward), and
+* reconfiguration cost paid on a topology change between consecutive rounds
+  (Eq. 7), with per-round cost = CommCost (Algorithm 2) + ReconfCost.
+
+That constraint structure is a shortest path over a tiny layered graph, so the
+primary solver here is an **exact dynamic program** (`plan`):
+
+    f(i, s) = CommCost(topo(s), R_i, w_i)
+              + min over admissible predecessors p of [ f(i-1, p) + r·1[p≠s] ]
+
+where the state space is the edge-set-deduplicated union of {G0} ∪ S ∪
+{ideal(R_k)}.  Deduplication matters for fidelity: e.g. every round of a ring
+schedule has the *same* ideal graph, so staying on it must not re-pay ``r``
+(paper Eq. 7 charges only on change).
+
+Cross-checks (used in tests):
+* `plan_bruteforce` — exhaustive enumeration of all feasible assignments.
+* `plan_milp` — the paper's ILP, literally, via scipy HiGHS.
+
+All three agree; the DP runs in O(rounds · states²) and plans the largest
+scale-up domains in well under the paper's one-second budget (§4.1).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cost_model import HardwareParams, RoundCost, comm_cost_round
+from .schedules import Round, Schedule
+from .topology import Edge, Topology, from_transfers
+
+
+@dataclass(frozen=True)
+class TopoState:
+    """One deduplicated candidate topology for the DP/ILP."""
+
+    idx: int
+    topo: Topology
+    standard: bool                       # in {G0} ∪ S: enterable at any round
+    entry_rounds: FrozenSet[int]         # rounds whose ideal graph this is
+
+    def enterable_at(self, i: int) -> bool:
+        return self.standard or i in self.entry_rounds
+
+
+@dataclass(frozen=True)
+class PlanStep:
+    round_index: int
+    state_idx: int
+    topo_name: str
+    reconfigured: bool
+    cost: RoundCost
+    reconfig_cost: float
+
+    @property
+    def total(self) -> float:
+        return self.cost.total + self.reconfig_cost
+
+
+@dataclass(frozen=True)
+class Plan:
+    schedule: Schedule
+    hw: HardwareParams
+    steps: Tuple[PlanStep, ...]
+    total_cost: float
+
+    @property
+    def num_reconfigs(self) -> int:
+        return sum(1 for s in self.steps if s.reconfigured)
+
+    def breakdown(self) -> Dict[str, float]:
+        return {
+            "alpha": sum(s.cost.alpha_base for s in self.steps),
+            "beta": sum(s.cost.beta_base for s in self.steps),
+            "dilation": sum(s.cost.dilation_extra for s in self.steps),
+            "congestion": sum(s.cost.congestion_extra for s in self.steps),
+            "reconfig": sum(s.reconfig_cost for s in self.steps),
+            "total": self.total_cost,
+        }
+
+
+def build_states(
+    g0: Topology, standard: Sequence[Topology], schedule: Schedule
+) -> List[TopoState]:
+    """Dedup {G0} ∪ S ∪ ideal-graphs by directed edge set (input set G of
+    Alg. 1 with the bitmap identity of Eq. 7 applied to edge sets)."""
+    by_edges: Dict[FrozenSet[Edge], Dict] = {}
+
+    def add(topo: Topology, is_standard: bool, entry_round: Optional[int]) -> None:
+        rec = by_edges.setdefault(
+            topo.edges, {"topo": topo, "standard": False, "entries": set()}
+        )
+        rec["standard"] = rec["standard"] or is_standard
+        if entry_round is not None:
+            rec["entries"].add(entry_round)
+
+    add(g0, True, None)
+    for s in standard:
+        if s.n != schedule.n:
+            raise ValueError(f"standard topology {s.name} has n={s.n} != {schedule.n}")
+        add(s, True, None)
+    for i, rnd in enumerate(schedule.rounds):
+        add(rnd.ideal_topology(schedule.n), False, i)
+
+    states = []
+    for k, rec in enumerate(by_edges.values()):
+        states.append(
+            TopoState(k, rec["topo"], rec["standard"], frozenset(rec["entries"]))
+        )
+    return states
+
+
+def _round_costs(
+    states: Sequence[TopoState], schedule: Schedule, hw: HardwareParams
+) -> np.ndarray:
+    """cost[i, s] = CommCost(topo_s, R_i, w_i) (Algorithm 2), cached per state."""
+    n_rounds = len(schedule.rounds)
+    cost = np.empty((n_rounds, len(states)))
+    cost_objs: Dict[Tuple[int, int], RoundCost] = {}
+    for i, rnd in enumerate(schedule.rounds):
+        for s in states:
+            rc = comm_cost_round(s.topo, rnd, None, hw)
+            cost[i, s.idx] = rc.total
+            cost_objs[(i, s.idx)] = rc
+    _round_costs.last_objs = cost_objs  # type: ignore[attr-defined]
+    return cost
+
+
+def _g0_state(states: Sequence[TopoState], g0: Topology) -> int:
+    for s in states:
+        if s.topo.edges == g0.edges:
+            return s.idx
+    raise AssertionError("G0 missing from state set")
+
+
+def plan(
+    g0: Topology,
+    standard: Sequence[Topology],
+    schedule: Schedule,
+    hw: HardwareParams,
+) -> Plan:
+    """Exact DP solution of Algorithm 1."""
+    states = build_states(g0, standard, schedule)
+    n_rounds = len(schedule.rounds)
+    if n_rounds == 0:
+        return Plan(schedule, hw, (), 0.0)
+    cost = _round_costs(states, schedule, hw)
+    cost_objs = _round_costs.last_objs  # type: ignore[attr-defined]
+    g0_idx = _g0_state(states, g0)
+    r = hw.reconfig_delay
+
+    INF = float("inf")
+    ns = len(states)
+    f = np.full((n_rounds, ns), INF)
+    parent = np.full((n_rounds, ns), -1, dtype=np.int64)
+
+    for s in states:
+        if s.enterable_at(0) or s.idx == g0_idx:
+            f[0, s.idx] = cost[0, s.idx] + (0.0 if s.idx == g0_idx else r)
+            parent[0, s.idx] = g0_idx
+
+    for i in range(1, n_rounds):
+        # predecessor minima: best over all states, plus per-state carry value
+        prev = f[i - 1]
+        best_prev = prev.min()
+        best_prev_idx = int(prev.argmin())
+        for s in states:
+            carry = prev[s.idx]  # stay on the same topology: no reconfig
+            if s.enterable_at(i):
+                # entering/re-entering: pay r unless predecessor is itself
+                enter = best_prev + r
+                enter_idx = best_prev_idx
+                if enter_idx == s.idx:
+                    # best predecessor is already this state → carry is better
+                    # or equal; also consider second-best for a true "enter"
+                    masked = prev.copy()
+                    masked[s.idx] = INF
+                    if np.isfinite(masked.min()):
+                        enter = masked.min() + r
+                        enter_idx = int(masked.argmin())
+                    else:
+                        enter = INF
+                if carry <= enter:
+                    f[i, s.idx] = carry + cost[i, s.idx]
+                    parent[i, s.idx] = s.idx
+                else:
+                    f[i, s.idx] = enter + cost[i, s.idx]
+                    parent[i, s.idx] = enter_idx
+            else:
+                if np.isfinite(carry):
+                    f[i, s.idx] = carry + cost[i, s.idx]
+                    parent[i, s.idx] = s.idx
+
+    last = int(f[n_rounds - 1].argmin())
+    total = float(f[n_rounds - 1, last])
+
+    # backtrack
+    seq = [last]
+    for i in range(n_rounds - 1, 0, -1):
+        seq.append(int(parent[i, seq[-1]]))
+    seq.reverse()
+
+    steps: List[PlanStep] = []
+    prev_idx = g0_idx
+    for i, s_idx in enumerate(seq):
+        reconf = s_idx != prev_idx
+        steps.append(
+            PlanStep(
+                round_index=i,
+                state_idx=s_idx,
+                topo_name=states[s_idx].topo.name,
+                reconfigured=reconf,
+                cost=cost_objs[(i, s_idx)],
+                reconfig_cost=r if reconf else 0.0,
+            )
+        )
+        prev_idx = s_idx
+    return Plan(schedule, hw, tuple(steps), total)
+
+
+# ------------------------------------------------------------------ oracles
+
+
+def plan_bruteforce(
+    g0: Topology,
+    standard: Sequence[Topology],
+    schedule: Schedule,
+    hw: HardwareParams,
+) -> float:
+    """Exhaustive minimum over all feasible topology assignments (tests only)."""
+    states = build_states(g0, standard, schedule)
+    n_rounds = len(schedule.rounds)
+    cost = _round_costs(states, schedule, hw)
+    g0_idx = _g0_state(states, g0)
+    r = hw.reconfig_delay
+    best = [float("inf")]
+
+    def feasible(prev: int, s: TopoState, i: int) -> bool:
+        return s.enterable_at(i) or s.idx == prev
+
+    def dfs(i: int, prev: int, acc: float) -> None:
+        if acc >= best[0]:
+            return
+        if i == n_rounds:
+            best[0] = acc
+            return
+        for s in states:
+            if not feasible(prev, s, i):
+                continue
+            step = cost[i, s.idx] + (0.0 if s.idx == prev else r)
+            dfs(i + 1, s.idx, acc + step)
+
+    dfs(0, g0_idx, 0.0)
+    return best[0]
+
+
+def plan_milp(
+    g0: Topology,
+    standard: Sequence[Topology],
+    schedule: Schedule,
+    hw: HardwareParams,
+) -> float:
+    """The paper's ILP (Eqs. 2–7) via scipy HiGHS, for cross-validation.
+
+    Variables: t_{i,j} ∈ {0,1} for each round i and state j, plus
+    same_{i,j} ∈ {0,1} linearizing Bitmap(t_{i,j}) ∧ Bitmap(t_{i-1,j}).
+    Objective: Σ t_{i,j}·CommCost + r·Σ_i (1 - Σ_j same_{i,j}),
+    with same_{0,j} only allowed for j = G0's state (no initial reconfig).
+    Constraint 5 becomes t_{i,j} ≤ t_{i-1,j} for non-standard j outside its
+    entry rounds.
+    """
+    from scipy.optimize import LinearConstraint, milp
+    from scipy.sparse import lil_matrix
+
+    states = build_states(g0, standard, schedule)
+    n_rounds = len(schedule.rounds)
+    ns = len(states)
+    cost = _round_costs(states, schedule, hw)
+    g0_idx = _g0_state(states, g0)
+    r = hw.reconfig_delay
+
+    # variable layout: t vars [0, n_rounds*ns), same vars [n_rounds*ns, 2*...)
+    nt = n_rounds * ns
+    nv = 2 * nt
+
+    def t(i: int, j: int) -> int:
+        return i * ns + j
+
+    def same(i: int, j: int) -> int:
+        return nt + i * ns + j
+
+    c = np.zeros(nv)
+    for i in range(n_rounds):
+        for j in range(ns):
+            c[t(i, j)] = cost[i, j]
+            c[same(i, j)] = -r  # + r per round added as constant afterwards
+
+    rows: List[Tuple[Dict[int, float], float, float]] = []  # (coeffs, lb, ub)
+
+    # Eq. 4: exactly one topology per round
+    for i in range(n_rounds):
+        rows.append(({t(i, j): 1.0 for j in range(ns)}, 1.0, 1.0))
+
+    # same_{i,j} ≤ t_{i,j}; same_{i,j} ≤ t_{i-1,j} (i=0 compares against G0)
+    for i in range(n_rounds):
+        for j in range(ns):
+            rows.append(({same(i, j): 1.0, t(i, j): -1.0}, -np.inf, 0.0))
+            if i == 0:
+                if j != g0_idx:
+                    rows.append(({same(i, j): 1.0}, 0.0, 0.0))
+            else:
+                rows.append(({same(i, j): 1.0, t(i - 1, j): -1.0}, -np.inf, 0.0))
+
+    # at most one 'same' per round (it indicates "no change")
+    for i in range(n_rounds):
+        rows.append(({same(i, j): 1.0 for j in range(ns)}, 0.0, 1.0))
+
+    # Eq. 5 (carry-only for ideal states outside entry rounds)
+    for j, s in enumerate(states):
+        if s.standard:
+            continue
+        for i in range(n_rounds):
+            if i in s.entry_rounds:
+                continue
+            if i == 0:
+                rows.append(({t(0, j): 1.0}, 0.0, 0.0))
+            else:
+                rows.append(({t(i, j): 1.0, t(i - 1, j): -1.0}, -np.inf, 0.0))
+
+    A = lil_matrix((len(rows), nv))
+    lb = np.empty(len(rows))
+    ub = np.empty(len(rows))
+    for k, (coeffs, lo, hi) in enumerate(rows):
+        for var, coef in coeffs.items():
+            A[k, var] = coef
+        lb[k] = lo
+        ub[k] = hi
+
+    res = milp(
+        c=c,
+        constraints=LinearConstraint(A.tocsr(), lb, ub),
+        integrality=np.ones(nv),
+        bounds=(0, 1),
+    )
+    if not res.success:
+        raise RuntimeError(f"MILP failed: {res.message}")
+    return float(res.fun + r * n_rounds)

@@ -1,0 +1,505 @@
+"""Collective communication schedules (the algorithm zoo of §5).
+
+A :class:`Schedule` is the paper's ``R = {R_0 … R_{n-1}}``: an ordered list of
+:class:`Round`s, each a set of transfers ``(src, dst)`` plus the per-transfer
+payload size for that round (``w_i``).  Schedules are the single source of
+truth shared by
+
+* the analytical cost model / planner (which only needs ``(src, dst, w)``),
+* the chunk-level semantic simulator (``core/simulate.py``) that proves every
+  schedule satisfies its collective's post-condition, and
+* the executable JAX collectives (``comm/primitives.py``) that interpret every
+  round as one ``jax.lax.ppermute`` + local reduce/concat step.
+
+To serve all three, transfers carry chunk metadata: ``chunks`` is the tuple of
+logical chunk ids moved, and ``reduce`` says whether the receiver accumulates
+(reduce-scatter-like) or stores (all-gather / all-to-all-like).
+
+Implemented algorithms (paper §5 "Algorithms"):
+
+* ``ring_reduce_scatter`` / ``ring_all_gather`` / ``ring_all_reduce`` — NCCL's
+  bandwidth-optimal ring.
+* ``rhd_reduce_scatter`` / ``rhd_all_gather`` / ``rhd_all_reduce`` — recursive
+  halving/doubling (Thakur et al.), the paper's default PCCL input schedule.
+* ``bucket_reduce_scatter`` / ``…all_gather`` / ``…all_reduce`` — the
+  multi-dimensional torus "Bucket" algorithm (TPU-style, per-dimension rings).
+* ``swing_reduce_scatter`` — Swing (De Sensi et al., NSDI'24) distance pattern.
+* ``dex_all_to_all`` — hypercube direct-exchange AllToAll (Foster, ch. 11),
+  latency-optimal log2(N) steps; the paper's AllToAll input (Fig. 10a).
+* ``direct_all_to_all`` — N-1 round pairwise exchange (bandwidth-optimal).
+* ``p2p`` — single point-to-point transfer (§6 PEER-TO-PEER nodes).
+
+Chunk-id conventions
+--------------------
+Reduce-scatter / all-gather over ``N`` ranks split the buffer into ``N`` equal
+chunks; chunk ``c`` "belongs" to rank ``c`` (RS post-condition: rank c holds
+the fully reduced chunk c; AG pre-condition: rank c contributes chunk c).
+All-to-all uses chunk id ``src * N + dst`` for the block rank ``src`` sends to
+rank ``dst``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .topology import Topology, from_transfers
+
+# --------------------------------------------------------------------------- data
+
+
+@dataclass(frozen=True)
+class Transfer:
+    src: int
+    dst: int
+    chunks: Tuple[int, ...] = ()
+    reduce: bool = False  # receiver accumulates (True) or stores (False)
+
+    def pair(self) -> Tuple[int, int]:
+        return (self.src, self.dst)
+
+
+@dataclass(frozen=True)
+class Round:
+    transfers: Tuple[Transfer, ...]
+    size: float  # bytes sent per transfer in this round (w_i)
+
+    def pairs(self) -> List[Tuple[int, int]]:
+        return [t.pair() for t in self.transfers]
+
+    def max_fanout(self) -> int:
+        out: Dict[int, int] = {}
+        inn: Dict[int, int] = {}
+        for t in self.transfers:
+            out[t.src] = out.get(t.src, 0) + 1
+            inn[t.dst] = inn.get(t.dst, 0) + 1
+        return max(max(out.values(), default=0), max(inn.values(), default=0))
+
+    def is_permutation(self) -> bool:
+        """True iff every rank sends <=1 and receives <=1 — one circuit set."""
+        return self.max_fanout() <= 1
+
+    def ideal_topology(self, n: int) -> Topology:
+        return from_transfers(n, [t.pair() for t in self.transfers], name="ideal")
+
+
+@dataclass(frozen=True)
+class Schedule:
+    collective: str  # reduce_scatter | all_gather | all_reduce | all_to_all | p2p
+    algorithm: str
+    n: int
+    buffer_bytes: float  # per-rank buffer size d
+    rounds: Tuple[Round, ...]
+
+    @property
+    def num_rounds(self) -> int:
+        return len(self.rounds)
+
+    def total_bytes_per_rank(self) -> float:
+        """Max bytes any single rank sends across the schedule (β proxy)."""
+        sent: Dict[int, float] = {}
+        for r in self.rounds:
+            for t in r.transfers:
+                sent[t.src] = sent.get(t.src, 0.0) + r.size
+        return max(sent.values(), default=0.0)
+
+    def round_sizes(self) -> List[float]:
+        return [r.size for r in self.rounds]
+
+
+# --------------------------------------------------------------------- helpers
+
+
+def _require_pow2(n: int, algo: str) -> int:
+    if n < 2 or n & (n - 1):
+        raise ValueError(f"{algo} requires power-of-two ranks, got {n}")
+    return n.bit_length() - 1
+
+
+def _chunk(d: float, n: int) -> float:
+    return d / n
+
+
+# ------------------------------------------------------------------------ ring
+
+
+def ring_reduce_scatter(n: int, d: float) -> Schedule:
+    """N-1 rounds; round t: rank i sends chunk (i - t) mod N to i+1, receiver
+    accumulates.  After N-1 rounds rank i holds fully reduced chunk (i+1)%n…
+    we shift so the post-condition is the canonical "rank c owns chunk c"."""
+    rounds = []
+    for t in range(n - 1):
+        transfers = tuple(
+            Transfer(i, (i + 1) % n, chunks=((i - t) % n,), reduce=True)
+            for i in range(n)
+        )
+        rounds.append(Round(transfers, _chunk(d, n)))
+    # canonicalize ownership: after the loop above, rank i holds chunk
+    # (i - (n - 1) + n) % n == (i + 1) % n; relabel by shifting chunk ids so
+    # rank i ends owning chunk i.
+    shifted = []
+    for rnd in rounds:
+        shifted.append(
+            Round(
+                tuple(
+                    Transfer(t.src, t.dst, chunks=tuple((c - 1) % n for c in t.chunks), reduce=True)
+                    for t in rnd.transfers
+                ),
+                rnd.size,
+            )
+        )
+    return Schedule("reduce_scatter", "ring", n, d, tuple(shifted))
+
+
+def ring_all_gather(n: int, d: float) -> Schedule:
+    """N-1 rounds; round t: rank i forwards chunk (i - t) mod N to i+1."""
+    rounds = []
+    for t in range(n - 1):
+        transfers = tuple(
+            Transfer(i, (i + 1) % n, chunks=((i - t) % n,), reduce=False)
+            for i in range(n)
+        )
+        rounds.append(Round(transfers, _chunk(d, n)))
+    return Schedule("all_gather", "ring", n, d, tuple(rounds))
+
+
+def ring_all_reduce(n: int, d: float) -> Schedule:
+    rs = ring_reduce_scatter(n, d)
+    ag = ring_all_gather(n, d)
+    return Schedule("all_reduce", "ring", n, d, rs.rounds + ag.rounds)
+
+
+# ------------------------------------------------------------------------- RHD
+
+
+def _block_of(rank: int, bit: int, n: int) -> Tuple[int, ...]:
+    """Chunk ids in rank's half w.r.t. the given bit position."""
+    return tuple(c for c in range(n) if ((c >> bit) & 1) == ((rank >> bit) & 1))
+
+
+def rhd_reduce_scatter(n: int, d: float) -> Schedule:
+    """Recursive halving: log2(N) rounds, round k pairs ranks differing in bit
+    (log2 N - 1 - k); each sends the half of the (still-needed) chunk range
+    that belongs to the partner's side.  Sizes d/2, d/4, …, d/N."""
+    k = _require_pow2(n, "rhd")
+    rounds = []
+    for step in range(k):
+        bit = k - 1 - step
+        transfers = []
+        half = 1 << bit
+        for i in range(n):
+            partner = i ^ half
+            # chunks still live for i form the aligned 2^(bit+1)-block around
+            # i; the half sent is the partner's side of that block.
+            block_start = (i >> (bit + 1)) << (bit + 1)
+            send_start = block_start + (half if (partner >> bit) & 1 else 0)
+            send = tuple(range(send_start, send_start + half))
+            transfers.append(Transfer(i, partner, chunks=send, reduce=True))
+        rounds.append(Round(tuple(transfers), d / (2 ** (step + 1))))
+    return Schedule("reduce_scatter", "rhd", n, d, tuple(rounds))
+
+
+def rhd_all_gather(n: int, d: float) -> Schedule:
+    """Recursive doubling: round k pairs ranks differing in bit k; each sends
+    everything it currently holds.  Sizes d/N, 2d/N, …, d/2 (paper Fig. 5)."""
+    k = _require_pow2(n, "rhd")
+    rounds = []
+    for step in range(k):
+        bit = step
+        size = 1 << bit
+        transfers = []
+        for i in range(n):
+            partner = i ^ size
+            # holds the aligned 2^bit block containing its own chunk
+            start = (i >> bit) << bit
+            held = tuple(range(start, start + size))
+            transfers.append(Transfer(i, partner, chunks=held, reduce=False))
+        rounds.append(Round(tuple(transfers), d * (2 ** step) / n))
+    return Schedule("all_gather", "rhd", n, d, tuple(rounds))
+
+
+def rhd_all_reduce(n: int, d: float) -> Schedule:
+    rs = rhd_reduce_scatter(n, d)
+    ag = rhd_all_gather(n, d)
+    return Schedule("all_reduce", "rhd", n, d, rs.rounds + ag.rounds)
+
+
+# ---------------------------------------------------------------------- bucket
+
+
+def _axis_ring_groups(dims: Sequence[int], axis: int) -> List[List[int]]:
+    """Node groups forming rings along `axis` of a row-major multidim layout."""
+    import itertools as it
+
+    strides = []
+    s = 1
+    for dsz in reversed(dims):
+        strides.append(s)
+        s *= dsz
+    strides.reverse()
+    groups = []
+    other_axes = [a for a in range(len(dims)) if a != axis]
+    for other in it.product(*[range(dims[a]) for a in other_axes]):
+        base = sum(c * strides[a] for c, a in zip(other, other_axes))
+        groups.append([base + j * strides[axis] for j in range(dims[axis])])
+    return groups
+
+
+def bucket_reduce_scatter(dims: Sequence[int], d: float) -> Schedule:
+    """Multi-dimensional bucket (TPU torus) reduce-scatter: per-dimension ring
+    reduce-scatters over successively smaller shards.  All transfers are
+    nearest-neighbour rings along one torus axis, so the schedule is
+    congestion/dilation-free on a matching torus."""
+    n = math.prod(dims)
+    rounds: List[Round] = []
+    shard = d  # bytes each rank still owns before this phase
+    # chunk bookkeeping: chunk ids are flat ranks; at each phase the chunks a
+    # rank is responsible for narrow to those sharing its coordinates on all
+    # completed axes.
+    import itertools as it
+
+    strides = []
+    s = 1
+    for dsz in reversed(dims):
+        strides.append(s)
+        s *= dsz
+    strides.reverse()
+
+    def coord(r: int) -> Tuple[int, ...]:
+        return tuple((r // strides[a]) % dims[a] for a in range(len(dims)))
+
+    for axis, dsz in enumerate(dims):
+        if dsz == 1:
+            continue
+        groups = _axis_ring_groups(dims, axis)
+        per_round = shard / dsz
+        for t in range(dsz - 1):
+            transfers = []
+            for grp in groups:
+                for idx, node in enumerate(grp):
+                    nxt = grp[(idx + 1) % dsz]
+                    # chunks whose axis-coordinate equals (idx - t - 1) mod dsz
+                    # travel this round (ring RS canonical rotation), and must
+                    # agree with `node` on all previous axes' coordinates.
+                    cc = coord(node)
+                    sel = []
+                    for c in range(n):
+                        ccc = coord(c)
+                        if any(ccc[a] != cc[a] for a in range(axis)):
+                            continue
+                        if ccc[axis] == (cc[axis] - t - 1) % dsz:
+                            sel.append(c)
+                    transfers.append(
+                        Transfer(node, nxt, chunks=tuple(sel), reduce=True)
+                    )
+            rounds.append(Round(tuple(transfers), per_round))
+        shard = shard / dsz
+    return Schedule("reduce_scatter", f"bucket{len(dims)}d", n, d, tuple(rounds))
+
+
+def bucket_all_gather(dims: Sequence[int], d: float) -> Schedule:
+    """Mirror of bucket RS: per-dimension ring all-gathers, last axis first."""
+    n = math.prod(dims)
+    rs = bucket_reduce_scatter(dims, d)
+    rounds: List[Round] = []
+    for rnd in reversed(rs.rounds):
+        rounds.append(
+            Round(
+                tuple(
+                    Transfer(t.dst, t.src, chunks=t.chunks, reduce=False)
+                    for t in rnd.transfers
+                ),
+                rnd.size,
+            )
+        )
+    return Schedule("all_gather", f"bucket{len(dims)}d", n, d, tuple(rounds))
+
+
+def bucket_all_reduce(dims: Sequence[int], d: float) -> Schedule:
+    rs = bucket_reduce_scatter(dims, d)
+    ag = bucket_all_gather(dims, d)
+    return Schedule("all_reduce", f"bucket{len(dims)}d", len(ag.rounds) and rs.n or rs.n, d, rs.rounds + ag.rounds)
+
+
+# ----------------------------------------------------------------------- swing
+
+
+def swing_distance(step: int) -> int:
+    """δ_s = (1 - (-2)^{s+1}) / 3 → 1, -1, 3, -5, 11, -21, …"""
+    return (1 - (-2) ** (step + 1)) // 3
+
+
+def swing_reduce_scatter(n: int, d: float) -> Schedule:
+    """Swing (NSDI'24): log2(N) rounds; rank r talks to
+    ρ(r, s) = r + (-1)^r · δ_s (mod N).  Halving sizes like RHD.  We model the
+    communication pattern (src, dst, w) — chunk routing follows Swing's block
+    permutation which the semantic simulator does not need to replay (the
+    planner and figures use only the pattern; see tests for the permutation
+    property)."""
+    k = _require_pow2(n, "swing")
+    rounds = []
+    for step in range(k):
+        delta = swing_distance(step)
+        transfers = []
+        for r in range(n):
+            peer = (r + delta) % n if r % 2 == 0 else (r - delta) % n
+            transfers.append(Transfer(r, peer, chunks=(), reduce=True))
+        rounds.append(Round(tuple(transfers), d / (2 ** (step + 1))))
+    return Schedule("reduce_scatter", "swing", n, d, tuple(rounds))
+
+
+def swing_all_reduce(n: int, d: float) -> Schedule:
+    rs = swing_reduce_scatter(n, d)
+    mirror = tuple(
+        Round(
+            tuple(Transfer(t.dst, t.src, chunks=(), reduce=False) for t in r.transfers),
+            r.size,
+        )
+        for r in reversed(rs.rounds)
+    )
+    return Schedule("all_reduce", "swing", n, d, rs.rounds + mirror)
+
+
+# ------------------------------------------------------------------- all-to-all
+
+
+def dex_all_to_all(n: int, d: float) -> Schedule:
+    """Hypercube direct-exchange: log2(N) rounds; round k partner = r ^ 2^k;
+    send every held block whose final destination differs in bit k.  Each
+    round moves d/2 bytes per rank (α-optimal, β pays (d/2)·log N)."""
+    k = _require_pow2(n, "dex")
+    # track where blocks live: blocks[(origin, dest)] = current holder
+    holder = {(o, t): o for o in range(n) for t in range(n)}
+    rounds = []
+    for step in range(k):
+        bit = step
+        transfers_by_pair: Dict[Tuple[int, int], List[int]] = {}
+        for (o, t), h in holder.items():
+            if ((t >> bit) & 1) != ((h >> bit) & 1):
+                p = h ^ (1 << bit)
+                transfers_by_pair.setdefault((h, p), []).append(o * n + t)
+        transfers = tuple(
+            Transfer(src, dst, chunks=tuple(sorted(chs)), reduce=False)
+            for (src, dst), chs in sorted(transfers_by_pair.items())
+        )
+        for tr in transfers:
+            for ch in tr.chunks:
+                holder[(ch // n, ch % n)] = tr.dst
+        rounds.append(Round(transfers, d / 2))
+    assert all(h == t for (o, t), h in holder.items())
+    return Schedule("all_to_all", "dex", n, d, tuple(rounds))
+
+
+def direct_all_to_all(n: int, d: float) -> Schedule:
+    """N-1 rounds; round t rank i sends its block for (i+t+1) mod n directly."""
+    rounds = []
+    for t in range(n - 1):
+        transfers = tuple(
+            Transfer(i, (i + t + 1) % n, chunks=(i * n + (i + t + 1) % n,), reduce=False)
+            for i in range(n)
+        )
+        rounds.append(Round(transfers, _chunk(d, n)))
+    return Schedule("all_to_all", "direct", n, d, tuple(rounds))
+
+
+def ring_all_to_all(n: int, d: float) -> Schedule:
+    """Ring-based AllToAll: blocks hop neighbour-to-neighbour; round t moves
+    every block that still needs to travel ≥1 more hop one step forward.
+    N-1 rounds, round t carries (n-1-t)/n · d bytes per rank."""
+    rounds = []
+    for t in range(n - 1):
+        remaining = n - 1 - t
+        chunks_by_pair: Dict[Tuple[int, int], List[int]] = {}
+        for o in range(n):
+            for dst in range(n):
+                hops = (dst - o) % n
+                if hops > t:  # still in flight; currently at (o + t) % n
+                    cur = (o + t) % n
+                    chunks_by_pair.setdefault((cur, (cur + 1) % n), []).append(o * n + dst)
+        transfers = tuple(
+            Transfer(s, r, chunks=tuple(sorted(c)), reduce=False)
+            for (s, r), c in sorted(chunks_by_pair.items())
+        )
+        rounds.append(Round(transfers, d * remaining / n))
+    return Schedule("all_to_all", "ring", n, d, tuple(rounds))
+
+
+# ------------------------------------------------------------------------- p2p
+
+
+def p2p(n: int, src: int, dst: int, d: float) -> Schedule:
+    return Schedule(
+        "p2p",
+        "p2p",
+        n,
+        d,
+        (Round((Transfer(src, dst, chunks=(0,), reduce=False),), d),),
+    )
+
+
+# ------------------------------------------------------- Tx/Rx-limit splitting
+
+
+def split_for_fanout(schedule: Schedule, tx_limit: int) -> Schedule:
+    """§4.2: if a round needs more simultaneous circuits per GPU than the tile
+    has transmitters, split it into sub-rounds until every sub-round fits."""
+    if tx_limit < 1:
+        raise ValueError("tx_limit must be >= 1")
+    new_rounds: List[Round] = []
+    for rnd in schedule.rounds:
+        if rnd.max_fanout() <= tx_limit:
+            new_rounds.append(rnd)
+            continue
+        # greedy colouring: repeatedly peel a sub-round respecting the limit
+        pending = list(rnd.transfers)
+        while pending:
+            out_cnt: Dict[int, int] = {}
+            in_cnt: Dict[int, int] = {}
+            take, rest = [], []
+            for t in pending:
+                if out_cnt.get(t.src, 0) < tx_limit and in_cnt.get(t.dst, 0) < tx_limit:
+                    take.append(t)
+                    out_cnt[t.src] = out_cnt.get(t.src, 0) + 1
+                    in_cnt[t.dst] = in_cnt.get(t.dst, 0) + 1
+                else:
+                    rest.append(t)
+            new_rounds.append(Round(tuple(take), rnd.size))
+            pending = rest
+    return replace(schedule, rounds=tuple(new_rounds))
+
+
+# ----------------------------------------------------------------- registries
+
+ScheduleFn = Callable[[int, float], Schedule]
+
+
+def get_schedule(collective: str, algorithm: str, n: int, d: float,
+                 dims: Optional[Sequence[int]] = None) -> Schedule:
+    """Uniform constructor used by the planner facade and benchmarks."""
+    key = (collective, algorithm)
+    if algorithm.startswith("bucket"):
+        if dims is None:
+            raise ValueError("bucket algorithms need torus dims")
+        fn = {
+            "reduce_scatter": bucket_reduce_scatter,
+            "all_gather": bucket_all_gather,
+            "all_reduce": bucket_all_reduce,
+        }[collective]
+        return fn(dims, d)
+    table: Dict[Tuple[str, str], ScheduleFn] = {
+        ("reduce_scatter", "ring"): ring_reduce_scatter,
+        ("reduce_scatter", "rhd"): rhd_reduce_scatter,
+        ("reduce_scatter", "swing"): swing_reduce_scatter,
+        ("all_gather", "ring"): ring_all_gather,
+        ("all_gather", "rhd"): rhd_all_gather,
+        ("all_reduce", "ring"): ring_all_reduce,
+        ("all_reduce", "rhd"): rhd_all_reduce,
+        ("all_reduce", "swing"): swing_all_reduce,
+        ("all_to_all", "dex"): dex_all_to_all,
+        ("all_to_all", "direct"): direct_all_to_all,
+        ("all_to_all", "ring"): ring_all_to_all,
+    }
+    if key not in table:
+        raise KeyError(f"no schedule for {key}")
+    return table[key](n, d)

@@ -1,0 +1,130 @@
+"""Pallas TPU flash-attention forward kernel (causal, GQA).
+
+Grid: (batch · q_heads, num_q_blocks); each program streams K/V blocks of its
+KV head through VMEM while maintaining the online-softmax running max ``m``,
+normalizer ``l`` and fp32 accumulator ``acc`` in scratch.  Block shapes are
+(block_q, head_dim) / (block_k, head_dim) — multiples of 128 on the MXU-
+aligned dims by default.
+
+Causal skipping: KV blocks strictly above the diagonal are not computed
+(``when`` guard on the block index), giving the ~2× causal FLOP saving.
+
+TPU adaptation notes (DESIGN.md §2): this is the standard HBM→VMEM streaming
+decomposition; no warp-level primitives are involved, the MXU consumes the
+(block_q × head_dim) @ (head_dim × block_k) tiles directly.
+
+Validated against ``ref.attention_reference`` in interpret mode (CPU) over
+shape/dtype sweeps — see tests/test_kernels_flash.py.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(
+    q_ref,      # (block_q, d)
+    k_ref,      # (T, d)      — full K for this kv head (streamed via slices)
+    v_ref,      # (T, d)
+    o_ref,      # (block_q, d)
+    *,
+    block_k: int,
+    causal: bool,
+    sm_scale: float,
+    q_offset_blocks: int,
+):
+    block_q, d = q_ref.shape
+    T = k_ref.shape[0]
+    qi = pl.program_id(1)
+
+    q = q_ref[...].astype(jnp.float32) * sm_scale
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+    q_pos = q_pos + q_offset_blocks * block_q * 0  # offset folded in caller
+
+    m = jnp.full((block_q, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((block_q, 1), jnp.float32)
+    acc = jnp.zeros((block_q, d), jnp.float32)
+
+    num_kb = pl.cdiv(T, block_k)
+    if causal:
+        # last KV block that intersects this q block's causal window
+        last_kb = jnp.minimum(num_kb, (qi + 1) * block_q // block_k + 1)
+    else:
+        last_kb = num_kb
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = k_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.dslice(kb * block_k, block_k), :].astype(jnp.float32)
+        s = q @ k.T  # (block_q, block_k)
+        if causal:
+            k_pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+            s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + p.sum(axis=-1, keepdims=True)
+        acc_new = alpha * acc + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, last_kb, body, (m, l, acc))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,   # (B, S, H, D)
+    k: jax.Array,   # (B, T, K, D)
+    v: jax.Array,   # (B, T, K, D)
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    assert S == T or not causal, "causal kernel assumes aligned q/kv windows"
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0, (S, T, block_q, block_k)
+
+    # (B,S,H,D) -> (B*H, S, D); the kv row for q-head program h is h // G,
+    # resolved in the BlockSpec index_map (no materialized repeat).
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * K, T, D)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * K, T, D)
+
+    grid = (B * H, S // block_q)
+    kernel = functools.partial(
+        _flash_fwd_kernel,
+        block_k=block_k,
+        causal=causal,
+        sm_scale=1.0 / math.sqrt(D),
+        q_offset_blocks=0,
+    )
+
+    def kv_index(h, i):
+        b, hh = h // H, h % H
+        return (b * K + hh // G, 0, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, D), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((None, T, D), kv_index),
+            pl.BlockSpec((None, T, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, D), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.reshape(B, H, S, D).transpose(0, 2, 1, 3)

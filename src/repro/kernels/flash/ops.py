@@ -1,0 +1,32 @@
+"""Jit'd entry point for flash attention: Pallas kernel or jnp oracle."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from .ref import attention_reference
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+    force_reference: bool = False,
+) -> jax.Array:
+    if force_reference:
+        return attention_reference(q, k, v, causal=causal)
+    from .kernel import flash_attention_pallas
+
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return flash_attention_pallas(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=interpret,
+    )

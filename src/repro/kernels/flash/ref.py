@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for causal GQA flash attention.
+
+Numerically identical semantics to the Pallas kernel: causal softmax(QKᵀ/√d)V
+with grouped KV heads, fp32 accumulation.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_reference(
+    q: jax.Array,   # (B, S, H, D)
+    k: jax.Array,   # (B, T, K, D)
+    v: jax.Array,   # (B, T, K, D)
+    *,
+    causal: bool = True,
+) -> jax.Array:
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) / math.sqrt(D)
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None] + (T - S)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, H, D)

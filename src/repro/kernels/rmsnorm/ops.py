@@ -1,0 +1,26 @@
+"""Jit'd entry point for fused RMSNorm: Pallas kernel or jnp oracle."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from .ref import rmsnorm_reference
+
+
+def rmsnorm(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    eps: float = 1e-5,
+    use_pallas: bool = False,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if not use_pallas:
+        return rmsnorm_reference(x, w, eps=eps)
+    from .kernel import rmsnorm_pallas
+
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return rmsnorm_pallas(x, w, eps=eps, interpret=interpret)

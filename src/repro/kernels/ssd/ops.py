@@ -1,0 +1,40 @@
+"""Jit'd entry points for the SSD scan: Pallas kernel or jnp oracle.
+
+Models call :func:`ssd`; ``use_pallas=True`` routes to the Pallas TPU kernel
+(``kernel.py``, validated in interpret mode on CPU), otherwise the pure-jnp
+reference (`ref.py`) — identical math, XLA-fused.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from .ref import ssd_decode_step, ssd_reference
+
+
+def ssd(
+    X: jax.Array,
+    la: jax.Array,
+    Bm: jax.Array,
+    Cm: jax.Array,
+    *,
+    chunk: int = 64,
+    initial_state: Optional[jax.Array] = None,
+    use_pallas: bool = False,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    if use_pallas:
+        from .kernel import ssd_pallas
+
+        if interpret is None:
+            interpret = jax.default_backend() == "cpu"
+        return ssd_pallas(
+            X, la, Bm, Cm, chunk=chunk, initial_state=initial_state,
+            interpret=interpret,
+        )
+    return ssd_reference(X, la, Bm, Cm, chunk=chunk, initial_state=initial_state)
+
+
+__all__ = ["ssd", "ssd_decode_step"]

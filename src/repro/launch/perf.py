@@ -1,0 +1,126 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""§Perf hillclimbing driver (assignment PERFORMANCE HILLCLIMBING).
+
+Three cells, chosen from the 32-cell baseline table:
+  * olmoe-1b-7b × train_4k         — worst useful ratio (0.003), collective-
+                                     bound; also the cell most representative
+                                     of the paper (MoE AllToAll, Fig. 10a).
+  * mistral-large-123b × train_4k  — biggest model, memory-dominated.
+  * chatglm3-6b × decode_32k       — most collective-bound relative to
+                                     compute (585 ms collective vs 1 ms).
+
+Each variant re-runs the unrolled-depth roofline extraction with one change;
+records land in results/perf/<arch>__<shape>__<variant>.json and the
+hypothesis→change→before/after log is assembled in EXPERIMENTS.md §Perf.
+
+Usage: python -m repro.launch.perf [--only <variant-prefix>] [--force]
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+
+from repro.configs.base import MoEConfig
+from repro.launch.roofline import roofline_cell
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "perf"
+
+
+def _moe_dispatch(mode):
+    def t(cfg):
+        return dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, dispatch=mode))
+    return t
+
+
+def _remat(policy):
+    def t(cfg):
+        return dataclasses.replace(cfg, remat=policy)
+    return t
+
+
+def _attn(impl):
+    def t(cfg):
+        return dataclasses.replace(cfg, attention_impl=impl)
+    return t
+
+
+def _compose(*ts):
+    def t(cfg):
+        for f in ts:
+            cfg = f(cfg)
+        return cfg
+    return t
+
+
+# (name, arch, shape, cfg_transform, fsdp)
+# NOTE: opt variants are cumulative snapshots of the code at measurement
+# time; earlier JSONs are kept as the hypothesis log (EXPERIMENTS.md §Perf).
+VARIANTS = [
+    # --- cell 1: olmoe train_4k ------------------------------------------
+    ("olmoe_train/base_global_dispatch", "olmoe-1b-7b", "train_4k",
+     _moe_dispatch("global"), True),
+    ("olmoe_train/opt1_grouped_dispatch", "olmoe-1b-7b", "train_4k",
+     _moe_dispatch("grouped"), True),
+    ("olmoe_train/opt2_grouped_local_scatter_a2a", "olmoe-1b-7b", "train_4k",
+     _moe_dispatch("grouped"), True),
+    ("olmoe_train/opt3_plus_remat_dots", "olmoe-1b-7b", "train_4k",
+     _compose(_moe_dispatch("grouped"), _remat("dots")), True),
+    # --- cell 2: mistral-large train_4k ----------------------------------
+    ("mistral_train/base_remat_full", "mistral-large-123b", "train_4k",
+     None, True),
+    ("mistral_train/opt1_remat_dots", "mistral-large-123b", "train_4k",
+     _remat("dots"), True),
+    ("mistral_train/opt2_remat_none", "mistral-large-123b", "train_4k",
+     _remat("none"), True),
+    # --- cell 3: chatglm3 decode_32k --------------------------------------
+    ("chatglm_decode/base_fsdp_params", "chatglm3-6b", "decode_32k",
+     None, True),
+    ("chatglm_decode/opt1_serve_sharding_no_fsdp", "chatglm3-6b", "decode_32k",
+     None, False),
+    ("chatglm_decode/opt2_replicated_decode_q", "chatglm3-6b", "decode_32k",
+     None, False),
+    # --- bonus cell 4: chatglm3 prefill_32k (memory-bound: S² scores) ------
+    ("chatglm_prefill/base_full_attention", "chatglm3-6b", "prefill_32k",
+     _attn("full"), True),
+    ("chatglm_prefill/opt1_blocked_attention", "chatglm3-6b", "prefill_32k",
+     _attn("blocked"), True),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    for name, arch, shape, transform, fsdp in VARIANTS:
+        if args.only and not name.startswith(args.only):
+            continue
+        path = RESULTS / (name.replace("/", "__") + ".json")
+        if path.exists() and not args.force:
+            continue
+        try:
+            rec = roofline_cell(arch, shape, cfg_transform=transform, fsdp=fsdp,
+                                verbose=False)
+            rec["variant"] = name
+            rl = rec["roofline"]
+            print(f"[{name}] compute={rl['compute_s']*1e3:.1f}ms "
+                  f"memory={rl['memory_s']*1e3:.1f}ms "
+                  f"collective={rl['collective_s']*1e3:.1f}ms "
+                  f"dominant={rl['dominant']} useful={rec['useful_ratio']:.3f}")
+        except Exception as e:
+            import traceback
+            rec = {"variant": name, "status": "error", "error": repr(e),
+                   "traceback": traceback.format_exc()[-3000:]}
+            print(f"[{name}] FAILED: {e}")
+        path.write_text(json.dumps(rec, indent=2))
+
+
+if __name__ == "__main__":
+    main()

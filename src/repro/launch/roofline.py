@@ -1,0 +1,239 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
+
+"""§Roofline term extraction (assignment deliverable g).
+
+XLA's HLO cost analysis counts while-loop bodies ONCE, so scanned layer
+stacks massively undercount FLOPs/bytes/collective traffic.  This module
+therefore lowers each cell at two small UNROLLED depths (v₁, v₂), reads the
+per-partition cost analysis + post-SPMD collective bytes for each, and
+linearly extrapolates every metric to the full depth:
+
+    m(v) = a + b·v   (exact: layer cost is depth-invariant; the intercept
+                      captures embeddings/logits/loss/optimizer-of-embeddings)
+
+Depth variable per family: plain layers (dense/moe/vlm), xLSTM groups of
+``slstm_every``, Zamba2 groups of ``shared_attn_every``, whisper's joint
+(enc, dec) depth.  The sLSTM time-scan cannot be unrolled (S steps); its
+recurrent FLOPs are added analytically (noted in EXPERIMENTS.md).
+
+Outputs: results/roofline/<arch>__<shape>.json with the three terms
+(compute/memory/collective, seconds), the dominant term, MODEL_FLOPS, and
+the usefulness ratio.  Single-pod mesh per the assignment.
+"""
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.configs.base import EncDecConfig, ModelConfig, ShapeConfig
+from repro.launch import hlo_analysis as H
+from repro.launch.dryrun import _opt_state_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import batch_specs, decode_specs, param_specs
+from repro.models import build_model
+from repro.sharding import default_rules, use_partitioning
+from repro.train.optimizer import OptimizerConfig
+from repro.train.train_step import make_serve_step, make_train_step
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "roofline"
+
+
+def depth_points(cfg: ModelConfig) -> Tuple[Dict[int, ModelConfig], int]:
+    """{v: cfg_at_depth_v}, v_full — the linear depth variable per family."""
+    if cfg.xlstm:
+        u = cfg.xlstm.slstm_every
+        mk = lambda v: dataclasses.replace(cfg, n_layers=v * u, scan_layers=False)
+        return {1: mk(1), 2: mk(2)}, cfg.n_layers // u
+    if cfg.hybrid:
+        u = cfg.hybrid.shared_attn_every
+        mk = lambda v: dataclasses.replace(cfg, n_layers=v * u, scan_layers=False)
+        return {1: mk(1), 2: mk(2)}, cfg.n_layers // u
+    if cfg.enc_dec:
+        mk = lambda v: dataclasses.replace(
+            cfg,
+            n_layers=v,
+            scan_layers=False,
+            enc_dec=dataclasses.replace(cfg.enc_dec, n_enc_layers=v),
+        )
+        return {2: mk(2), 4: mk(4)}, cfg.n_layers
+    if cfg.moe and cfg.moe.first_dense:
+        mk = lambda v: dataclasses.replace(
+            cfg, n_layers=cfg.moe.first_dense + v, scan_layers=False
+        )
+        return {2: mk(2), 4: mk(4)}, cfg.n_layers - cfg.moe.first_dense
+    mk = lambda v: dataclasses.replace(cfg, n_layers=v, scan_layers=False)
+    return {2: mk(2), 4: mk(4)}, cfg.n_layers
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, multi_pod: bool, *, fsdp: bool = True):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    rules = default_rules(multi_pod=multi_pod, fsdp=fsdp)
+    with use_partitioning(mesh, rules):
+        model = build_model(cfg)
+        p_sds, _ = param_specs(cfg, mesh, rules)
+        if shape.kind == "train":
+            step = make_train_step(model, OptimizerConfig())
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+                p_sds, _opt_state_specs(p_sds), batch_specs(cfg, shape, mesh, rules)
+            )
+        elif shape.kind == "prefill":
+            lowered = jax.jit(model.prefill).lower(
+                p_sds, batch_specs(cfg, shape, mesh, rules)
+            )
+        else:
+            tok, state = decode_specs(cfg, shape, mesh, rules)
+            lowered = jax.jit(make_serve_step(model), donate_argnums=(1,)).lower(
+                p_sds, state, tok
+            )
+        compiled = lowered.compile()
+    return compiled, chips
+
+
+def _slstm_correction_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """sLSTM time-scan body is counted once by HLO analysis; add the
+    recurrent FLOPs analytically: per token ≈ 2·(4d² input proj + 4·d·dh
+    recurrence), ×3 for backward in train."""
+    if not cfg.xlstm or shape.kind == "decode":
+        return 0.0
+    d = cfg.d_model
+    dh = d // cfg.n_heads
+    n_slstm = cfg.n_layers // cfg.xlstm.slstm_every
+    tokens = shape.global_batch * shape.seq_len
+    per_tok = 2 * (4 * d * d + 4 * d * dh)
+    mult = 3.0 if shape.kind == "train" else 1.0
+    return mult * n_slstm * tokens * per_tok
+
+
+def _active_params(cfg: ModelConfig, n_params: int) -> Optional[int]:
+    if not cfg.moe:
+        return None
+    m = cfg.moe
+    n_moe_layers = cfg.n_layers - m.first_dense
+    per_expert = 3 * cfg.d_model * m.d_expert  # swiglu gate/up/down
+    inactive = (m.n_experts - m.top_k) * per_expert * n_moe_layers
+    return n_params - inactive
+
+
+def roofline_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    verbose: bool = True,
+    cfg_transform=None,
+    fsdp: bool = True,
+) -> Dict:
+    cfg = get_config(arch)
+    if cfg_transform is not None:
+        cfg = cfg_transform(cfg)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped", "reason": reason}
+
+    points, v_full = depth_points(cfg)
+    vs = sorted(points)
+    metrics = {}
+    t0 = time.time()
+    for v in vs:
+        compiled, chips = lower_cell(points[v], shape, multi_pod=False, fsdp=fsdp)
+        rl, stats = H.roofline_from_compiled(compiled, chips)
+        metrics[v] = {
+            "flops": rl.flops,
+            "hbm_bytes": rl.hbm_bytes,
+            "collective_bytes": rl.collective_bytes,
+            "bytes_by_op": stats.bytes_by_op,
+        }
+    v1, v2 = vs
+
+    def extrap(key):
+        m1, m2 = metrics[v1][key], metrics[v2][key]
+        b = (m2 - m1) / (v2 - v1)
+        a = m1 - b * v1
+        return a + b * v_full
+
+    flops = extrap("flops") + _slstm_correction_flops(cfg, shape)
+    hbm = extrap("hbm_bytes")
+    coll = extrap("collective_bytes")
+    by_op = {
+        k: (metrics[v2]["bytes_by_op"].get(k, 0) - metrics[v1]["bytes_by_op"].get(k, 0))
+        / (v2 - v1) * v_full
+        + metrics[v1]["bytes_by_op"].get(k, 0)
+        - (metrics[v2]["bytes_by_op"].get(k, 0) - metrics[v1]["bytes_by_op"].get(k, 0))
+        / (v2 - v1) * v1
+        for k in set(metrics[v1]["bytes_by_op"]) | set(metrics[v2]["bytes_by_op"])
+    }
+
+    rl = H.Roofline(flops=flops, hbm_bytes=hbm, collective_bytes=coll, chips=chips)
+
+    # MODEL_FLOPS from full param count
+    model = build_model(cfg)
+    boxed = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    from repro.models.module import unbox
+
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(unbox(boxed)))
+    n_active = _active_params(cfg, n_params)
+    mf = H.model_flops(cfg, shape, n_params, n_active)
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "status": "ok",
+        "chips": chips,
+        "n_params": n_params,
+        "n_active_params": n_active,
+        "points": {str(v): metrics[v] for v in vs},
+        "v_full": v_full,
+        "roofline": rl.as_dict(),
+        "collective_bytes_by_op": by_op,
+        "model_flops": mf,
+        "useful_ratio": mf / flops if flops else None,
+        "elapsed_s": round(time.time() - t0, 1),
+    }
+    if verbose:
+        print(
+            f"[{arch} × {shape_name}] compute={rl.compute_s*1e3:.2f}ms "
+            f"memory={rl.memory_s*1e3:.2f}ms collective={rl.collective_s*1e3:.2f}ms "
+            f"dominant={rl.dominant} useful={rec['useful_ratio'] and round(rec['useful_ratio'],3)}"
+        )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    archs = [args.arch] if args.arch else ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    for a in archs:
+        for s in shapes:
+            path = RESULTS / f"{a}__{s}.json"
+            if path.exists() and not args.force:
+                continue
+            try:
+                rec = roofline_cell(a, s)
+            except Exception as e:
+                rec = {"arch": a, "shape": s, "status": "error", "error": repr(e),
+                       "traceback": traceback.format_exc()[-4000:]}
+                print(f"[{a} × {s}] FAILED: {e}")
+            path.write_text(json.dumps(rec, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""ShapeDtypeStruct input builders for every (arch × shape) cell.
+
+``input_specs(cfg, shape)`` returns sharding-annotated ShapeDtypeStructs for
+the step function that cell lowers (train/prefill → loss/prefill inputs;
+decode → one-token batch + the decode-state tree).  No device memory is ever
+allocated (assignment MULTI-POD DRY-RUN step 2).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import build_model
+from repro.models.module import axes_of, unbox
+from repro.sharding import partition
+
+
+def _sds(shape, dtype, axes, mesh, rules):
+    with partition._installed(mesh, rules):
+        spec = partition.spec_for(axes, shape)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, rules) -> Dict[str, Any]:
+    """Training / prefill batch ShapeDtypeStructs."""
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.vlm:
+        n_img = cfg.vlm.n_img_tokens
+        out["tokens"] = _sds((B, S - n_img), jnp.int32, ("batch", "seq"), mesh, rules)
+        out["img_embeds"] = _sds(
+            (B, n_img, cfg.d_model), jnp.bfloat16, ("batch", None, "act_embed"), mesh, rules
+        )
+    else:
+        out["tokens"] = _sds((B, S), jnp.int32, ("batch", "seq"), mesh, rules)
+    if cfg.enc_dec:
+        out["enc_frames"] = _sds(
+            (B, cfg.enc_dec.enc_seq, cfg.d_model), jnp.bfloat16,
+            ("batch", None, "act_embed"), mesh, rules,
+        )
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, rules):
+    """(tokens, state) ShapeDtypeStructs for serve_step."""
+    B, S = shape.global_batch, shape.seq_len
+    model = build_model(cfg)
+    tokens = _sds((B, 1), jnp.int32, ("batch", None), mesh, rules)
+    state_shapes = jax.eval_shape(lambda: model.init_decode_state(B, S))
+    axes = model.decode_state_axes()
+
+    def annotate(sds, ax):
+        # per-layer state trees share one axes template: broadcast the axes
+        # tree over the state tree by matching leaf ranks
+        return _sds(sds.shape, sds.dtype, ax, mesh, rules)
+
+    # axes trees are templates whose structure matches the state tree
+    state = jax.tree.map(
+        annotate,
+        state_shapes,
+        axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+    return tokens, state
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, rules):
+    """(param SDS tree with shardings, sharding tree) — via eval_shape only."""
+    model = build_model(cfg)
+    boxed = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    values = unbox(boxed)
+    axes = axes_of(boxed)
+    shardings = partition.param_sharding(axes, mesh, rules, shapes_tree=values)
+    sds = jax.tree.map(
+        lambda v, s: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=s), values, shardings
+    )
+    return sds, shardings

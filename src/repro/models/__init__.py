@@ -1,0 +1,2 @@
+from .lm import Model, build_model
+from .module import Box, axes_of, param_count, unbox

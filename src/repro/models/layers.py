@@ -1,0 +1,144 @@
+"""Common layers: norms, embeddings, RoPE variants, MLPs.
+
+All matmuls run in the config's activation dtype (bf16 by default) with fp32
+parameters cast at use; norms and softmax accumulate in fp32.  Logical axis
+names on every parameter drive the sharding rules (DESIGN.md §3.3).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shard
+
+from .module import Box, KeyGen, normal_init, ones_init, zeros_init
+
+# ------------------------------------------------------------------- norms
+
+
+def init_norm(d: int, norm_type: str) -> Dict[str, Box]:
+    p = {"scale": ones_init((d,), ("embed",))}
+    if norm_type == "layernorm":
+        p["bias"] = zeros_init((d,), ("embed",))
+    return p
+
+
+def apply_norm(p, x: jax.Array, *, eps: float, norm_type: str) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + eps) * p["scale"]
+    elif norm_type == "layernorm":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        raise ValueError(norm_type)
+    return y.astype(dt)
+
+
+# -------------------------------------------------------------- embeddings
+
+
+def init_embedding(key, vocab: int, d: int) -> Box:
+    return normal_init(key, (vocab, d), ("vocab", "embed"), scale=0.02)
+
+
+def embed_lookup(table: jax.Array, ids: jax.Array, dtype) -> jax.Array:
+    out = jnp.take(table.astype(dtype), ids, axis=0)
+    return shard(out, ("batch", "seq", "act_embed"))
+
+
+def logits_projection(table_or_w: jax.Array, x: jax.Array) -> jax.Array:
+    """Vocab-parallel logits; fp32 output for a stable softmax-xent."""
+    w = table_or_w.astype(jnp.float32)
+    out = jnp.einsum("...d,vd->...v", x.astype(jnp.float32), w)
+    return shard(out, ("batch", "seq", "vocab"))
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    inv = jnp.exp(-math.log(10000.0) * 2 * dim / d)
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)  # (n, d)
+
+
+# -------------------------------------------------------------------- RoPE
+
+
+def rope_tables(positions: jax.Array, dim: int, base: float = 10000.0):
+    """cos/sin tables for the given positions. positions: (...,S)."""
+    inv = 1.0 / (base ** (jnp.arange(0, dim, 2).astype(jnp.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * inv  # (...,S,dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, style: str = "full",
+               base: float = 10000.0) -> jax.Array:
+    """x: (B,S,H,D). ``full`` rotates all D dims (llama half-split pairing);
+    ``chatglm_2d`` rotates only the first half of D with interleaved pairing
+    (GLM's 2D RoPE applied to head-dim/2, the rest is position-free)."""
+    if style == "none" or style == "sinusoidal":
+        return x
+    B, S, H, D = x.shape
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    if style == "full":
+        cos, sin = rope_tables(positions, D, base)           # (B,S,D/2)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+        x1, x2 = jnp.split(xf, 2, axis=-1)
+        out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+        return out.astype(dt)
+    if style == "chatglm_2d":
+        half = D // 2
+        cos, sin = rope_tables(positions, half, base)        # (B,S,half/2)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+        rot, passth = xf[..., :half], xf[..., half:]
+        x1 = rot[..., 0::2]
+        x2 = rot[..., 1::2]
+        r1 = x1 * cos - x2 * sin
+        r2 = x2 * cos + x1 * sin
+        rot_out = jnp.stack([r1, r2], axis=-1).reshape(rot.shape)
+        return jnp.concatenate([rot_out, passth], axis=-1).astype(dt)
+    raise ValueError(f"unknown rope style {style}")
+
+
+# --------------------------------------------------------------------- MLP
+
+
+def init_mlp(key, d: int, f: int, mlp_type: str) -> Dict[str, Box]:
+    kg = KeyGen(key)
+    if mlp_type == "swiglu":
+        return {
+            "wi_gate": normal_init(kg(), (d, f), ("embed", "mlp")),
+            "wi_up": normal_init(kg(), (d, f), ("embed", "mlp")),
+            "wo": normal_init(kg(), (f, d), ("mlp", "embed")),
+        }
+    return {
+        "wi": normal_init(kg(), (d, f), ("embed", "mlp")),
+        "wo": normal_init(kg(), (f, d), ("mlp", "embed")),
+    }
+
+
+def apply_mlp(p, x: jax.Array, *, mlp_type: str) -> jax.Array:
+    dt = x.dtype
+    if mlp_type == "swiglu":
+        g = x @ p["wi_gate"].astype(dt)
+        u = x @ p["wi_up"].astype(dt)
+        h = jax.nn.silu(g) * u
+    elif mlp_type == "gelu":
+        h = jax.nn.gelu(x @ p["wi"].astype(dt))
+    elif mlp_type == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["wi"].astype(dt)))
+    else:
+        raise ValueError(mlp_type)
+    h = shard(h, ("batch", "seq", "mlp"))
+    return h @ p["wo"].astype(dt)

@@ -1,0 +1,180 @@
+"""Mixture-of-Experts layer: token-choice top-k with capacity + EP sharding.
+
+Dispatch is scatter/gather based (no (T, E, C) one-hot blow-up): tokens are
+assigned slot ids ``expert·C + position_in_expert`` and scattered into an
+(E·C, D) buffer whose expert axis is sharded over the "model" mesh axis
+(expert parallelism).  Under pjit this materializes exactly the EP AllToAll
+pattern the paper studies (§5 AllToAll, Fig. 10a: MoE models alternate
+latency-sensitive AllToAll with bandwidth-hungry AllReduce).
+
+Shared experts (DeepSeek) are plain always-on MLPs added to the routed
+output.  The load-balancing auxiliary loss follows Switch/OLMoE:
+``E · Σ_e f_e · p_e`` (fraction routed × mean router prob).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import shard
+
+from .layers import apply_mlp, init_mlp
+from .module import Box, KeyGen, normal_init
+
+
+def init_moe(key, cfg: ModelConfig) -> Dict:
+    moe = cfg.moe
+    assert moe is not None
+    kg = KeyGen(key)
+    d, E, F = cfg.d_model, moe.n_experts, moe.d_expert
+    p: Dict = {
+        "router": normal_init(kg(), (d, E), ("embed", "experts"), scale=0.02),
+        "wi_gate": normal_init(kg(), (E, d, F), ("experts", "embed", "expert_mlp"), fan_in=d),
+        "wi_up": normal_init(kg(), (E, d, F), ("experts", "embed", "expert_mlp"), fan_in=d),
+        "wo": normal_init(kg(), (E, F, d), ("experts", "expert_mlp", "embed"), fan_in=F),
+    }
+    if moe.n_shared:
+        p["shared"] = [
+            init_mlp(kg(), d, moe.d_expert, cfg.mlp_type) for _ in range(moe.n_shared)
+        ]
+    return p
+
+
+def apply_moe(p, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) → (output (B,S,D), aux load-balance loss ()).
+
+    GROUPED dispatch (EP × DP): each batch row is a dispatch group with its
+    own capacity, so the (G, E, C, D) expert buffers shard over *both* the
+    data axis (G) and the model axis (E).  The original global-dispatch
+    variant (``cfg.moe.dispatch == "global"``) had no group dim, which
+    replicated the entire expert compute across the data axis — kept as the
+    §Perf hillclimb baseline (EXPERIMENTS.md)."""
+    moe = cfg.moe
+    if getattr(moe, "dispatch", "grouped") == "global":
+        return _apply_moe_global(p, cfg, x)
+    B, S, D = x.shape
+    E, K = moe.n_experts, moe.top_k
+    dt = x.dtype
+
+    # ---- routing (fp32 for a stable softmax) --------------------------------
+    logits = x.astype(jnp.float32) @ p["router"].astype(jnp.float32)     # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)                      # (B,S,K)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    # aux loss: fraction of tokens per expert × mean router prob per expert
+    frac = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1),
+    ) / K
+    aux = E * jnp.sum(frac * probs.mean((0, 1)))
+
+    # ---- per-group capacity + slot assignment --------------------------------
+    C = max(1, int(math.ceil(S * K / E * moe.capacity_factor)))
+    flat_experts = expert_ids.reshape(B, S * K)
+    onehot = jax.nn.one_hot(flat_experts, E, dtype=jnp.int32)            # (B,S·K,E)
+    pos = jnp.cumsum(onehot, axis=1) - 1
+    pos = jnp.take_along_axis(pos, flat_experts[..., None], axis=2)[..., 0]
+    keep = pos < C
+    slot = jnp.where(keep, flat_experts * C + pos, E * C)                # (B,S·K)
+
+    # ---- dispatch: per-group LOCAL scatter to (B, E·C + 1, D) ----------------
+    # The scatter destination must stay data-sharded only: scattering into a
+    # model-sharded buffer makes the SPMD partitioner materialize + all-reduce
+    # the whole buffer per layer (measured: 77 s → 353 s collective term —
+    # EXPERIMENTS.md §Perf olmoe iteration 1). The explicit constraint below
+    # keeps the scatter local; the ONE resharding to (data×model) afterwards
+    # lowers to the EP AllToAll the paper studies.
+    tok_ids = jnp.repeat(jnp.arange(S), K)                               # (S·K,)
+    copies = x[:, tok_ids, :].astype(dt)                                 # (B,S·K,D)
+    buf = shard(jnp.zeros((B, E * C + 1, D), dt), ("batch", None, "act_embed"))
+    # vmap'd scatter: a per-group update the partitioner keeps batch-local
+    # (an outer-product-indexed scatter is a general scatter → it replicates
+    # the 43 GB buffer across the mesh; measured in §Perf olmoe iteration 2)
+    buf = jax.vmap(lambda b, s, c: b.at[s].set(c, mode="drop"))(buf, slot, copies)
+    buf = shard(buf, ("batch", None, "act_embed"))
+    expert_in = buf[:, : E * C].reshape(B, E, C, D)
+    expert_in = shard(expert_in, ("batch", "experts", None, "act_embed"))  # ↔ a2a
+
+    # ---- expert FFN (SwiGLU): sharded over data (g) AND model (e) ------------
+    g = jnp.einsum("gecd,edf->gecf", expert_in, p["wi_gate"].astype(dt))
+    u = jnp.einsum("gecd,edf->gecf", expert_in, p["wi_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["wo"].astype(dt))
+    expert_out = shard(expert_out, ("batch", "experts", None, "act_embed"))
+
+    # ---- combine: reshard back (a2a), then per-group LOCAL gather -------------
+    out_flat = jnp.concatenate(
+        [expert_out.reshape(B, E * C, D), jnp.zeros((B, 1, D), dt)], axis=1
+    )
+    out_flat = shard(out_flat, ("batch", None, "act_embed"))             # ↔ a2a
+    per_copy = jnp.take_along_axis(out_flat, slot[..., None], axis=1)    # (B,S·K,D)
+    w = (gate_vals.reshape(B, S * K) * keep).astype(dt)[..., None]
+    y = (per_copy * w).reshape(B, S, K, D).sum(axis=2)
+
+    # ---- shared experts ------------------------------------------------------
+    if moe.n_shared:
+        for sp in p["shared"]:
+            y = y + apply_mlp(sp, x.astype(dt), mlp_type=cfg.mlp_type)
+
+    return y, aux
+
+
+def _apply_moe_global(p, cfg: ModelConfig, x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Legacy global dispatch: one capacity pool over all B·S tokens; the
+    (E·C, D) buffers have no data-sharded dim → expert compute replicates
+    across the data axis (kept as the hillclimb baseline)."""
+    moe = cfg.moe
+    B, S, D = x.shape
+    E, K = moe.n_experts, moe.top_k
+    dt = x.dtype
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, K)                      # (T,K)
+    gate_vals = gate_vals / (gate_vals.sum(-1, keepdims=True) + 1e-9)
+
+    frac = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=1), axis=0
+    ) / K
+    aux = E * jnp.sum(frac * probs.mean(0))
+
+    C = max(1, int(math.ceil(T * K / E * moe.capacity_factor)))
+    flat_experts = expert_ids.reshape(-1)                                # (T·K,)
+    onehot = jax.nn.one_hot(flat_experts, E, dtype=jnp.int32)            # (T·K,E)
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    pos = jnp.take_along_axis(pos, flat_experts[:, None], axis=1)[:, 0]
+    keep = pos < C
+    slot = jnp.where(keep, flat_experts * C + pos, E * C)
+
+    tok_ids = jnp.repeat(jnp.arange(T), K)
+    buf = jnp.zeros((E * C + 1, D), dt)
+    buf = buf.at[slot].set(xt[tok_ids].astype(dt), mode="drop")
+    expert_in = buf[: E * C].reshape(E, C, D)
+    expert_in = shard(expert_in, ("experts", None, "act_embed"))
+
+    g = jnp.einsum("ecd,edf->ecf", expert_in, p["wi_gate"].astype(dt))
+    u = jnp.einsum("ecd,edf->ecf", expert_in, p["wi_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt))
+    expert_out = shard(expert_out, ("experts", None, "act_embed"))
+
+    out_flat = jnp.concatenate(
+        [expert_out.reshape(E * C, D), jnp.zeros((1, D), dt)], axis=0
+    )
+    per_copy = out_flat[slot]                                            # (T·K, D)
+    w = (gate_vals.reshape(-1) * keep).astype(dt)[:, None]
+    y = (per_copy * w).reshape(T, K, D).sum(axis=1).reshape(B, S, D)
+
+    if moe.n_shared:
+        for sp in p["shared"]:
+            y = y + apply_mlp(sp, x.astype(dt), mlp_type=cfg.mlp_type)
+
+    return y, aux

@@ -1,0 +1,12 @@
+from .partition import (
+    Rules,
+    active_mesh,
+    active_rules,
+    default_rules,
+    param_sharding,
+    shard,
+    spec_for,
+    use_partitioning,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

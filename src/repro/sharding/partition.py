@@ -1,0 +1,207 @@
+"""Logical-axis → mesh-axis sharding rules (MaxText-style).
+
+Model code names tensor dimensions with *logical* axes ("batch", "embed",
+"heads", …).  A rule table maps logical names to mesh axes; the launcher
+installs the active mesh + rules in a context, and :func:`shard` constrains
+activations while :func:`param_spec` builds PartitionSpecs for parameter
+trees.  When no mesh is active (CPU smoke tests) everything is a no-op, so
+the same model code runs from a laptop to the 2×16×16 production mesh.
+
+Axis semantics (DESIGN.md §3.3):
+* batch            → DP over ("pod", "data")
+* embed / residual → FSDP over ("pod", "data") when ``fsdp=True`` (ZeRO-3)
+* heads / kv_heads / mlp / experts / q_lora / vocab → TP/EP over "model"
+* seq              → sequence parallelism over "model" when ``sp=True``
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class Rules:
+    """Mapping from logical axis names to mesh axes."""
+
+    table: Tuple[Tuple[str, MeshAxes], ...]
+
+    def mesh_axes(self, logical: Optional[str]) -> MeshAxes:
+        if logical is None:
+            return None
+        for name, axes in self.table:
+            if name == logical:
+                return axes
+        return None
+
+    def override(self, **kw: MeshAxes) -> "Rules":
+        tab = [(k, v) for k, v in self.table if k not in kw]
+        tab.extend(kw.items())
+        return Rules(tuple(tab))
+
+
+def default_rules(
+    *,
+    multi_pod: bool = False,
+    fsdp: bool = True,
+    sp: bool = False,
+) -> Rules:
+    dp: MeshAxes = ("pod", "data") if multi_pod else ("data",)
+    return Rules(
+        (
+            ("batch", dp),
+            ("embed", dp if fsdp else None),     # FSDP shards params' embed dim
+            ("act_embed", None),                  # activations keep embed local
+            ("seq", ("model",) if sp else None),  # sequence parallelism
+            ("heads", ("model",)),
+            ("kv_heads", ("model",)),
+            ("mlp", ("model",)),
+            ("experts", ("model",)),
+            ("expert_mlp", None),
+            ("q_lora", ("model",)),
+            ("kv_lora", None),
+            ("vocab", ("model",)),
+            ("conv", None),
+            ("state", None),
+            ("ssm_heads", ("model",)),
+            ("ssm_inner", ("model",)),
+            # decode-state axes: cache length shards over whatever the batch
+            # dim doesn't claim (fit-or-drop resolves conflicts per leaf)
+            ("kv_seq", ("data", "model")),
+        )
+    )
+
+
+@dataclass
+class _Ctx:
+    mesh: Optional[Mesh] = None
+    rules: Optional[Rules] = None
+
+
+_CTX = threading.local()
+
+
+def _ctx() -> _Ctx:
+    if not hasattr(_CTX, "v"):
+        _CTX.v = _Ctx()
+    return _CTX.v
+
+
+@contextlib.contextmanager
+def use_partitioning(mesh: Mesh, rules: Rules):
+    """Install mesh + rules; model sharding helpers become active."""
+    prev = _ctx().mesh, _ctx().rules
+    _ctx().mesh, _ctx().rules = mesh, rules
+    try:
+        with mesh:  # legacy Mesh context (pjit collective lowering)
+            yield
+    finally:
+        _ctx().mesh, _ctx().rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ctx().mesh
+
+
+def active_rules() -> Optional[Rules]:
+    return _ctx().rules
+
+
+def spec_for(
+    axes: Sequence[Optional[str]], shape: Optional[Sequence[int]] = None
+) -> PartitionSpec:
+    """Logical axes → PartitionSpec under the active rules.
+
+    With ``shape`` given, mesh axes that do not divide the dimension are
+    dropped ("fit-or-drop"): e.g. a kv_heads=8 dim under a 16-way model axis
+    replicates instead of erroring, and a batch=1 long-context decode keeps
+    its batch dim unsharded.  Mesh axes are never used twice in one spec.
+    """
+    rules = _ctx().rules
+    if rules is None:
+        return PartitionSpec()
+    mesh = _ctx().mesh
+    used: set = set()
+    parts: List[MeshAxes] = []
+    for i, a in enumerate(axes):
+        ma = rules.mesh_axes(a)
+        if ma is None:
+            parts.append(None)
+            continue
+        if isinstance(ma, str):
+            ma = (ma,)
+        ma = tuple(m for m in ma if mesh is None or m in mesh.axis_names)
+        ma = tuple(m for m in ma if m not in used)
+        if shape is not None and mesh is not None and ma:
+            # drop trailing axes until the dim divides the shard product
+            dim = shape[i]
+            while ma:
+                prod = int(np.prod([mesh.shape[m] for m in ma]))
+                if dim % prod == 0:
+                    break
+                ma = ma[:-1]
+        used.update(ma)
+        parts.append(ma if ma else None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return PartitionSpec(*parts)
+
+
+def shard(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Constrain an activation to the logical axes' mesh mapping (no-op when
+    no mesh is active)."""
+    mesh = _ctx().mesh
+    if mesh is None or _ctx().rules is None:
+        return x
+    if len(axes) > x.ndim:  # caller shapes vary (e.g. flattened tokens)
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec_for(axes)))
+
+
+def param_sharding(
+    axes_tree,
+    mesh: Optional[Mesh] = None,
+    rules: Optional[Rules] = None,
+    shapes_tree=None,
+):
+    """Map a tree of logical-axis tuples to NamedShardings.
+
+    ``shapes_tree`` (same structure, leaves with ``.shape``) activates
+    fit-or-drop divisibility handling per leaf.
+    """
+    mesh = mesh or _ctx().mesh
+    rules = rules or _ctx().rules
+    if mesh is None or rules is None:
+        raise RuntimeError("param_sharding needs an active mesh/rules")
+
+    is_axes = lambda x: x is None or isinstance(x, tuple)
+
+    def one(axes, sds=None):
+        if axes is None:
+            return NamedSharding(mesh, PartitionSpec())
+        with _installed(mesh, rules):
+            return NamedSharding(
+                mesh, spec_for(axes, None if sds is None else sds.shape)
+            )
+
+    if shapes_tree is None:
+        return jax.tree.map(one, axes_tree, is_leaf=is_axes)
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=is_axes)
+
+
+@contextlib.contextmanager
+def _installed(mesh, rules):
+    prev = _ctx().mesh, _ctx().rules
+    _ctx().mesh, _ctx().rules = mesh, rules
+    try:
+        yield
+    finally:
+        _ctx().mesh, _ctx().rules = prev

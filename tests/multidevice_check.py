@@ -1,0 +1,188 @@
+"""Multi-device equivalence checks for executable PCCL collectives.
+
+Run as a subprocess by test_comm_multidevice.py with 8 host devices (this
+must set XLA_FLAGS before importing jax, which pytest's process cannot do
+without polluting single-device tests — see the dry-run rule in the
+assignment).  Asserts every schedule-driven collective matches the XLA
+reference collective bit-for-bit in fp32.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.comm import primitives as prim
+from repro.comm.pccl_collectives import (
+    ErrorFeedbackState,
+    PcclComm,
+    compressed_all_reduce,
+    compressed_all_reduce_ef,
+)
+from repro.core import schedules as S
+
+N = 8
+
+
+def _mesh():
+    return jax.make_mesh((N,), ("x",))
+
+
+def _smap(f, mesh, in_specs, out_specs):
+    return jax.jit(jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False))
+
+
+def check_reduce_scatter():
+    mesh = _mesh()
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(N, N * 6)).astype(np.float32)  # rank-major addends
+
+    for algo, sched in [
+        ("ring", S.ring_reduce_scatter(N, X.nbytes / N)),
+        ("rhd", S.rhd_reduce_scatter(N, X.nbytes / N)),
+    ]:
+        def f(x):
+            return prim.reduce_scatter(x[0], sched, "x")[None]
+
+        out = _smap(f, mesh, P("x", None), P("x", None))(X)
+        want = X.sum(axis=0).reshape(N, 6)  # chunk c belongs to rank c
+        np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5, atol=1e-6)
+        print(f"reduce_scatter/{algo} OK")
+
+
+def check_all_gather():
+    mesh = _mesh()
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(N * 5,)).astype(np.float32)
+
+    for algo, sched in [
+        ("ring", S.ring_all_gather(N, X.nbytes)),
+        ("rhd", S.rhd_all_gather(N, X.nbytes)),
+    ]:
+        def f(x):
+            return prim.all_gather(x, sched, "x")
+
+        out = _smap(f, mesh, P("x"), P(None))(X)
+        np.testing.assert_allclose(np.asarray(out), X, rtol=0)
+        print(f"all_gather/{algo} OK")
+
+
+def check_all_reduce():
+    mesh = _mesh()
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(N, 40)).astype(np.float32)
+
+    for algo, sched in [
+        ("ring", S.ring_all_reduce(N, X.nbytes / N)),
+        ("rhd", S.rhd_all_reduce(N, X.nbytes / N)),
+        ("bucket2d", S.bucket_all_reduce((2, 4), X.nbytes / N)),
+    ]:
+        def f(x):
+            return prim.all_reduce(x[0], sched, "x")
+
+        out = _smap(f, mesh, P("x", None), P(None))(X)
+        np.testing.assert_allclose(np.asarray(out), X.sum(axis=0), rtol=1e-5, atol=1e-6)
+        print(f"all_reduce/{algo} OK")
+
+
+def check_all_to_all():
+    mesh = _mesh()
+    rng = np.random.default_rng(3)
+    B = 3
+    X = rng.normal(size=(N, N * B)).astype(np.float32)  # [rank, dest-major]
+
+    for algo, sched in [
+        ("dex", S.dex_all_to_all(N, X.nbytes / N)),
+        ("direct", S.direct_all_to_all(N, X.nbytes / N)),
+        ("ring", S.ring_all_to_all(N, X.nbytes / N)),
+    ]:
+        def f(x):
+            return prim.all_to_all(x[0], sched, "x")[None]
+
+        out = np.asarray(_smap(f, mesh, P("x", None), P("x", None))(X))
+        want = (
+            X.reshape(N, N, B).transpose(1, 0, 2).reshape(N, N * B)
+        )  # block (s -> t) lands at rank t, origin-major
+        np.testing.assert_allclose(out, want, rtol=0)
+        print(f"all_to_all/{algo} OK")
+
+
+def check_pccl_comm_api():
+    mesh = _mesh()
+    rng = np.random.default_rng(4)
+    X = rng.normal(size=(N, 64)).astype(np.float32)
+    comm = PcclComm(axis_name="x", n=N)
+    assert comm.chosen_algorithm("all_reduce", 64 * 4) in ("rhd", "ring", "bucket2d", "bucket3d")
+
+    def f(x):
+        return comm.all_reduce(x[0])
+
+    out = _smap(f, mesh, P("x", None), P(None))(X)
+    np.testing.assert_allclose(np.asarray(out), X.sum(axis=0), rtol=1e-5, atol=1e-6)
+
+    comm_xla = PcclComm(axis_name="x", n=N, algorithm="xla")
+
+    def g(x):
+        return comm_xla.all_reduce(x[0])
+
+    out2 = _smap(g, mesh, P("x", None), P(None))(X)
+    np.testing.assert_allclose(np.asarray(out2), X.sum(axis=0), rtol=1e-5, atol=1e-6)
+    print("PcclComm API OK")
+
+
+def check_compressed_all_reduce():
+    mesh = _mesh()
+    rng = np.random.default_rng(5)
+    X = rng.normal(size=(N, N * 16)).astype(np.float32)
+
+    def f(x):
+        return compressed_all_reduce(x[0], "x", N)
+
+    out = np.asarray(_smap(f, mesh, P("x", None), P(None))(X))
+    want = X.sum(axis=0)
+    rel = np.abs(out - want) / (np.abs(want) + 1e-6)
+    assert np.median(rel) < 0.05, f"median rel err {np.median(rel)}"
+
+    # error feedback: mean residual-compensated error over repeated reduces of
+    # the SAME gradient should shrink vs no-EF (bias correction property)
+    def g(x, r):
+        red, ef = compressed_all_reduce_ef(x[0], ErrorFeedbackState(r[0]), "x", N)
+        return red, ef.residual[None]
+
+    r = np.zeros_like(X)
+    accum_ef = np.zeros_like(want)
+    accum_raw = np.zeros_like(want)
+    steps = 8
+    for _ in range(steps):
+        red, r = _smap(g, mesh, (P("x", None), P("x", None)), (P(None), P("x", None)))(X, r)
+        accum_ef += np.asarray(red)
+        accum_raw += out
+    err_ef = np.abs(accum_ef / steps - want).mean()
+    err_raw = np.abs(accum_raw / steps - want).mean()
+    assert err_ef <= err_raw * 1.05, (err_ef, err_raw)
+    print("compressed_all_reduce OK")
+
+
+def main():
+    assert jax.device_count() == N, jax.devices()
+    check_reduce_scatter()
+    check_all_gather()
+    check_all_reduce()
+    check_all_to_all()
+    check_pccl_comm_api()
+    check_compressed_all_reduce()
+    print("ALL-MULTIDEVICE-OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+import math
+
+import pytest
+
+from repro.core import cost_model as C
+from repro.core import schedules as S
+from repro.core import topology as T
+
+HW = C.H100_DGX
+
+
+def test_presets():
+    assert C.PRESETS["h100_dgx"].alpha == pytest.approx(3e-6)
+    assert C.PRESETS["h100_dgx"].beta == pytest.approx(1 / 450e9)
+    assert C.PRESETS["h100_dgx"].reconfig_delay == pytest.approx(5e-6)
+    assert C.PRESETS["h100_dgx_r0.001"].reconfig_delay == pytest.approx(1e-3)
+    assert C.PRESETS["tpu_v5e_photonic"].beta == pytest.approx(1 / 50e9)
+
+
+def test_ring_rs_on_ring_is_congestion_free():
+    n, d = 8, 8 * 1024.0
+    topo = T.ring(n)
+    sched = S.ring_reduce_scatter(n, d)
+    cost = C.schedule_cost_fixed(topo, sched, HW)
+    assert cost.dilation_extra == 0.0
+    assert cost.congestion_extra == 0.0
+    # textbook: (n-1)·(α + β·d/n)
+    assert cost.total == pytest.approx((n - 1) * (HW.alpha + HW.beta * d / n))
+    assert cost.total == pytest.approx(C.ideal_cost(sched, HW))
+
+
+def test_rhd_on_ring_suffers_congestion_and_dilation():
+    """Paper Fig. 5: RHD AllGather distances 1,2,4 on a ring — later rounds
+    overlap on links (congestion) and span multiple hops (dilation)."""
+    n, d = 8, 8 * 1024.0
+    topo = T.ring(n)
+    ag = S.rhd_all_gather(n, d)
+    per_round = [C.comm_cost_round(topo, r, None, HW) for r in ag.rounds]
+    assert per_round[0].dilation == 1 and per_round[0].congestion == 1
+    assert per_round[1].dilation == 2 and per_round[1].congestion == 2
+    assert per_round[2].dilation == 4 and per_round[2].congestion == 4
+    fixed = C.schedule_cost_fixed(topo, ag, HW)
+    assert fixed.total > C.ideal_cost(ag, HW)
+
+
+def test_rhd_on_hypercube_is_ideal():
+    """RHD's partners are exactly hypercube neighbours → no congestion."""
+    n, d = 8, 1024.0
+    topo = T.hypercube(n)
+    rs = S.rhd_reduce_scatter(n, d)
+    cost = C.schedule_cost_fixed(topo, rs, HW)
+    assert cost.dilation_extra == 0 and cost.congestion_extra == 0
+    assert cost.total == pytest.approx(C.ideal_cost(rs, HW))
+
+
+def test_bucket_on_matching_torus_is_ideal():
+    dims = (4, 4)
+    d = 4096.0
+    topo = T.torus2d(*dims)
+    rs = S.bucket_reduce_scatter(dims, d)
+    cost = C.schedule_cost_fixed(topo, rs, HW)
+    assert cost.dilation_extra == 0 and cost.congestion_extra == 0
+
+
+def test_bucket_on_grid_pays_wraparound():
+    """Grid = torus minus wrap links: the ring's wrap hop dilates (§5)."""
+    dims = (4, 4)
+    d = 4096.0
+    topo = T.grid2d(*dims)
+    rs = S.bucket_reduce_scatter(dims, d)
+    cost = C.schedule_cost_fixed(topo, rs, HW)
+    assert cost.dilation_extra > 0
+    # the wrap transfer backtracks on reverse (full-duplex) links, so it adds
+    # dilation but no same-direction congestion in a permutation round
+    assert cost.total > C.ideal_cost(rs, HW)
+
+
+def test_disconnected_round_gets_large_penalty():
+    topo = T.from_transfers(4, [(0, 1), (1, 0)])
+    sched = S.direct_all_to_all(4, 64.0)
+    rc = C.comm_cost_round(topo, sched.rounds[0], None, HW)
+    assert not rc.feasible
+    assert rc.total >= C.LARGE_PENALTY
+
+
+def test_round_on_own_ideal_topology_is_alpha_beta():
+    n, d = 8, 512.0
+    sched = S.rhd_reduce_scatter(n, d)
+    for rnd in sched.rounds:
+        ideal = rnd.ideal_topology(n)
+        rc = C.comm_cost_round(ideal, rnd, None, HW)
+        assert rc.dilation == 1 and rc.congestion == 1
+        assert rc.total == pytest.approx(HW.alpha + HW.beta * rnd.size)
+
+
+def test_congestion_factor_matches_fig6_model():
+    """c overlapping transfers on one link divide bandwidth by c."""
+    # 4-node line; transfers 0->3, 1->3, 2->3 share edge (2,3)
+    from repro.core.schedules import Round, Transfer
+
+    topo = T.line(4)
+    rnd = Round((Transfer(0, 3), Transfer(1, 3), Transfer(2, 3)), 1e6)
+    rc = C.comm_cost_round(topo, rnd, None, HW)
+    assert rc.congestion == 3
+    assert rc.dilation == 3
+
+
+def test_lower_bound_reduce_scatter():
+    n, d = 8, 1e6
+    lb = C.lower_bound_reduce_scatter(n, d, HW)
+    # RHD on its ideal topologies achieves the bound exactly (power of 2)
+    sched = S.rhd_reduce_scatter(n, d)
+    assert C.ideal_cost(sched, HW) == pytest.approx(lb)
+
+
+def test_alltoall_dex_vs_direct_crossover():
+    """§2.2: the better algorithm depends on buffer size — DEX (α-optimal)
+    wins small buffers, direct exchange (β-optimal) wins large, measured on
+    ideal (reconfigured) topologies."""
+    n = 64
+    small, large = 8 * 1024.0, 1024 ** 3
+    dex_small = C.ideal_cost(S.dex_all_to_all(n, small), HW)
+    direct_small = C.ideal_cost(S.direct_all_to_all(n, small), HW)
+    assert dex_small < direct_small
+    dex_large = C.ideal_cost(S.dex_all_to_all(n, large), HW)
+    direct_large = C.ideal_cost(S.direct_all_to_all(n, large), HW)
+    assert direct_large < dex_large

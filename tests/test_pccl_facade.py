@@ -1,0 +1,64 @@
+import pytest
+
+from repro.core import cost_model as C
+from repro.core import schedules as S
+from repro.core import topology as T
+from repro.core.pccl import (
+    CollectiveRequest,
+    baseline_cost,
+    candidate_algorithms,
+    choose_algorithm,
+    plan_collective,
+    theoretical_cost,
+)
+
+HW = C.H100_DGX
+
+
+def test_paper_default_inputs():
+    assert candidate_algorithms("reduce_scatter", 128, "paper_default") == ["rhd"]
+    assert candidate_algorithms("all_to_all", 128, "paper_default") == ["dex"]
+    assert candidate_algorithms("reduce_scatter", 12, "paper_default") == ["ring"]
+
+
+def test_plan_collective_reduce_scatter_matches_planner():
+    req = CollectiveRequest("reduce_scatter", 32, 64e6)
+    p = plan_collective(req, T.ring(32), HW)
+    assert p.algorithm == "rhd"
+    assert p.cost <= baseline_cost("reduce_scatter", "rhd", T.ring(32), 32, 64e6, HW).total
+
+
+def test_auto_mode_picks_cheaper_algorithm_by_size():
+    """§2.2: latency-optimal for small buffers, bandwidth-optimal for large.
+    On ideal (reconfigurable) fabric, RHD dominates ring for RS at both ends
+    (same β, lower α) — but for AllToAll the DEX/direct crossover is real."""
+    n = 64
+    small = choose_algorithm("all_to_all", n, 4 * 1024, HW)
+    large = choose_algorithm("all_to_all", n, 1024 ** 3, HW)
+    assert small == "dex"
+    assert large == "direct"
+
+
+def test_pccl_only_system_optimal_on_all_topologies():
+    """Fig. 7 headline: PCCL is optimal on ALL starting topologies; every
+    fixed algorithm is beaten somewhere."""
+    n, buf = 32, 256e6
+    topos = T.standard_topologies(n)
+    for name, g0 in topos.items():
+        p = plan_collective(CollectiveRequest("reduce_scatter", n, buf), g0, HW)
+        for algo in ("ring", "rhd"):
+            fixed = baseline_cost("reduce_scatter", algo, g0, n, buf, HW).total
+            assert p.cost <= fixed + 1e-12, (name, algo)
+
+
+def test_theoretical_cost_helper():
+    n, buf = 16, 1e6
+    assert theoretical_cost("reduce_scatter", "rhd", n, buf, HW) == pytest.approx(
+        sum(HW.alpha + HW.beta * r.size for r in S.rhd_reduce_scatter(n, buf).rounds)
+    )
+
+
+def test_candidates_recorded():
+    req = CollectiveRequest("all_to_all", 16, 1e6, algorithm="auto")
+    p = plan_collective(req, T.ring(16), HW)
+    assert {a for a, _ in p.candidates} == {"dex", "direct"}

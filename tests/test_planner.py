@@ -1,0 +1,157 @@
+import math
+import time
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import cost_model as C
+from repro.core import schedules as S
+from repro.core import topology as T
+from repro.core.planner import build_states, plan, plan_bruteforce, plan_milp
+
+HW = C.H100_DGX
+
+
+def _std(n):
+    std = T.standard_topologies(n)
+    return [std["ring"], std["torus2d"]]
+
+
+# ------------------------------------------------------------------ exactness
+@pytest.mark.parametrize("n", [4, 8])
+@pytest.mark.parametrize("buf", [64 * 1024.0, 256e6])
+@pytest.mark.parametrize("topo_name", ["ring", "torus2d", "grid2d"])
+def test_dp_matches_bruteforce(n, buf, topo_name):
+    g0 = T.standard_topologies(n)[topo_name]
+    sched = S.rhd_reduce_scatter(n, buf)
+    p = plan(g0, _std(n), sched, HW)
+    bf = plan_bruteforce(g0, _std(n), sched, HW)
+    assert p.total_cost == pytest.approx(bf, rel=1e-12)
+
+
+@pytest.mark.parametrize("r", [5e-6, 1e-3])
+def test_dp_matches_milp(r):
+    n, buf = 8, 1e8
+    hw = HW.with_reconfig(r)
+    g0 = T.ring(n)
+    sched = S.rhd_reduce_scatter(n, buf)
+    p = plan(g0, _std(n), sched, hw)
+    m = plan_milp(g0, _std(n), sched, hw)
+    assert p.total_cost == pytest.approx(m, rel=1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([4, 8]),
+    buf=st.floats(min_value=1e3, max_value=1e9),
+    r=st.floats(min_value=1e-7, max_value=1e-2),
+    topo=st.sampled_from(["ring", "torus2d", "grid2d", "hypercube"]),
+    algo=st.sampled_from(["rhd", "ring", "dex"]),
+)
+def test_property_dp_optimal(n, buf, r, topo, algo):
+    hw = HW.with_reconfig(r)
+    g0 = T.standard_topologies(n)[topo]
+    if algo == "dex":
+        sched = S.dex_all_to_all(n, buf)
+    elif algo == "ring":
+        sched = S.ring_reduce_scatter(n, buf)
+    else:
+        sched = S.rhd_reduce_scatter(n, buf)
+    p = plan(g0, _std(n), sched, hw)
+    bf = plan_bruteforce(g0, _std(n), sched, hw)
+    assert p.total_cost == pytest.approx(bf, rel=1e-12)
+
+
+# -------------------------------------------------------- paper behaviours
+def test_reconfigures_every_round_at_5us_128gpus():
+    """Fig. 8: with r = 5 µs and a 256 MB buffer, PCCL reconfigures
+    log2(128) = 7 times for RHD ReduceScatter."""
+    n, buf = 128, 256e6
+    g0 = T.ring(n)
+    sched = S.rhd_reduce_scatter(n, buf)
+    p = plan(g0, _std(n), sched, HW)
+    assert p.num_reconfigs == 7
+    # and achieves the textbook cost + 7 reconfigs
+    assert p.total_cost == pytest.approx(C.ideal_cost(sched, HW) + 7 * HW.reconfig_delay)
+
+
+def test_fewer_reconfigs_at_1ms():
+    """Fig. 9: at r = 1 ms PCCL stops reconfiguring every round and eats
+    congestion/dilation instead."""
+    n, buf = 128, 1024 ** 3
+    g0 = T.ring(n)
+    sched = S.rhd_reduce_scatter(n, buf)
+    hw = C.H100_DGX_R1MS
+    p = plan(g0, _std(n), sched, hw)
+    assert p.num_reconfigs < 7
+    # never worse than the no-reconfig fixed cost or the always-reconfig cost
+    fixed = C.schedule_cost_fixed(g0, sched, hw).total
+    always = C.ideal_cost(sched, hw) + len(sched.rounds) * hw.reconfig_delay
+    assert p.total_cost <= fixed + 1e-15
+    assert p.total_cost <= always + 1e-15
+
+
+def test_plan_on_ideal_start_needs_no_reconfig():
+    """Ring RS on a ring fabric: every round's ideal graph == the directed
+    ring ⊂ G0... the planner should keep G0 and pay nothing extra."""
+    n, buf = 16, 1e8
+    g0 = T.ring(n)
+    sched = S.ring_reduce_scatter(n, buf)
+    p = plan(g0, _std(n), sched, HW)
+    assert p.num_reconfigs == 0
+    assert p.total_cost == pytest.approx(C.ideal_cost(sched, HW))
+
+
+def test_ring_schedule_ideal_graphs_dedupe():
+    """All ring RS rounds share one ideal graph — dedup means staying on it
+    costs a single reconfiguration, not one per round."""
+    n = 8
+    sched = S.ring_reduce_scatter(n, 1e6)
+    states = build_states(T.grid2d(2, 4), _std(n), sched)
+    ideal_states = [s for s in states if s.entry_rounds]
+    assert len(ideal_states) == 1
+    assert len(ideal_states[0].entry_rounds) == n - 1
+
+
+def test_planner_beats_or_matches_best_fixed_everywhere():
+    """Key takeaway #1: PCCL ≥ best algorithm on every starting topology."""
+    n, buf = 32, 64e6
+    for name, g0 in T.standard_topologies(n).items():
+        sched = S.rhd_reduce_scatter(n, buf)
+        p = plan(g0, _std(n), sched, HW)
+        fixed = C.schedule_cost_fixed(g0, sched, HW).total
+        assert p.total_cost <= fixed + 1e-15, name
+
+
+def test_planner_runtime_under_one_second_128():
+    """§4.1: 'PCCL's optimization can be solved in less than one second for
+    the largest scale-up domains.'"""
+    n, buf = 128, 256e6
+    g0 = T.torus3d(*T.square_dims3(n))
+    sched = S.rhd_all_reduce(n, buf)  # 14 rounds
+    std = _std(n)
+    t0 = time.perf_counter()
+    plan(g0, std, sched, HW)
+    assert time.perf_counter() - t0 < 1.0
+
+
+def test_plan_breakdown_sums_to_total():
+    n, buf = 16, 1e7
+    p = plan(T.grid2d(4, 4), _std(n), S.rhd_reduce_scatter(n, buf), HW)
+    b = p.breakdown()
+    assert b["total"] == pytest.approx(
+        b["alpha"] + b["beta"] + b["dilation"] + b["congestion"] + b["reconfig"]
+    )
+
+
+def test_high_reconfig_cost_falls_back_to_connected_graph():
+    """§4.1 'Managing disconnected graphs': with huge r the planner must not
+    pay per-round reconfigs; it should pick one (possibly standard) topology
+    and stay."""
+    n, buf = 16, 1e6
+    hw = HW.with_reconfig(10.0)  # absurd 10 s reconfig
+    g0 = T.ring(n)
+    p = plan(g0, _std(n), S.rhd_reduce_scatter(n, buf), hw)
+    assert p.num_reconfigs == 0
+    assert p.total_cost == pytest.approx(C.schedule_cost_fixed(g0, p.schedule, hw).total)

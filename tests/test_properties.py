@@ -1,0 +1,106 @@
+"""Hypothesis property tests on system-level invariants (deliverable c)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import cost_model as cm
+from repro.core import schedules as S
+from repro.core import topology as T
+from repro.core.pccl import CollectiveRequest, plan_collective
+from repro.core.planner import plan
+from repro.core.simulate import verify
+from repro.core.schedules import split_for_fanout
+
+HW = cm.H100_DGX
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([4, 8, 16]),
+    buf=st.floats(min_value=1e3, max_value=2e9),
+    r=st.floats(min_value=1e-7, max_value=1e-2),
+    topo=st.sampled_from(["ring", "torus2d", "grid2d", "grid3d"]),
+)
+def test_plan_bounded_by_extremes(n, buf, r, topo):
+    """Planner cost ∈ [ideal, min(fixed-cost, always-reconfig-cost)]: it can
+    never beat contention-free α–β and never lose to its own endpoints."""
+    hw = HW.with_reconfig(r)
+    g0 = T.standard_topologies(n)[topo]
+    sched = S.rhd_reduce_scatter(n, buf)
+    std = [T.ring(n)]
+    p = plan(g0, std, sched, hw)
+    ideal = cm.ideal_cost(sched, hw)
+    fixed = cm.schedule_cost_fixed(g0, sched, hw).total
+    always = ideal + len(sched.rounds) * r
+    assert p.total_cost >= ideal - 1e-15
+    assert p.total_cost <= min(fixed, always) + 1e-12
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([8, 16, 32]),
+    b1=st.floats(min_value=1e3, max_value=1e7),
+    mult=st.floats(min_value=1.5, max_value=100.0),
+)
+def test_plan_cost_monotone_in_buffer(n, b1, mult):
+    g0 = T.ring(n)
+    c1 = plan_collective(CollectiveRequest("reduce_scatter", n, b1), g0, HW).cost
+    c2 = plan_collective(CollectiveRequest("reduce_scatter", n, b1 * mult), g0, HW).cost
+    assert c2 >= c1 - 1e-15
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([4, 8]),
+    tx=st.integers(min_value=1, max_value=3),
+)
+def test_split_for_fanout_preserves_semantics(n, tx):
+    """Tx/Rx splitting (§4.2) must not change the collective's outcome."""
+    sched = S.dex_all_to_all(n, 64.0)
+    split = split_for_fanout(sched, tx)
+    verify(split)
+    for rnd in split.rounds:
+        assert rnd.max_fanout() <= tx
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([4, 8, 16]), buf=st.floats(min_value=1e3, max_value=1e9))
+def test_allreduce_equals_two_reduce_scatters(n, buf):
+    """Paper §5: AllReduce = RS + mirror AG with equal cost ⇒ exactly 2× RS
+    on ideal fabric."""
+    rs = cm.ideal_cost(S.rhd_reduce_scatter(n, buf), HW)
+    ar = cm.ideal_cost(S.rhd_all_reduce(n, buf), HW)
+    assert ar == pytest.approx(2 * rs, rel=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.sampled_from([4, 8, 16]),
+    buf=st.floats(min_value=1e3, max_value=1e9),
+)
+def test_congestion_dilation_never_negative(n, buf):
+    for topo in T.standard_topologies(n).values():
+        for rnd in S.rhd_reduce_scatter(n, buf).rounds:
+            rc = cm.comm_cost_round(topo, rnd, None, HW)
+            if rc.feasible:
+                assert rc.dilation >= 1 and rc.congestion >= 1
+                assert rc.total >= HW.alpha + HW.beta * rnd.size - 1e-18
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10))
+def test_fiber_routing_load_counts_consistent(seed):
+    from repro.core.fibers import FiberRouting, random_demands, route_fibers, server_grid
+
+    topo = server_grid(16)
+    demands = random_demands(topo, 24, seed=seed)
+    r = route_fibers(topo, demands)
+    load = {}
+    for p in r.routes:
+        for a, b in zip(p[:-1], p[1:]):
+            assert topo.has_edge(a, b)
+            load[(a, b)] = load.get((a, b), 0) + 1
+    assert max(load.values()) == r.z

@@ -1,0 +1,194 @@
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import schedules as S
+from repro.core.simulate import SimulationError, verify
+
+POW2 = [2, 4, 8, 16]
+ANY_N = [2, 3, 4, 5, 6, 8, 12, 16]
+
+
+# ------------------------------------------------------------ semantic checks
+@pytest.mark.parametrize("n", ANY_N)
+def test_ring_reduce_scatter_postcondition(n):
+    verify(S.ring_reduce_scatter(n, 1024.0))
+
+
+@pytest.mark.parametrize("n", ANY_N)
+def test_ring_all_gather_postcondition(n):
+    verify(S.ring_all_gather(n, 1024.0))
+
+
+@pytest.mark.parametrize("n", ANY_N)
+def test_ring_all_reduce_postcondition(n):
+    verify(S.ring_all_reduce(n, 1024.0))
+
+
+@pytest.mark.parametrize("n", POW2)
+def test_rhd_reduce_scatter_postcondition(n):
+    verify(S.rhd_reduce_scatter(n, 1024.0))
+
+
+@pytest.mark.parametrize("n", POW2)
+def test_rhd_all_gather_postcondition(n):
+    verify(S.rhd_all_gather(n, 1024.0))
+
+
+@pytest.mark.parametrize("n", POW2)
+def test_rhd_all_reduce_postcondition(n):
+    verify(S.rhd_all_reduce(n, 1024.0))
+
+
+@pytest.mark.parametrize("dims", [(2, 2), (2, 4), (4, 4), (2, 2, 2), (2, 4, 4), (4, 4, 4)])
+def test_bucket_reduce_scatter_postcondition(dims):
+    verify(S.bucket_reduce_scatter(dims, 4096.0))
+
+
+@pytest.mark.parametrize("dims", [(2, 2), (2, 4), (4, 4), (2, 2, 2), (4, 4, 4)])
+def test_bucket_all_gather_postcondition(dims):
+    verify(S.bucket_all_gather(dims, 4096.0))
+
+
+@pytest.mark.parametrize("dims", [(2, 2), (4, 4), (2, 2, 2)])
+def test_bucket_all_reduce_postcondition(dims):
+    verify(S.bucket_all_reduce(dims, 4096.0))
+
+
+@pytest.mark.parametrize("n", POW2)
+def test_dex_all_to_all_postcondition(n):
+    verify(S.dex_all_to_all(n, 1024.0))
+
+
+@pytest.mark.parametrize("n", ANY_N)
+def test_direct_all_to_all_postcondition(n):
+    verify(S.direct_all_to_all(n, 1024.0))
+
+
+@pytest.mark.parametrize("n", ANY_N)
+def test_ring_all_to_all_postcondition(n):
+    verify(S.ring_all_to_all(n, 1024.0))
+
+
+def test_p2p_postcondition():
+    verify(S.p2p(8, 2, 5, 64.0))
+
+
+# ------------------------------------------------------------- cost structure
+def test_ring_round_counts_and_sizes():
+    n, d = 8, 800.0
+    rs = S.ring_reduce_scatter(n, d)
+    assert rs.num_rounds == n - 1
+    assert all(r.size == d / n for r in rs.rounds)
+    ar = S.ring_all_reduce(n, d)
+    assert ar.num_rounds == 2 * (n - 1)
+    # β-optimality: each rank sends 2·d·(n-1)/n
+    assert ar.total_bytes_per_rank() == pytest.approx(2 * d * (n - 1) / n)
+
+
+def test_rhd_round_counts_and_sizes():
+    n, d = 8, 800.0
+    rs = S.rhd_reduce_scatter(n, d)
+    assert rs.num_rounds == int(math.log2(n))
+    assert rs.round_sizes() == [d / 2, d / 4, d / 8]
+    # same β as ring (bandwidth-optimal)
+    assert rs.total_bytes_per_rank() == pytest.approx(d * (n - 1) / n)
+    ag = S.rhd_all_gather(n, d)
+    assert ag.round_sizes() == [d / 8, d / 4, d / 2]
+
+
+def test_dex_alpha_optimal_beta_suboptimal():
+    n, d = 8, 800.0
+    a2a = S.dex_all_to_all(n, d)
+    assert a2a.num_rounds == 3
+    assert all(r.size == d / 2 for r in a2a.rounds)
+    assert a2a.total_bytes_per_rank() == pytest.approx(d / 2 * math.log2(n))
+    direct = S.direct_all_to_all(n, d)
+    assert direct.num_rounds == n - 1
+    assert direct.total_bytes_per_rank() == pytest.approx(d * (n - 1) / n)
+
+
+def test_swing_distances():
+    assert [S.swing_distance(s) for s in range(5)] == [1, -1, 3, -5, 11]
+    sw = S.swing_reduce_scatter(16, 1600.0)
+    assert sw.num_rounds == 4
+    assert sw.round_sizes() == [800.0, 400.0, 200.0, 100.0]
+
+
+# --------------------------------------------------------- structural invariants
+@pytest.mark.parametrize(
+    "sched_fn",
+    [
+        lambda n, d: S.ring_reduce_scatter(n, d),
+        lambda n, d: S.rhd_reduce_scatter(n, d),
+        lambda n, d: S.rhd_all_gather(n, d),
+        lambda n, d: S.swing_reduce_scatter(n, d),
+        lambda n, d: S.dex_all_to_all(n, d),
+        lambda n, d: S.direct_all_to_all(n, d),
+    ],
+)
+def test_rounds_are_permutations(sched_fn):
+    """Every round = one circuit set: each rank has ≤1 Tx and ≤1 Rx (§4.2)."""
+    sched = sched_fn(8, 64.0)
+    for rnd in sched.rounds:
+        assert rnd.is_permutation()
+
+
+def test_bucket_rounds_are_permutations():
+    for rnd in S.bucket_reduce_scatter((4, 4), 64.0).rounds:
+        assert rnd.is_permutation()
+
+
+def test_split_for_fanout():
+    # build an artificial round where rank 0 sends to 3 peers
+    from repro.core.schedules import Round, Schedule, Transfer
+
+    rnd = Round(
+        (
+            Transfer(0, 1, (0,)),
+            Transfer(0, 2, (1,)),
+            Transfer(0, 3, (2,)),
+            Transfer(1, 0, (3,)),
+        ),
+        10.0,
+    )
+    sched = Schedule("p2p", "x", 4, 10.0, (rnd,))
+    split = S.split_for_fanout(sched, tx_limit=1)
+    assert split.num_rounds == 3
+    for r in split.rounds:
+        assert r.max_fanout() <= 1
+    # all transfers preserved
+    total = sum(len(r.transfers) for r in split.rounds)
+    assert total == 4
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.sampled_from([2, 4, 8]), st.floats(min_value=1.0, max_value=1e9))
+def test_property_rhd_all_reduce_correct_any_size(n, d):
+    verify(S.rhd_all_reduce(n, d))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=2, max_value=10), st.floats(min_value=1.0, max_value=1e9))
+def test_property_ring_all_reduce_correct_any_n(n, d):
+    verify(S.ring_all_reduce(n, d))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.sampled_from([(2, 2), (2, 3), (3, 3), (2, 2, 2), (2, 3, 4)]))
+def test_property_bucket_any_dims(dims):
+    verify(S.bucket_reduce_scatter(dims, 1024.0))
+    verify(S.bucket_all_gather(dims, 1024.0))
+
+
+def test_get_schedule_registry():
+    s = S.get_schedule("all_reduce", "ring", 4, 100.0)
+    assert s.algorithm == "ring" and s.collective == "all_reduce"
+    s = S.get_schedule("reduce_scatter", "bucket2d", 16, 100.0, dims=(4, 4))
+    assert s.n == 16
+    with pytest.raises(KeyError):
+        S.get_schedule("all_reduce", "nope", 4, 1.0)
+    with pytest.raises(ValueError):
+        S.get_schedule("reduce_scatter", "bucket2d", 16, 1.0)

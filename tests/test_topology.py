@@ -1,0 +1,89 @@
+import pytest
+
+from repro.core import topology as T
+
+
+def test_ring_structure():
+    r = T.ring(8)
+    assert r.n == 8
+    assert r.undirected_link_count() == 8
+    assert r.has_edge(0, 1) and r.has_edge(1, 0) and r.has_edge(7, 0)
+    assert r.hop_count(0, 4) == 4
+    assert r.hop_count(0, 7) == 1
+    assert r.is_connected()
+
+
+def test_line_is_ring_without_wrap():
+    l = T.line(8)
+    assert not l.has_edge(7, 0)
+    assert l.hop_count(0, 7) == 7
+
+
+def test_torus2d_wraparound_and_diameter():
+    t = T.torus2d(4, 4)
+    assert t.n == 16
+    # each node has degree 4 -> 32 undirected links
+    assert t.undirected_link_count() == 32
+    assert t.hop_count(0, 3) == 1          # row wrap
+    assert t.hop_count(0, 12) == 1         # col wrap
+    assert t.hop_count(0, 10) == 4         # (2,2): 2+2
+
+
+def test_grid2d_no_wraparound():
+    g = T.grid2d(4, 4)
+    assert g.undirected_link_count() == 24
+    assert g.hop_count(0, 3) == 3
+    assert g.hop_count(0, 15) == 6
+
+
+def test_torus3d_and_grid3d():
+    t = T.torus3d(2, 2, 2)
+    # 2-ary axes have no wrap links added twice (d>2 guard): degree 3 each
+    assert t.undirected_link_count() == 12
+    g = T.grid3d(4, 4, 4)
+    assert g.n == 64
+    assert g.hop_count(0, 63) == 9
+
+
+def test_hypercube():
+    h = T.hypercube(8)
+    assert h.undirected_link_count() == 12
+    assert h.hop_count(0, 7) == 3
+    with pytest.raises(ValueError):
+        T.hypercube(6)
+
+
+def test_from_transfers_ideal_graph():
+    i = T.from_transfers(4, [(0, 1), (2, 3)])
+    assert i.has_edge(0, 1) and not i.has_edge(1, 0)
+    assert not i.is_connected()
+    assert i.hop_count(0, 3) >= 10 ** 9
+
+
+def test_shortest_path_returns_none_when_disconnected():
+    i = T.from_transfers(4, [(0, 1)])
+    assert i.shortest_path(2, 3) is None
+    assert i.shortest_path(0, 1) == [0, 1]
+
+
+def test_square_dims():
+    assert T.square_dims2(128) == (8, 16)
+    assert T.square_dims2(64) == (8, 8)
+    a, b, c = T.square_dims3(64)
+    assert a * b * c == 64 and (a, b, c) == (4, 4, 4)
+    a, b, c = T.square_dims3(128)
+    assert a * b * c == 128
+
+
+def test_standard_topologies_128():
+    std = T.standard_topologies(128)
+    assert set(std) == {"ring", "torus2d", "torus3d", "grid2d", "grid3d", "hypercube"}
+    for t in std.values():
+        assert t.n == 128
+        assert t.is_connected()
+
+
+def test_degree_helpers():
+    r = T.ring(4)
+    assert r.out_degree(0) == 2
+    assert r.in_degree(0) == 2

@@ -1,0 +1,169 @@
+"""Training substrate tests: optimizer, pipeline, checkpoint, fault
+tolerance, trainer restart semantics."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import CheckpointConfig, CheckpointManager
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticLMData
+from repro.runtime.fault import (
+    FailureInjector,
+    InjectedFailure,
+    StragglerConfig,
+    StragglerDetector,
+)
+from repro.train.optimizer import (
+    OptimizerConfig,
+    adamw_update,
+    init_opt_state,
+    learning_rate,
+)
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+# ---------------------------------------------------------------- optimizer
+def test_adamw_reduces_quadratic_loss():
+    cfg = OptimizerConfig(lr=0.1, weight_decay=0.0, warmup_steps=1, total_steps=200,
+                          schedule="constant")
+    params = {"w": jnp.array([3.0, -2.0, 1.0])}
+    state = init_opt_state(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"]))
+
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        params, state, m = adamw_update(cfg, g, params, state)
+    assert float(loss(params)) < 1e-2
+    assert int(state.step) == 100
+
+
+def test_lr_schedule_warmup_and_cosine():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=110, min_lr_ratio=0.1)
+    assert float(learning_rate(cfg, jnp.asarray(0))) == 0.0
+    assert float(learning_rate(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(learning_rate(cfg, jnp.asarray(110))) == pytest.approx(0.1)
+
+
+def test_grad_clip_applied():
+    cfg = OptimizerConfig(lr=0.0, grad_clip=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(3)}
+    state = init_opt_state(params)
+    g = {"w": jnp.array([100.0, 0.0, 0.0])}
+    _, _, m = adamw_update(cfg, g, params, state)
+    assert float(m["grad_norm"]) == pytest.approx(100.0)
+
+
+# ----------------------------------------------------------------- pipeline
+def test_pipeline_deterministic_and_host_sharded():
+    cfg = get_config("chatglm3-6b").reduced()
+    d = DataConfig(global_batch=8, seq_len=16, n_hosts=4, seed=7)
+    ds = SyntheticLMData(cfg, d)
+    a = ds.global_batch(5)
+    b = ds.global_batch(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # host shards are disjoint slices of the global batch
+    h0 = ds.host_batch(5, host_id=0)
+    np.testing.assert_array_equal(a["tokens"][:2], h0["tokens"])
+    # different steps differ
+    c = ds.global_batch(6)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    assert a["tokens"].max() < cfg.vocab
+
+
+def test_pipeline_prefetch_iterator():
+    cfg = get_config("chatglm3-6b").reduced()
+    ds = SyntheticLMData(cfg, DataConfig(global_batch=2, seq_len=8))
+    it = ds.iterate(start_step=3)
+    first = next(it)
+    np.testing.assert_array_equal(first["tokens"], ds.global_batch(3)["tokens"])
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    mgr = CheckpointManager(CheckpointConfig(str(tmp_path), keep=2, async_write=False))
+    tree = {"a": jnp.arange(5, dtype=jnp.float32), "b": {"c": jnp.ones((2, 3))}}
+    for s in [10, 20, 30]:
+        mgr.save(s, jax.tree.map(lambda x: x + s, tree), extra={"s": s})
+    assert mgr.steps() == [20, 30]  # keep=2 GC
+    restored, step, extra = mgr.restore(tree)
+    assert step == 30 and extra == {"s": 30}
+    np.testing.assert_allclose(np.asarray(restored["a"]), np.arange(5) + 30)
+
+
+def test_checkpoint_async_and_commit_marker(tmp_path):
+    mgr = CheckpointManager(CheckpointConfig(str(tmp_path), async_write=True))
+    tree = {"w": jnp.ones((4,))}
+    mgr.save(1, tree)
+    mgr.wait()
+    assert mgr.latest_step() == 1
+    # un-committed directories are ignored
+    bad = tmp_path / "step_000000099"
+    bad.mkdir()
+    assert mgr.latest_step() == 1
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    mgr = CheckpointManager(CheckpointConfig(str(tmp_path), async_write=False))
+    mgr.save(1, {"w": jnp.ones((4,))})
+    with pytest.raises(ValueError):
+        mgr.restore({"w": jnp.ones((5,))})
+
+
+# --------------------------------------------------------------- stragglers
+def test_straggler_detection_and_rebalance():
+    det = StragglerDetector(StragglerConfig(window=10, threshold=2.0, min_samples=3), 4)
+    for _ in range(5):
+        for h, t in enumerate([1.0, 1.1, 0.9, 3.5]):
+            det.record(h, t)
+    assert det.stragglers() == [3]
+    alloc = det.rebalance_grains(100)
+    assert sum(alloc.values()) == 100
+    assert alloc[3] < alloc[0]  # slow host gets fewer grains
+
+
+# ------------------------------------------------------------------ trainer
+def _mini_trainer(tmp_path, fail_at=(), steps=8, arch="chatglm3-6b"):
+    cfg = dataclasses.replace(get_config(arch).reduced(), n_layers=2)
+    return Trainer(
+        model_cfg=cfg,
+        data_cfg=DataConfig(global_batch=2, seq_len=16),
+        opt_cfg=OptimizerConfig(lr=1e-3, total_steps=steps, warmup_steps=1),
+        trainer_cfg=TrainerConfig(total_steps=steps, ckpt_every=2, log_every=100),
+        ckpt_cfg=CheckpointConfig(str(tmp_path), keep=3, async_write=False),
+        failure_injector=FailureInjector(fail_at_steps=fail_at),
+    )
+
+
+def test_trainer_runs_and_loss_decreases(tmp_path):
+    t = _mini_trainer(tmp_path, steps=8)
+    out = t.run()
+    hist = out["history"]
+    assert hist[-1]["loss"] < hist[0]["loss"] * 1.05
+    assert out["grad_allreduce_algorithm"] in ("none", "ring", "rhd")
+
+
+def test_trainer_survives_injected_failure_and_resumes(tmp_path):
+    t = _mini_trainer(tmp_path, fail_at=(5,), steps=8)
+    out = t.run()  # must not raise: restart from step-4 checkpoint
+    steps_seen = [h["step"] for h in out["history"]]
+    assert steps_seen.count(5) >= 1  # step 5 was replayed after restart
+    assert t.ckpt.latest_step() == 8
+
+
+def test_restart_determinism_matches_uninterrupted(tmp_path):
+    """Checkpoint-restart must reproduce the uninterrupted run exactly
+    (deterministic data stream + exact state restore)."""
+    t1 = _mini_trainer(tmp_path / "a", steps=6)
+    out1 = t1.run()
+    t2 = _mini_trainer(tmp_path / "b", fail_at=(3,), steps=6)
+    out2 = t2.run()
+    l1 = {h["step"]: h["loss"] for h in out1["history"]}
+    l2 = {h["step"]: h["loss"] for h in out2["history"]}
+    # compare the final steps (post-restart path must converge to same values)
+    assert l1[5] == pytest.approx(l2[5], rel=1e-5)
