@@ -5,6 +5,12 @@ invoked by ``benchmarks.run``.  Values are model-predicted times (µs) from
 the extended α–β cost model / planner — the paper's own evaluation
 methodology (§5: Eq. 1 with congestion & dilation; §6: FlexFlow-style graph
 simulation).  Paper-claim checks are asserted where the text states numbers.
+
+All planning goes through :class:`repro.api.PcclSession`.  The paper's
+figures report *cold-start* collectives (each data point starts from the
+named fabric G0), so sessions here disable fabric-state threading; the
+end-to-end training figures (12–16, via ``taskgraph``) thread state across
+the per-layer AllReduces like a real job would.
 """
 
 from __future__ import annotations
@@ -15,12 +21,12 @@ from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
+from repro.api import PcclSession
 from repro.core import cost_model as cm
 from repro.core import schedules as S
 from repro.core import topology as T
 from repro.core.circuits import MZIMesh, random_requests, route_circuits
 from repro.core.fibers import random_demands, route_fibers, server_grid
-from repro.core.pccl import CollectiveRequest, baseline_cost, plan_collective
 from repro.core.planner import plan
 
 from .taskgraph import CommScheme, Workload, simulate_training
@@ -35,6 +41,11 @@ GB = 1024.0 ** 3
 
 def _std(n: int) -> List[T.Topology]:
     return [T.ring(n), T.torus2d(*T.square_dims2(n))]
+
+
+def _session(n: int, g0: T.Topology, hw: cm.HardwareParams = HW) -> PcclSession:
+    """Cold-start session on fabric ``g0`` (figure data points are i.i.d.)."""
+    return PcclSession(hw, g0=g0, standard_set=_std(n), thread_fabric=False)
 
 
 def _topos(n: int) -> Dict[str, T.Topology]:
@@ -66,12 +77,11 @@ def fig1_alltoall_3d_torus() -> List[Row]:
     # The full size sweep is in fig7/fig10a.
     buf = 16 * MB
     rows: List[Row] = []
+    session = _session(n, topo)
 
-    direct_fixed = cm.schedule_cost_fixed(topo, S.direct_all_to_all(n, buf), HW).total
-    dex_fixed = cm.schedule_cost_fixed(topo, S.dex_all_to_all(n, buf), HW).total
-    pccl_a2a = plan_collective(
-        CollectiveRequest("all_to_all", n, buf), topo, HW, standard=_std(n)
-    ).cost
+    direct_fixed = session.baseline("all_to_all", "direct", buf).total
+    dex_fixed = session.baseline("all_to_all", "dex", buf).total
+    pccl_a2a = session.plan("all_to_all", buf).cost
     rows.append(("fig1/alltoall_direct_on_3dtorus", direct_fixed * 1e6, "us"))
     rows.append(("fig1/alltoall_dex_on_3dtorus", dex_fixed * 1e6, "us"))
     rows.append(("fig1/alltoall_pccl", pccl_a2a * 1e6, "us"))
@@ -80,13 +90,8 @@ def fig1_alltoall_3d_torus() -> List[Row]:
     assert 5.0 < speedup < 12.0, f"Fig.1 speedup out of band: {speedup}"
     assert pccl_a2a <= dex_fixed
 
-    bucket = cm.schedule_cost_fixed(
-        topo, S.bucket_all_reduce((4, 4, 4), buf), HW
-    ).total
-    pccl_ar = plan_collective(
-        CollectiveRequest("all_reduce", n, buf, algorithm="auto"), topo, HW,
-        standard=_std(n),
-    ).cost
+    bucket = session.baseline("all_reduce", "bucket3d", buf, dims=(4, 4, 4)).total
+    pccl_ar = session.plan("all_reduce", buf, algorithm="auto").cost
     rows.append(("fig1/allreduce_bucket3d", bucket * 1e6, "us"))
     rows.append(("fig1/allreduce_pccl", pccl_ar * 1e6, "us"))
     rows.append(("fig1/allreduce_ratio", bucket / pccl_ar, "x (paper: PCCL matches)"))
@@ -102,16 +107,14 @@ def fig7_reduce_scatter_sweep(n: int = 128) -> List[Row]:
     rows: List[Row] = []
     best_gain = 0.0
     for topo_name, topo in _topos(n).items():
+        session = _session(n, topo)
         for buf in [1 * MB, 32 * MB, 256 * MB, 1 * GB]:
-            pccl = plan_collective(
-                CollectiveRequest("reduce_scatter", n, buf, algorithm="auto"),
-                topo, HW, standard=_std(n),
-            ).cost
+            pccl = session.plan("reduce_scatter", buf, algorithm="auto").cost
             rows.append(
                 (f"fig7/{topo_name}/{int(buf/MB)}MB/pccl", pccl * 1e6, "us")
             )
             for algo, (aname, dims) in _baseline_algos(n, topo_name).items():
-                c = baseline_cost("reduce_scatter", aname, topo, n, buf, HW, dims=dims).total
+                c = session.baseline("reduce_scatter", aname, buf, dims=dims).total
                 rows.append(
                     (f"fig7/{topo_name}/{int(buf/MB)}MB/{algo}", c * 1e6, "us")
                 )
@@ -145,28 +148,22 @@ def fig8_9_breakdown() -> List[Row]:
         ("fig9_1GB_1ms", 1 * GB, cm.H100_DGX_R1MS),
     ]:
         for topo_name, topo in _topos(n).items():
-            p = plan_collective(
-                CollectiveRequest("reduce_scatter", n, buf), topo, hw, standard=_std(n)
-            )
+            session = _session(n, topo, hw)
+            p = session.plan("reduce_scatter", buf)
             b = p.breakdown()
             for k in ("alpha", "beta", "dilation", "congestion", "reconfig"):
                 rows.append((f"{tag}/{topo_name}/pccl/{k}", b[k] * 1e6, "us"))
             rows.append(
                 (f"{tag}/{topo_name}/pccl/n_reconfigs", p.num_reconfigs, "count")
             )
-            rs = baseline_cost("reduce_scatter", "ring", topo, n, buf, hw)
+            rs = session.baseline("reduce_scatter", "ring", buf)
             for k, v in rs.breakdown().items():
                 if k != "total":
                     rows.append((f"{tag}/{topo_name}/ring/{k}", v * 1e6, "us"))
     # headline claims
-    p5 = plan_collective(
-        CollectiveRequest("reduce_scatter", n, 256 * MB), T.ring(n), HW, standard=_std(n)
-    )
+    p5 = _session(n, T.ring(n)).plan("reduce_scatter", 256 * MB)
     assert p5.num_reconfigs == 7, p5.num_reconfigs
-    p1ms = plan_collective(
-        CollectiveRequest("reduce_scatter", n, 1 * GB), T.ring(n), cm.H100_DGX_R1MS,
-        standard=_std(n),
-    )
+    p1ms = _session(n, T.ring(n), cm.H100_DGX_R1MS).plan("reduce_scatter", 1 * GB)
     assert p1ms.num_reconfigs < 7
     rows.append(("fig8/reconfigs_at_5us", p5.num_reconfigs, "count (paper: 7)"))
     rows.append(("fig9/reconfigs_at_1ms", p1ms.num_reconfigs, "count (paper: ~4)"))
@@ -180,10 +177,9 @@ def fig10a_alltoall_32mb() -> List[Row]:
     n, buf = 128, 32 * MB
     rows: List[Row] = []
     for topo_name, topo in _topos(n).items():
-        dex = cm.schedule_cost_fixed(topo, S.dex_all_to_all(n, buf), HW).total
-        pccl = plan_collective(
-            CollectiveRequest("all_to_all", n, buf), topo, HW, standard=_std(n)
-        ).cost
+        session = _session(n, topo)
+        dex = session.baseline("all_to_all", "dex", buf).total
+        pccl = session.plan("all_to_all", buf).cost
         rows.append((f"fig10a/{topo_name}/dex", dex * 1e6, "us"))
         rows.append((f"fig10a/{topo_name}/pccl", pccl * 1e6, "us"))
         assert pccl <= dex * 1.001, topo_name

@@ -29,11 +29,9 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.api import PcclSession
 from repro.core import cost_model as cm
-from repro.core import schedules as S
 from repro.core import topology as T
-from repro.core.pccl import CollectiveRequest, plan_collective
-from repro.core.planner import plan
 
 # Paper workload (§6): 12 layers, 16 heads, 2048 hidden; batch 16/GPU, seq 64.
 @dataclass(frozen=True)
@@ -75,22 +73,15 @@ class CommScheme:
 
 def allreduce_time(
     scheme: CommScheme,
-    topo: T.Topology,
+    session: PcclSession,
     n: int,
     nbytes: float,
-    hw: cm.HardwareParams,
-    std: Sequence[T.Topology],
 ) -> float:
     if scheme.kind == "pccl":
-        p = plan_collective(
-            CollectiveRequest("all_reduce", n, nbytes, algorithm="auto"),
-            topo,
-            hw,
-            standard=std,
-        )
-        return p.cost
-    sched = S.get_schedule("all_reduce", scheme.algorithm, n, nbytes, dims=scheme.dims)
-    return cm.schedule_cost_fixed(topo, sched, hw).total
+        return session.plan("all_reduce", nbytes, n=n, algorithm="auto").cost
+    return session.baseline(
+        "all_reduce", scheme.algorithm, nbytes, n=n, dims=scheme.dims
+    ).total
 
 
 def p2p_time(scheme: CommScheme, topo: T.Topology, src: int, dst: int,
@@ -124,6 +115,11 @@ def simulate_training(
     prioritized per §6)."""
     n = topo.n
     std = [T.ring(n), T.torus2d(*T.square_dims2(n))]
+    # One session per simulated job: PCCL plans thread fabric state across the
+    # per-layer AllReduces (layer 1 pays any reconfiguration cold, layers 2..L
+    # re-enter the fabric state layer 1 left behind), and the plan cache makes
+    # the L-1 warm layers a single planning call.
+    session = PcclSession(hw, g0=topo, standard_set=std, thread_fabric=True)
 
     layers_per_stage = max(wl.n_layers // pipeline_stages, 1)
     fwd, bwd = wl.fwd_time(), wl.bwd_time()
@@ -137,8 +133,9 @@ def simulate_training(
 
     # per-layer gradient AllReduce (the paper buckets by layer; Fig. 10b
     # shows 1–64 MB buffers — one d_model² bucket per layer lands mid-range)
-    ar = allreduce_time(scheme, topo, n, wl.layer_grad_bytes(), hw, std)
-    comm += wl.n_layers * ar
+    ar_cold = allreduce_time(scheme, session, n, wl.layer_grad_bytes())
+    ar_warm = allreduce_time(scheme, session, n, wl.layer_grad_bytes())
+    comm += ar_cold + (wl.n_layers - 1) * ar_warm
 
     it = compute + comm
     return SimResult(

@@ -7,8 +7,10 @@ devices (sets the device count itself; run as a standalone script):
 
   PYTHONPATH=src python examples/pccl_dp_training.py --steps 300
 
-The same PcclComm object reports which algorithm the planner chose for the
-gradient buffer size (paper §2.2 size-aware selection).
+A single ``PcclSession`` plans everything; ``session.communicator("data", n)``
+returns the executable collectives (backend="interp" → ppermute rounds,
+backend="xla" → the native baseline for A/B runs), and reports which
+algorithm the planner chose for the gradient buffer size (paper §2.2).
 """
 
 import os
@@ -26,7 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.comm import PcclComm
+from repro import compat
+from repro.api import PcclSession
 from repro.configs import get_config
 from repro.core import cost_model as cm
 from repro.data.pipeline import DataConfig, SyntheticLMData
@@ -42,11 +45,12 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--d-model", type=int, default=512)
     ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--backend", default="interp", choices=["interp", "xla"],
+                    help="interp = PCCL ppermute schedules; xla = native psum baseline")
     args = ap.parse_args()
 
     n_dev = len(jax.devices())
-    mesh = jax.make_mesh((n_dev,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((n_dev,), ("data",))
 
     # ~100M params: d=512, 8L, vocab 32k → ≈ 60M; bump ff for ~100M
     cfg = dataclasses.replace(
@@ -60,9 +64,11 @@ def main():
     print(f"model: {n_params/1e6:.1f} M params on {n_dev} devices (pure DP)")
 
     grad_bytes = 4.0 * n_params
-    comm = PcclComm(axis_name="data", n=n_dev, hw=cm.TPU_V5E_PHOTONIC)
+    session = PcclSession(cm.TPU_V5E_PHOTONIC)
+    comm = session.communicator("data", n_dev, backend=args.backend)
     print(f"PCCL chose '{comm.chosen_algorithm('all_reduce', grad_bytes)}' "
-          f"for the {grad_bytes/1e6:.0f} MB gradient all-reduce")
+          f"for the {grad_bytes/1e6:.0f} MB gradient all-reduce "
+          f"(backend={args.backend})")
 
     opt_cfg = OptimizerConfig(lr=1e-3, total_steps=args.steps, warmup_steps=10)
     opt_state = init_opt_state(params)
@@ -82,7 +88,7 @@ def main():
         return new_params, new_opt, loss
 
     step_fn = jax.jit(
-        jax.shard_map(
+        compat.shard_map(
             per_shard_step,
             mesh=mesh,
             in_specs=(P(), P(), {"tokens": P("data", None)}),
@@ -100,8 +106,10 @@ def main():
             print(f"step {step:4d}  loss {float(loss):.4f}")
     dt = time.perf_counter() - t0
     toks = args.steps * args.batch * args.seq
+    moved_by = ("PCCL schedule-driven ppermute rounds" if args.backend == "interp"
+                else "native XLA psum (baseline)")
     print(f"trained {args.steps} steps in {dt:.1f}s ({toks/dt:.0f} tok/s) — "
-          f"gradients moved by PCCL ring/RHD ppermute rounds")
+          f"gradients moved by {moved_by}")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,18 @@
-"""Quickstart: plan collectives with PCCL and see why reconfiguration wins.
+"""Quickstart: the PcclSession front door — plan collectives, see why
+reconfiguration wins, and watch the session amortize it.
+
+``PcclSession`` is the library's single entry point: it owns the hardware
+model, a plan cache, and the fabric state.  Every ``session.plan(...)`` call
+starts from the topology the *previous* collective left programmed on the
+photonic fabric, so back-to-back collectives stop re-paying reconfigurations
+(something the stateless ``plan_collective`` facade could never express).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
+from repro.api import PcclSession
 from repro.core import cost_model as cm
-from repro.core import schedules as S
 from repro.core import topology as T
-from repro.core.pccl import CollectiveRequest, baseline_cost, plan_collective
 
 MB = 1024.0 ** 2
 
@@ -18,11 +24,10 @@ def main():
     print("=== PCCL quickstart: ReduceScatter of 256 MB on 128 GPUs ===\n")
     for topo_name in ["ring", "torus2d", "grid2d"]:
         g0 = T.standard_topologies(n)[topo_name]
-        plan = plan_collective(
-            CollectiveRequest("reduce_scatter", n, 256 * MB, algorithm="auto"), g0, hw
-        )
-        ring = baseline_cost("reduce_scatter", "ring", g0, n, 256 * MB, hw).total
-        rhd = baseline_cost("reduce_scatter", "rhd", g0, n, 256 * MB, hw).total
+        session = PcclSession(hw, g0=g0, thread_fabric=False)
+        plan = session.plan("reduce_scatter", 256 * MB, algorithm="auto")
+        ring = session.baseline("reduce_scatter", "ring", 256 * MB).total
+        rhd = session.baseline("reduce_scatter", "rhd", 256 * MB).total
         print(f"starting topology: {topo_name}")
         print(f"  ring  on fixed fabric : {ring*1e6:9.1f} us")
         print(f"  RHD   on fixed fabric : {rhd*1e6:9.1f} us")
@@ -33,22 +38,39 @@ def main():
               f"dilation={b['dilation']*1e6:.1f}us congestion={b['congestion']*1e6:.1f}us "
               f"reconfig={b['reconfig']*1e6:.1f}us\n")
 
+    print("=== Sessions thread fabric state across collectives ===\n")
+    session = PcclSession(hw, g0=T.grid2d(*T.square_dims2(n)))
+    cold = session.plan("reduce_scatter", 256 * MB, algorithm="ring")
+    warm = session.plan("reduce_scatter", 256 * MB, algorithm="ring")
+    again = session.plan("reduce_scatter", 256 * MB, algorithm="ring")
+    print(f"cold start : {cold.cost*1e6:9.1f} us ({cold.num_reconfigs} reconfigs)")
+    print(f"warm start : {warm.cost*1e6:9.1f} us ({warm.num_reconfigs} reconfigs)"
+          f" — fabric already holds the ring circuits")
+    print(f"cached     : {again.cost*1e6:9.1f} us "
+          f"(cache {session.stats.hits} hit / {session.stats.misses} miss)\n")
+
     print("=== When NOT to reconfigure: 1 GB buffer, 1 ms (MEMS-class) switch ===\n")
-    hw_slow = cm.H100_DGX_R1MS
-    g0 = T.ring(n)
-    plan = plan_collective(
-        CollectiveRequest("reduce_scatter", n, 1024 * MB), g0, hw_slow
-    )
+    slow = PcclSession(cm.H100_DGX_R1MS, g0=T.ring(n))
+    plan = slow.plan("reduce_scatter", 1024 * MB)
     print(f"PCCL reconfigures only {plan.num_reconfigs}×/7 rounds "
           f"(trades congestion for reconfig delay, paper Fig. 9)\n")
 
     print("=== MoE AllToAll (paper Fig. 10a): DEX schedule, 32 MB, 128 GPUs ===\n")
     for topo_name in ["ring", "torus3d"]:
         g0 = T.standard_topologies(n)[topo_name]
-        dex_fixed = cm.schedule_cost_fixed(g0, S.dex_all_to_all(n, 32 * MB), hw).total
-        plan = plan_collective(CollectiveRequest("all_to_all", n, 32 * MB), g0, hw)
+        session = PcclSession(hw, g0=g0, thread_fabric=False)
+        dex_fixed = session.baseline("all_to_all", "dex", 32 * MB).total
+        plan = session.plan("all_to_all", 32 * MB)
         print(f"  {topo_name}: DEX fixed {dex_fixed*1e6:.1f} us → PCCL "
               f"{plan.cost*1e6:.1f} us ({dex_fixed/plan.cost:.2f}x)")
+
+    print("\n=== Executable collectives hang off the same session ===\n")
+    tpu = PcclSession(cm.TPU_V5E_PHOTONIC)
+    comm = tpu.communicator("data", 8, backend="interp")
+    print(f"comm.all_reduce inside shard_map runs "
+          f"'{comm.chosen_algorithm('all_reduce', 4 * MB)}' ppermute rounds; "
+          f"split([r % 2 ...]) gives DP×TP sub-groups "
+          f"(see examples/pccl_dp_training.py)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 verification in one reproducible step (see ROADMAP.md).
+#
+#   scripts/ci.sh             # full tier-1 suite
+#   scripts/ci.sh -k session  # extra args forwarded to pytest
+#
+# Property suites (hypothesis) auto-skip unless `pip install -r
+# requirements-dev.txt` has been run; multidevice checks run in their own
+# subprocesses and need no flags here.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

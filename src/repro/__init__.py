@@ -1,0 +1,25 @@
+"""PCCL reproduction: photonic circuit-switched collective communication.
+
+``repro.api`` is the front door — :class:`~repro.api.PcclSession` plans
+reconfiguration-aware collectives with a shared plan cache and fabric-state
+threading; :class:`~repro.api.Communicator` executes them over a mesh axis
+through pluggable backends (``interp`` / ``xla`` / ``sim``).
+"""
+
+from .api import (
+    Backend,
+    CacheStats,
+    Communicator,
+    PcclSession,
+    PlanCache,
+    get_backend,
+)
+
+__all__ = [
+    "Backend",
+    "CacheStats",
+    "Communicator",
+    "PcclSession",
+    "PlanCache",
+    "get_backend",
+]

@@ -1,0 +1,42 @@
+"""Top-level PCCL API: sessions, communicators, pluggable backends.
+
+The front door for application code::
+
+    from repro.api import PcclSession
+    from repro.core import cost_model as cm, topology as T
+
+    session = PcclSession(cm.H100_DGX, g0=T.ring(128))
+    plan = session.plan("reduce_scatter", 256 * 2**20)   # cached + threaded
+
+    comm = session.communicator("data", 8, backend="interp")
+    # inside shard_map:  grads = comm.all_reduce(grads)
+    tp = comm.split([r % 2 for r in range(8)])           # DP×TP sub-groups
+
+Legacy entry points (``repro.core.pccl.plan_collective`` and
+``repro.comm.PcclComm``) remain as deprecation shims over this package.
+"""
+
+from .backends import (
+    Backend,
+    InterpBackend,
+    SimBackend,
+    XlaBackend,
+    get_backend,
+    register_backend,
+)
+from .communicator import Communicator, subgroup_schedule
+from .session import CacheStats, PcclSession, PlanCache
+
+__all__ = [
+    "Backend",
+    "CacheStats",
+    "Communicator",
+    "InterpBackend",
+    "PcclSession",
+    "PlanCache",
+    "SimBackend",
+    "XlaBackend",
+    "get_backend",
+    "register_backend",
+    "subgroup_schedule",
+]

@@ -1,0 +1,238 @@
+"""Pluggable execution backends for :class:`repro.api.Communicator`.
+
+Three implementations of one protocol:
+
+* ``interp`` — the executable ppermute schedule interpreter
+  (``repro.comm.primitives``): every planned round lowers to exactly one
+  ``lax.ppermute`` whose permutation *is* the circuit set PCCL would program
+  on the photonic fabric.  Call inside ``shard_map``.
+* ``xla``    — native ``lax`` collectives; the paper-faithful A/B baseline
+  (what ``PcclComm(algorithm="xla")`` used to spell as a string hack).
+* ``sim``    — cost-model-only: data passes through with single-copy
+  placeholder semantics while the *planned* time of every collective is
+  accumulated on ``elapsed_s``.  Lets benchmarks and the serve/launch layers
+  drive the identical Communicator API with no devices at all.
+
+JAX is imported lazily so a ``sim``-only process never touches it.
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, List, Protocol, Tuple, runtime_checkable
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .communicator import Communicator
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """Executes the four PCCL primitives for one communicator."""
+
+    name: str
+
+    def all_reduce(self, comm: "Communicator", x): ...
+
+    def reduce_scatter(self, comm: "Communicator", x): ...
+
+    def all_gather(self, comm: "Communicator", x): ...
+
+    def all_to_all(self, comm: "Communicator", x): ...
+
+
+def _item_bytes(x) -> int:
+    return x.dtype.itemsize
+
+
+def _xla_groups(comm: "Communicator"):
+    return [list(g) for g in comm.groups] if comm.groups is not None else None
+
+
+class XlaBackend:
+    """Native lax collectives (baseline; no PCCL planning involved)."""
+
+    name = "xla"
+
+    def all_reduce(self, comm, x):
+        from jax import lax
+
+        return lax.psum(x, comm.axis_name, axis_index_groups=_xla_groups(comm))
+
+    def reduce_scatter(self, comm, x):
+        from jax import lax
+
+        return lax.psum_scatter(
+            x, comm.axis_name, scatter_dimension=0, tiled=True,
+            axis_index_groups=_xla_groups(comm),
+        )
+
+    def all_gather(self, comm, x):
+        from jax import lax
+
+        return lax.all_gather(
+            x, comm.axis_name, axis=0, tiled=True,
+            axis_index_groups=_xla_groups(comm),
+        )
+
+    def all_to_all(self, comm, x):
+        from jax import lax
+
+        b = x.shape[0] // comm.n
+        y = x.reshape((comm.n, b) + x.shape[1:])
+        y = lax.all_to_all(
+            y, comm.axis_name, split_axis=0, concat_axis=0, tiled=False,
+            axis_index_groups=_xla_groups(comm),
+        )
+        return y.reshape(x.shape)
+
+
+class InterpBackend:
+    """Schedule interpreter: planned rounds → ppermute (inside shard_map)."""
+
+    name = "interp"
+
+    # -- full-axis path reuses the proven primitives wrappers ------------
+    def all_reduce(self, comm, x):
+        import jax.numpy as jnp
+
+        shape = x.shape
+        flat = x.reshape(-1)
+        pad = (-flat.size) % comm.n
+        if pad:
+            flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+        sched = comm.axis_schedule("all_reduce", flat.size * _item_bytes(flat))
+        out = self._run(comm, "all_reduce", flat, sched)
+        if pad:
+            out = out[: out.size - pad]
+        return out.reshape(shape)
+
+    def reduce_scatter(self, comm, x):
+        sched = comm.axis_schedule("reduce_scatter", x.size * _item_bytes(x))
+        return self._run(comm, "reduce_scatter", x, sched)
+
+    def all_gather(self, comm, x):
+        sched = comm.axis_schedule("all_gather", x.size * _item_bytes(x) * comm.n)
+        return self._run(comm, "all_gather", x, sched)
+
+    def all_to_all(self, comm, x):
+        sched = comm.axis_schedule("all_to_all", x.size * _item_bytes(x))
+        return self._run(comm, "all_to_all", x, sched)
+
+    # -- dispatch: ungrouped → primitives; grouped → local-rank variants --
+    def _run(self, comm, collective, x, sched):
+        from repro.comm import primitives as P
+
+        if comm.groups is None:
+            return getattr(P, collective)(x, sched, comm.axis_name)
+        return _grouped_collective(comm, collective, x, sched)
+
+
+def _local_index(comm: "Communicator"):
+    """me → index within my group, as a traced lookup table."""
+    import jax.numpy as jnp
+    import numpy as np
+    from jax import lax
+
+    table = np.zeros(comm.axis_size, dtype=np.int32)
+    for g in comm.groups:
+        for i, rank in enumerate(g):
+            table[rank] = i
+    me = lax.axis_index(comm.axis_name)
+    return jnp.take(jnp.asarray(table), me)
+
+
+def _grouped_collective(comm: "Communicator", collective: str, x, sched):
+    """Group-local collectives on a split communicator.
+
+    Mirrors ``repro.comm.primitives`` wrappers with the rank's *group-local*
+    index: the composed schedule already routes between global ranks, while
+    chunk ids (and local buffers) stay group-local.
+    """
+    import jax.numpy as jnp
+
+    from repro.comm.primitives import ScheduleExecutionError, execute_schedule
+
+    m = comm.n
+    me_local = _local_index(comm)
+    if collective in ("reduce_scatter", "all_reduce", "all_to_all") and x.shape[0] % m:
+        raise ScheduleExecutionError(
+            f"leading dim {x.shape[0]} not divisible by group size {m}"
+        )
+    if collective == "reduce_scatter":
+        chunks = x.reshape((m, x.shape[0] // m) + x.shape[1:])
+        chunks = execute_schedule(chunks, sched, comm.axis_name)
+        return jnp.take(chunks, me_local, axis=0)
+    if collective == "all_reduce":
+        chunks = x.reshape((m, x.shape[0] // m) + x.shape[1:])
+        chunks = execute_schedule(chunks, sched, comm.axis_name)
+        return chunks.reshape(x.shape)
+    if collective == "all_gather":
+        chunks = jnp.zeros((m,) + x.shape, x.dtype).at[me_local].set(x)
+        chunks = execute_schedule(chunks, sched, comm.axis_name)
+        return chunks.reshape((m * x.shape[0],) + x.shape[1:])
+    if collective == "all_to_all":
+        blocks = x.reshape((m, x.shape[0] // m) + x.shape[1:])
+        state = jnp.zeros((m, m) + blocks.shape[1:], blocks.dtype)
+        state = state.at[me_local].set(blocks)
+        flat = state.reshape((m * m,) + blocks.shape[1:])
+        flat = execute_schedule(flat, sched, comm.axis_name)
+        state = flat.reshape((m, m) + blocks.shape[1:])
+        return jnp.take(state, me_local, axis=1).reshape(x.shape)
+    raise ScheduleExecutionError(f"unknown collective {collective!r}")
+
+
+class SimBackend:
+    """Cost-model-only execution: accumulate planned time, pass data through.
+
+    Data semantics are single-copy placeholders (the caller holds the only
+    logical copy): ``all_reduce``/``all_to_all`` return the input unchanged,
+    ``reduce_scatter`` returns this rank's shard slice, ``all_gather`` tiles
+    the shard ``n`` times — shapes match the real backends so code paths are
+    identical, but no inter-device data movement happens (or is needed).
+    """
+
+    name = "sim"
+
+    def __init__(self) -> None:
+        self.elapsed_s = 0.0
+        self.events: List[Tuple[str, float, float]] = []  # (coll, nbytes, cost)
+
+    def _charge(self, comm, collective, nbytes) -> None:
+        cost = comm.estimate(collective, nbytes)
+        self.elapsed_s += cost
+        self.events.append((collective, float(nbytes), cost))
+
+    def all_reduce(self, comm, x):
+        self._charge(comm, "all_reduce", x.size * _item_bytes(x))
+        return x
+
+    def reduce_scatter(self, comm, x):
+        self._charge(comm, "reduce_scatter", x.size * _item_bytes(x))
+        return x[: x.shape[0] // comm.n]
+
+    def all_gather(self, comm, x):
+        import numpy as np
+
+        self._charge(comm, "all_gather", x.size * _item_bytes(x) * comm.n)
+        return np.concatenate([np.asarray(x)] * comm.n, axis=0)
+
+    def all_to_all(self, comm, x):
+        self._charge(comm, "all_to_all", x.size * _item_bytes(x))
+        return x
+
+
+_BACKENDS = {"xla": XlaBackend, "interp": InterpBackend, "sim": SimBackend}
+
+
+def get_backend(name: str) -> Backend:
+    """Fresh backend instance by name (``xla`` | ``interp`` | ``sim``)."""
+    try:
+        return _BACKENDS[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {sorted(_BACKENDS)}"
+        ) from None
+
+
+def register_backend(name: str, cls) -> None:
+    """Extension point: register a custom Backend implementation."""
+    _BACKENDS[name] = cls

@@ -1,0 +1,178 @@
+"""Communicator — executable collectives bound to a mesh axis + backend.
+
+A :class:`Communicator` is created by :meth:`repro.api.PcclSession.communicator`
+and owns *no* planning state of its own: every schedule comes from the
+session's plan cache, so all communicators of a session share plans and
+fabric-state threading.
+
+Process groups (``split``)
+--------------------------
+``comm.split(colors)`` partitions the axis into equal-sized sub-groups by
+color — the hierarchical-mesh pattern (DP×TP): ranks with the same color
+form one group, and the returned communicator runs each collective *within
+every group simultaneously* (exactly ``axis_index_groups`` semantics for the
+``xla`` backend; the ``interp`` backend replicates the group-local schedule
+across groups so each ppermute round stays one full-axis permutation).
+Plans are made for the group size, so the planner prices the sub-collective,
+not the full axis.
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import TYPE_CHECKING, Optional, Sequence, Tuple, Union
+
+from repro.core.schedules import Round, Schedule
+
+from .backends import Backend, get_backend
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .session import PcclSession
+
+Groups = Tuple[Tuple[int, ...], ...]
+
+
+def subgroup_schedule(sched: Schedule, groups: Groups, n_axis: int) -> Schedule:
+    """Replicate a group-local schedule across all groups of the axis.
+
+    The input schedule is over ``m = len(group)`` local ranks; the output is
+    over the full ``n_axis`` ranks with every group's transfers composed into
+    each round.  Chunk ids stay group-local (every rank holds ``m`` chunks),
+    which is exactly what the ppermute interpreter indexes with.
+    """
+    rounds = []
+    for rnd in sched.rounds:
+        transfers = tuple(
+            replace(t, src=g[t.src], dst=g[t.dst])
+            for g in groups
+            for t in rnd.transfers
+        )
+        rounds.append(Round(transfers, rnd.size))
+    return Schedule(sched.collective, sched.algorithm, n_axis, sched.buffer_bytes, tuple(rounds))
+
+
+class Communicator:
+    """Collectives over (a partition of) one mesh axis.
+
+    Not constructed directly — use ``session.communicator(...)`` and
+    ``Communicator.split``.
+    """
+
+    def __init__(
+        self,
+        session: "PcclSession",
+        axis_name: str,
+        n: int,
+        *,
+        backend: Union[str, Backend] = "interp",
+        algorithm: str = "auto",
+        groups: Optional[Groups] = None,
+        axis_size: Optional[int] = None,
+    ) -> None:
+        self.session = session
+        self.axis_name = axis_name
+        self.n = n                      # ranks per group (plans use this)
+        self.algorithm = algorithm
+        self.groups = groups            # None → the single full-axis group
+        self.axis_size = axis_size if axis_size is not None else n
+        self.backend: Backend = (
+            get_backend(backend) if isinstance(backend, str) else backend
+        )
+        if groups is not None:
+            sizes = {len(g) for g in groups}
+            if sizes != {n}:
+                raise ValueError(f"unequal group sizes {sizes} (need all == {n})")
+            flat = sorted(r for g in groups for r in g)
+            if flat != list(range(self.axis_size)):
+                raise ValueError("groups must partition the axis exactly once")
+
+    # ------------------------------------------------------------- planning
+    def _schedule(self, collective: str, nbytes: float) -> Schedule:
+        """Group-size schedule from the session's (cached) planner."""
+        return self.session.plan(
+            collective, nbytes, n=self.n, algorithm=self.algorithm
+        ).schedule
+
+    def axis_schedule(self, collective: str, nbytes: float) -> Schedule:
+        """The executable full-axis schedule (groups composed in)."""
+        sched = self._schedule(collective, nbytes)
+        if self.groups is None:
+            return sched
+        return subgroup_schedule(sched, self.groups, self.axis_size)
+
+    def chosen_algorithm(self, collective: str, nbytes: float) -> str:
+        return self._schedule(collective, nbytes).algorithm
+
+    def estimate(self, collective: str, nbytes: float) -> float:
+        """Planned time (seconds) of one collective from the current fabric."""
+        return self.session.plan(
+            collective, nbytes, n=self.n, algorithm=self.algorithm
+        ).cost
+
+    # ----------------------------------------------------------- primitives
+    def all_reduce(self, x):
+        return self.backend.all_reduce(self, x)
+
+    def reduce_scatter(self, x):
+        """x: (n·k, …) per-rank addend → (k, …) reduced shard."""
+        return self.backend.reduce_scatter(self, x)
+
+    def all_gather(self, x):
+        """x: (k, …) shard → (n·k, …) gathered."""
+        return self.backend.all_gather(self, x)
+
+    def all_to_all(self, x):
+        """x: (n·b, …) destination-major blocks → (n·b, …) origin-major."""
+        return self.backend.all_to_all(self, x)
+
+    # --------------------------------------------------------------- groups
+    def split(self, colors: Sequence[int], *, backend: Optional[str] = None,
+              algorithm: Optional[str] = None) -> "Communicator":
+        """Partition the axis into same-color sub-groups (MPI comm_split).
+
+        ``colors[i]`` is the color of axis rank ``i``; ranks sharing a color
+        form one group and every group runs the collective independently
+        (and concurrently).  All groups must end up the same size.
+
+        The parent's backend *instance* is shared by default so stateful
+        backends keep one account (e.g. ``sim_elapsed_s`` covers sub-group
+        traffic too); pass ``backend="..."`` to get a fresh one instead.
+        """
+        if self.groups is not None:
+            raise ValueError("split() on an already-split communicator")
+        if len(colors) != self.axis_size:
+            raise ValueError(
+                f"need one color per axis rank ({self.axis_size}), got {len(colors)}"
+            )
+        by_color: dict = {}
+        for rank, color in enumerate(colors):
+            by_color.setdefault(color, []).append(rank)
+        groups = tuple(tuple(g) for _, g in sorted(by_color.items()))
+        sizes = {len(g) for g in groups}
+        if len(sizes) != 1:
+            raise ValueError(f"split produced unequal group sizes: {sizes}")
+        m = sizes.pop()
+        return Communicator(
+            self.session,
+            self.axis_name,
+            m,
+            backend=backend if backend is not None else self.backend,
+            algorithm=algorithm or self.algorithm,
+            groups=groups,
+            axis_size=self.axis_size,
+        )
+
+    def group_of(self, rank: int) -> Tuple[int, ...]:
+        """Axis ranks in ``rank``'s group."""
+        if self.groups is None:
+            return tuple(range(self.axis_size))
+        for g in self.groups:
+            if rank in g:
+                return g
+        raise ValueError(f"rank {rank} not on this axis")
+
+    # ------------------------------------------------------------ sim stats
+    @property
+    def sim_elapsed_s(self) -> float:
+        """Accumulated simulated communication time (``sim`` backend only)."""
+        return getattr(self.backend, "elapsed_s", 0.0)

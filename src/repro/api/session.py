@@ -1,0 +1,237 @@
+"""PcclSession — the stateful front door to PCCL planning.
+
+The paper presents PCCL as a *library*: one entry point that, given a
+collective request and the current fabric state, synthesizes the cheapest
+reconfiguration-aware execution.  :class:`PcclSession` is that entry point.
+It improves on the free-function facade (``repro.core.pccl``) in two ways:
+
+* **Plan cache** — plans are memoized by
+  ``(collective, n, nbytes, algorithm, dims, fabric-fingerprint)``, so a
+  training loop that issues the same gradient all-reduce every step plans
+  once.  Hit/miss accounting is exposed via :attr:`PcclSession.stats`.
+* **Fabric-state threading** — the final topology of plan *k* becomes the
+  initial topology ``G0`` of plan *k+1*.  Back-to-back collectives therefore
+  stop paying for reconfigurations the fabric already has: e.g. a repeated
+  ring reduce-scatter re-enters its own ideal ring for free, saving one
+  reconfiguration delay per iteration versus cold-start planning.
+
+Executable collectives hang off :meth:`PcclSession.communicator`, which
+returns :class:`~repro.api.communicator.Communicator` objects bound to a
+mesh axis and a pluggable backend (``interp`` / ``xla`` / ``sim``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+from repro.core.cost_model import HardwareParams, ScheduleCost, schedule_cost_fixed
+from repro.core.pccl import (
+    CollectiveRequest,
+    PcclPlan,
+    default_standard_set,
+    plan_collective,
+)
+from repro.core import schedules as S
+from repro.core.topology import Edge, Topology, ring
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .communicator import Communicator
+
+# (collective, n, nbytes, algorithm, dims, fabric edge-set fingerprint)
+PlanKey = Tuple[str, int, float, str, Optional[Tuple[int, ...]], FrozenSet[Edge]]
+
+
+@dataclass(frozen=True)
+class CacheStats:
+    hits: int
+    misses: int
+    size: int
+
+    @property
+    def requests(self) -> int:
+        return self.hits + self.misses
+
+
+class PlanCache:
+    """Plan memo with hit/miss accounting (one per session)."""
+
+    def __init__(self) -> None:
+        self._plans: Dict[PlanKey, PcclPlan] = {}
+        self._hits = 0
+        self._misses = 0
+
+    def lookup(self, key: PlanKey) -> Optional[PcclPlan]:
+        plan = self._plans.get(key)
+        if plan is not None:
+            self._hits += 1
+        else:
+            self._misses += 1
+        return plan
+
+    def store(self, key: PlanKey, plan: PcclPlan) -> None:
+        self._plans[key] = plan
+
+    def clear(self) -> None:
+        self._plans.clear()
+        self._hits = 0
+        self._misses = 0
+
+    @property
+    def stats(self) -> CacheStats:
+        return CacheStats(self._hits, self._misses, len(self._plans))
+
+
+class PcclSession:
+    """Stateful planning session over one photonic fabric.
+
+    Args:
+      hw: α–β + reconfiguration hardware parameters.
+      g0: initial fabric topology.  Optional; collectives over ``n`` ranks
+        with no recorded fabric default to ``ring(n)`` (the paper's G0).
+      standard_set: the planner's standard fallback graphs ``S``
+        (Algorithm 1).  Defaults to ``{ring, torus2d}`` per rank count.
+      thread_fabric: when True (default) each plan's final topology becomes
+        the next plan's ``G0`` for the same rank count.  Benchmarks that
+        need cold-start numbers pass False.
+    """
+
+    def __init__(
+        self,
+        hw: HardwareParams,
+        g0: Optional[Topology] = None,
+        standard_set: Optional[Sequence[Topology]] = None,
+        *,
+        thread_fabric: bool = True,
+    ) -> None:
+        self.hw = hw
+        self.thread_fabric = thread_fabric
+        self.cache = PlanCache()
+        self._initial: Dict[int, Topology] = {}
+        self._fabric: Dict[int, Topology] = {}
+        self._standard: Dict[int, List[Topology]] = {}
+        self._default_n: Optional[int] = None
+        if g0 is not None:
+            self._initial[g0.n] = g0
+            self._default_n = g0.n
+        for topo in standard_set or ():
+            self._standard.setdefault(topo.n, []).append(topo)
+
+    # ------------------------------------------------------------- fabric
+    def initial_fabric(self, n: Optional[int] = None) -> Topology:
+        n = self._resolve_n(n)
+        return self._initial.setdefault(n, ring(n))
+
+    def fabric(self, n: Optional[int] = None) -> Topology:
+        """Current fabric state for ``n``-rank collectives."""
+        n = self._resolve_n(n)
+        return self._fabric.get(n) or self.initial_fabric(n)
+
+    def reset_fabric(self, n: Optional[int] = None) -> None:
+        """Forget threaded state; next plan starts from the initial ``G0``."""
+        if n is None:
+            self._fabric.clear()
+        else:
+            self._fabric.pop(n, None)
+
+    def standard_set(self, n: Optional[int] = None) -> List[Topology]:
+        n = self._resolve_n(n)
+        if n not in self._standard:
+            self._standard[n] = list(default_standard_set(n))
+        return self._standard[n]
+
+    def _resolve_n(self, n: Optional[int]) -> int:
+        if n is not None:
+            return n
+        if self._default_n is None:
+            raise ValueError(
+                "session has no default rank count; pass n= or construct "
+                "PcclSession with g0"
+            )
+        return self._default_n
+
+    # ------------------------------------------------------------ planning
+    def plan(
+        self,
+        collective: str,
+        nbytes: float,
+        *,
+        n: Optional[int] = None,
+        algorithm: str = "paper_default",
+        dims: Optional[Sequence[int]] = None,
+    ) -> PcclPlan:
+        """Plan ``collective`` from the *current* fabric state (cached)."""
+        n = self._resolve_n(n)
+        g0 = self.fabric(n)
+        key: PlanKey = (
+            collective,
+            n,
+            float(nbytes),
+            algorithm,
+            tuple(dims) if dims is not None else None,
+            g0.edges,
+        )
+        plan = self.cache.lookup(key)
+        if plan is None:
+            plan = plan_collective(
+                CollectiveRequest(collective, n, float(nbytes), algorithm=algorithm),
+                g0,
+                self.hw,
+                standard=self.standard_set(n),
+                dims=dims,
+            )
+            self.cache.store(key, plan)
+        if self.thread_fabric and plan.final_topology is not None:
+            self._fabric[n] = plan.final_topology
+        return plan
+
+    def choose_algorithm(
+        self, collective: str, nbytes: float, *, n: Optional[int] = None
+    ) -> str:
+        """§2.2 size-aware algorithm choice, via planned cost (cached)."""
+        return self.plan(collective, nbytes, n=n, algorithm="auto").algorithm
+
+    def baseline(
+        self,
+        collective: str,
+        algorithm: str,
+        nbytes: float,
+        *,
+        n: Optional[int] = None,
+        topo: Optional[Topology] = None,
+        dims: Optional[Sequence[int]] = None,
+    ) -> ScheduleCost:
+        """Fixed-topology cost of a named algorithm (the §5 baselines).
+
+        Prices on the session's *initial* fabric by default — baselines
+        cannot reconfigure, so threaded state never applies to them.
+        """
+        n = self._resolve_n(n)
+        topo = topo or self.initial_fabric(n)
+        sched = S.get_schedule(collective, algorithm, n, float(nbytes), dims=dims)
+        return schedule_cost_fixed(topo, sched, self.hw)
+
+    @property
+    def stats(self) -> CacheStats:
+        return self.cache.stats
+
+    # ------------------------------------------------------- communicators
+    def communicator(
+        self,
+        axis_name: str,
+        n: Optional[int] = None,
+        *,
+        backend: str = "interp",
+        algorithm: str = "auto",
+    ) -> "Communicator":
+        """Executable collectives over mesh axis ``axis_name``.
+
+        ``backend`` is one of ``interp`` (ppermute schedule interpreter),
+        ``xla`` (native lax collectives, the A/B baseline) or ``sim``
+        (cost-model-only, no devices needed).
+        """
+        from .communicator import Communicator
+
+        return Communicator(
+            self, axis_name, self._resolve_n(n), backend=backend, algorithm=algorithm
+        )

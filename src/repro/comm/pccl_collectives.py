@@ -1,122 +1,90 @@
-"""User-facing PCCL collective API for JAX programs.
+"""Legacy PCCL collective API (deprecation shim) + compressed all-reduce.
 
-``PcclComm`` binds a mesh axis to a planned collective configuration: the
-PCCL planner (core) chooses the algorithm per primitive × buffer size, and
-the executable interpreter (``comm.primitives``) runs the chosen schedule as
-ppermute rounds.  Intended use inside ``shard_map``::
+.. deprecated::
+    ``PcclComm`` is a thin shim over the session API — use
+    :class:`repro.api.PcclSession` and ``session.communicator(...)`` instead,
+    which add a shared plan cache, fabric-state threading across collectives,
+    ``split()`` sub-groups, and pluggable backends.  The old
+    ``algorithm="xla"`` string hack maps to ``backend="xla"``.
 
+Migration::
+
+    # before
     comm = PcclComm(axis_name="data", n=8, hw=cost_model.TPU_V5E_PHOTONIC)
+    # after
+    session = PcclSession(cost_model.TPU_V5E_PHOTONIC)
+    comm = session.communicator("data", 8, backend="interp")
 
-    def step(grads):                      # inside shard_map
-        return comm.all_reduce(grads)     # schedule-driven, not XLA psum
-
-Schedules are planned at trace time (buffer sizes are static under jit) and
-cached.  ``algorithm="auto"`` reproduces the paper's §2.2 size-aware choice;
-``algorithm="xla"`` falls back to the native XLA collective (the
-paper-faithful *baseline* for A/B comparisons in benchmarks/EXPERIMENTS).
+The int8-compressed gradient all-reduce with error feedback lives here too
+(not deprecated; it is schedule-independent).
 """
 
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+import warnings
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 from repro.core import cost_model as cm
 from repro.core import schedules as S
-from repro.core.pccl import CollectiveRequest, plan_collective
 from repro.core.topology import Topology, ring
-
-from . import primitives as P
-
-
-def _pow2(n: int) -> bool:
-    return n >= 2 and (n & (n - 1)) == 0
 
 
 @dataclass
 class PcclComm:
+    """Deprecated: session-less communicator (see module docstring)."""
+
     axis_name: str
     n: int
     hw: cm.HardwareParams = cm.TPU_V5E_PHOTONIC
     g0: Optional[Topology] = None
     algorithm: str = "auto"  # auto | xla | ring | rhd | dex | direct
-    _cache: Dict[Tuple[str, float], S.Schedule] = field(default_factory=dict)
 
     def __post_init__(self) -> None:
+        warnings.warn(
+            "PcclComm is deprecated; use repro.api.PcclSession.communicator()",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         if self.g0 is None:
             self.g0 = ring(self.n)
+        from repro.api import PcclSession
+
+        # Legacy behavior: plan every collective cold from g0 (no threading).
+        self._session = PcclSession(self.hw, g0=self.g0, thread_fabric=False)
+        self._comm = self._session.communicator(
+            self.axis_name,
+            self.n,
+            backend="xla" if self.algorithm == "xla" else "interp",
+            algorithm="auto" if self.algorithm == "xla" else self.algorithm,
+        )
 
     # ------------------------------------------------------------- planning
     def _schedule(self, collective: str, nbytes: float) -> S.Schedule:
-        key = (collective, nbytes)
-        if key not in self._cache:
-            if self.algorithm in ("auto", "paper_default"):
-                plan = plan_collective(
-                    CollectiveRequest(collective, self.n, nbytes, algorithm=self.algorithm),
-                    self.g0,
-                    self.hw,
-                )
-                self._cache[key] = plan.schedule
-            else:
-                self._cache[key] = S.get_schedule(
-                    collective, self.algorithm, self.n, nbytes
-                )
-        return self._cache[key]
+        return self._comm._schedule(collective, nbytes)
 
     def chosen_algorithm(self, collective: str, nbytes: float) -> str:
-        return self._schedule(collective, nbytes).algorithm
+        return self._comm.chosen_algorithm(collective, nbytes)
 
     # ----------------------------------------------------------- primitives
     def all_reduce(self, x: jax.Array) -> jax.Array:
-        if self.algorithm == "xla":
-            return lax.psum(x, self.axis_name)
-        shape = x.shape
-        flat, pad = _flatten_pad(x, self.n)
-        sched = self._schedule("all_reduce", flat.size * flat.dtype.itemsize)
-        out = P.all_reduce(flat, sched, self.axis_name)
-        return _unpad(out, pad).reshape(shape)
+        return self._comm.all_reduce(x)
 
     def reduce_scatter(self, x: jax.Array) -> jax.Array:
         """x: (n·k, …) per-rank addend → (k, …) reduced shard."""
-        if self.algorithm == "xla":
-            return lax.psum_scatter(x, self.axis_name, scatter_dimension=0, tiled=True)
-        sched = self._schedule("reduce_scatter", x.size * x.dtype.itemsize)
-        return P.reduce_scatter(x, sched, self.axis_name)
+        return self._comm.reduce_scatter(x)
 
     def all_gather(self, x: jax.Array) -> jax.Array:
         """x: (k, …) shard → (n·k, …) gathered."""
-        if self.algorithm == "xla":
-            return lax.all_gather(x, self.axis_name, axis=0, tiled=True)
-        sched = self._schedule("all_gather", x.size * x.dtype.itemsize * self.n)
-        return P.all_gather(x, sched, self.axis_name)
+        return self._comm.all_gather(x)
 
     def all_to_all(self, x: jax.Array) -> jax.Array:
         """x: (n·b, …) destination-major blocks → (n·b, …) origin-major."""
-        if self.algorithm == "xla":
-            b = x.shape[0] // self.n
-            y = x.reshape((self.n, b) + x.shape[1:])
-            y = lax.all_to_all(y, self.axis_name, split_axis=0, concat_axis=0, tiled=False)
-            return y.reshape(x.shape)
-        sched = self._schedule("all_to_all", x.size * x.dtype.itemsize)
-        return P.all_to_all(x, sched, self.axis_name)
-
-
-def _flatten_pad(x: jax.Array, n: int) -> Tuple[jax.Array, int]:
-    flat = x.reshape(-1)
-    pad = (-flat.size) % n
-    if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
-    return flat, pad
-
-
-def _unpad(x: jax.Array, pad: int) -> jax.Array:
-    return x[: x.size - pad] if pad else x
+        return self._comm.all_to_all(x)
 
 
 # --------------------------------------------------------------------------

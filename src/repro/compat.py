@@ -1,0 +1,65 @@
+"""Version-compatibility shims for the JAX APIs this repo spans.
+
+The library is developed against recent JAX but must run on older releases
+(the CI image pins one without ``jax.shard_map`` / ``jax.sharding.AxisType``).
+Everything that touches those APIs goes through here:
+
+* :func:`shard_map` — ``jax.shard_map`` when present, else
+  ``jax.experimental.shard_map.shard_map``; the new ``check_vma`` kwarg is
+  translated to the old ``check_rep``.
+* :func:`make_mesh` — ``jax.make_mesh`` with ``axis_types`` only when the
+  running JAX accepts it (older versions have neither the kwarg nor
+  ``jax.sharding.AxisType``).
+* :data:`AXIS_TYPE_AUTO` — ``jax.sharding.AxisType.Auto`` or ``None``.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+
+__all__ = ["AXIS_TYPE_AUTO", "make_mesh", "shard_map"]
+
+AXIS_TYPE_AUTO = getattr(getattr(jax.sharding, "AxisType", None), "Auto", None)
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # pragma: no cover - exercised on older JAX only
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = set(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """`jax.shard_map` across JAX versions (``check_vma`` ↔ ``check_rep``)."""
+    kwargs = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
+    if "check_vma" in _SHARD_MAP_PARAMS:
+        kwargs["check_vma"] = check_vma
+    elif "check_rep" in _SHARD_MAP_PARAMS:
+        kwargs["check_rep"] = check_vma
+    return _shard_map(f, **kwargs)
+
+
+_MAKE_MESH_PARAMS = set(inspect.signature(jax.make_mesh).parameters)
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    devices: Optional[Sequence[Any]] = None,
+    auto_axis_types: bool = True,
+) -> jax.sharding.Mesh:
+    """`jax.make_mesh` that only passes ``axis_types`` where supported."""
+    kwargs: dict = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if (
+        auto_axis_types
+        and AXIS_TYPE_AUTO is not None
+        and "axis_types" in _MAKE_MESH_PARAMS
+    ):
+        kwargs["axis_types"] = (AXIS_TYPE_AUTO,) * len(tuple(axis_names))
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)

@@ -93,6 +93,7 @@ def route_circuits(
     trials: int = 6,
     penalize_factor: float = 4.0,
     rip_up: bool = True,
+    restarts: int = 2,
 ) -> RoutingResult:
     """Algorithm 3: Mesh Routing with Edge Reuse Constraint.
 
@@ -102,8 +103,44 @@ def route_circuits(
     and the victims are re-routed.  This fixes greedy ordering artefacts
     (e.g. an early circuit turning at a mesh corner consumes both corner
     waveguides) without changing the algorithm's validity invariant.
+
+    ``restarts`` retries the whole placement with failed requests promoted to
+    the front of the order (negotiated-congestion style): a request that lost
+    to earlier greedy choices claims its waveguides first on the next pass.
+    Passes with no failures never restart, so routable instances pay nothing.
     """
     t0 = time.perf_counter()
+    order = list(range(len(requests)))
+    routes, counts, failed = _route_pass(
+        mesh, requests, order, max_overlap, trials, penalize_factor, rip_up
+    )
+    for _ in range(restarts):
+        if not failed:
+            break
+        order = failed + [i for i in order if i not in failed]
+        r2, c2, f2 = _route_pass(
+            mesh, requests, order, max_overlap, trials, penalize_factor, rip_up
+        )
+        if len(f2) >= len(failed):
+            # passes are deterministic: the same failed-first order would
+            # just repeat this result — stop instead of re-running it
+            break
+        routes, counts, failed = r2, c2, f2
+    return RoutingResult(
+        routes, counts, sorted(failed), time.perf_counter() - t0
+    )
+
+
+def _route_pass(
+    mesh: MZIMesh,
+    requests: Sequence[CircuitRequest],
+    order: Sequence[int],
+    max_overlap: int,
+    trials: int,
+    penalize_factor: float,
+    rip_up: bool,
+):
+    """One greedy placement pass over ``requests`` in ``order``."""
     base = np.ones(mesh.n_edges)
     counts: Dict[int, np.ndarray] = {}
     penalties: Dict[int, np.ndarray] = {}
@@ -149,7 +186,8 @@ def route_circuits(
         for e in edges_of(routes.pop(ridx)):
             cnt[e] -= 1
 
-    for ridx, req in enumerate(requests):
+    for ridx in order:
+        req = requests[ridx]
         path = try_route(req)
         if path is not None:
             commit(ridx, req, path)
@@ -160,7 +198,7 @@ def route_circuits(
             if path is not None:
                 continue
         failed.append(ridx)
-    return RoutingResult(routes, counts, failed, time.perf_counter() - t0)
+    return routes, counts, failed
 
 
 def _rip_up_place(mesh, requests, ridx, req, routes, counts, max_overlap,

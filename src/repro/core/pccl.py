@@ -50,6 +50,11 @@ class PcclPlan:
     def num_reconfigs(self) -> int:
         return self.plan.num_reconfigs
 
+    @property
+    def final_topology(self) -> Optional[Topology]:
+        """Fabric state after the last round (threaded by PcclSession)."""
+        return self.plan.final_topology
+
     def breakdown(self) -> Dict[str, float]:
         return self.plan.breakdown()
 
@@ -104,6 +109,14 @@ def plan_collective(
     standard: Optional[Sequence[Topology]] = None,
     dims: Optional[Sequence[int]] = None,
 ) -> PcclPlan:
+    """Plan one collective from a cold fabric state.
+
+    .. deprecated::
+        Application code should go through :class:`repro.api.PcclSession`,
+        which adds plan caching and fabric-state threading across
+        collectives.  This free function remains as the stateless planning
+        kernel the session calls into (and as a back-compat shim).
+    """
     if standard is None:
         standard = default_standard_set(request.n)
     best: Optional[PcclPlan] = None
@@ -162,6 +175,8 @@ def choose_algorithm(
     collective: str, n: int, buffer_bytes: float, hw: HardwareParams,
     g0: Optional[Topology] = None,
 ) -> str:
+    """.. deprecated:: use ``PcclSession.choose_algorithm`` (cached, fabric
+    aware).  Kept as a stateless shim for existing call sites/tests."""
     g0 = g0 or ring(n)
     p = plan_collective(
         CollectiveRequest(collective, n, buffer_bytes, algorithm="auto"), g0, hw

@@ -74,6 +74,10 @@ class Plan:
     hw: HardwareParams
     steps: Tuple[PlanStep, ...]
     total_cost: float
+    # Topology the fabric is left in after the last round (G0 for empty
+    # schedules).  Sessions thread this into the next plan's G0 so
+    # back-to-back collectives don't re-pay reconfigurations (api.session).
+    final_topology: Optional[Topology] = None
 
     @property
     def num_reconfigs(self) -> int:
@@ -154,7 +158,7 @@ def plan(
     states = build_states(g0, standard, schedule)
     n_rounds = len(schedule.rounds)
     if n_rounds == 0:
-        return Plan(schedule, hw, (), 0.0)
+        return Plan(schedule, hw, (), 0.0, final_topology=g0)
     cost = _round_costs(states, schedule, hw)
     cost_objs = _round_costs.last_objs  # type: ignore[attr-defined]
     g0_idx = _g0_state(states, g0)
@@ -226,7 +230,9 @@ def plan(
             )
         )
         prev_idx = s_idx
-    return Plan(schedule, hw, tuple(steps), total)
+    return Plan(
+        schedule, hw, tuple(steps), total, final_topology=states[seq[-1]].topo
+    )
 
 
 # ------------------------------------------------------------------ oracles

@@ -4,6 +4,12 @@ A minimal continuous-batching-shaped engine: requests are admitted into a
 fixed-size batch, prefilled together, then decoded step-by-step; finished
 sequences free their slots.  The decode step is the same ``serve_step`` the
 dry-run lowers for decode_32k / long_500k.
+
+With ``EngineConfig.tp > 1`` the engine also accounts for the tensor-parallel
+activation all-reduces through the PCCL session API (``sim`` backend: the
+exact Communicator the training path uses, priced by the planner with no
+devices needed) — ``engine.comm_report()`` returns the planned per-token
+communication time and algorithm.
 """
 
 from __future__ import annotations
@@ -17,7 +23,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import PcclSession
 from repro.configs.base import ModelConfig
+from repro.core import cost_model as cm
 from repro.models import build_model
 from repro.models.module import unbox
 
@@ -35,23 +43,53 @@ class EngineConfig:
     batch_size: int = 4
     max_len: int = 256
     greedy: bool = True
+    tp: int = 1                     # tensor-parallel degree priced via PCCL
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, engine_cfg: EngineConfig,
-                 params: Optional[Any] = None, seed: int = 0):
+                 params: Optional[Any] = None, seed: int = 0,
+                 session: Optional[PcclSession] = None):
         self.cfg = cfg
         self.ecfg = engine_cfg
         self.model = build_model(cfg)
         self.params = params if params is not None else unbox(
             self.model.init(jax.random.PRNGKey(seed))
         )
+        # PCCL communication accounting (sim backend: plans, no devices)
+        self.pccl = session
+        self.comm = None
+        if engine_cfg.tp > 1:
+            self.pccl = self.pccl or PcclSession(cm.TPU_V5E_PHOTONIC)
+            self.comm = self.pccl.communicator("model", engine_cfg.tp, backend="sim")
+            self._act = np.zeros((engine_cfg.batch_size, cfg.d_model), np.float32)
         import functools
 
         self._prefill = jax.jit(
             functools.partial(self.model.prefill, max_len=engine_cfg.max_len)
         )
         self._decode = jax.jit(self.model.decode_step)
+
+    def _charge_tp_step(self) -> None:
+        """Price one decode step's TP collectives: two partial-sum activation
+        all-reduces per layer (attention out-proj + MLP down-proj)."""
+        if self.comm is None:
+            return
+        for _ in range(2 * self.cfg.n_layers):
+            self.comm.all_reduce(self._act)
+
+    def comm_report(self) -> Dict[str, Any]:
+        """Planned TP communication accounting for this engine's lifetime."""
+        if self.comm is None:
+            return {"tp": 1, "sim_comm_s": 0.0, "algorithm": "none", "events": 0}
+        return {
+            "tp": self.ecfg.tp,
+            "sim_comm_s": self.comm.sim_elapsed_s,
+            "algorithm": self.comm.chosen_algorithm(
+                "all_reduce", self._act.size * 4
+            ),
+            "events": len(self.comm.backend.events),
+        }
 
     def _extra_inputs(self, B: int) -> Dict[str, jax.Array]:
         out = {}
@@ -75,6 +113,7 @@ class ServeEngine:
             toks[i, S - len(r.prompt):] = r.prompt  # left-pad
         batch = {"tokens": jnp.asarray(toks), **self._extra_inputs(B)}
         logits, state = self._prefill(self.params, batch)
+        self._charge_tp_step()
         nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
         for i, r in enumerate(requests):
             r.generated.append(int(nxt[i, 0]))
@@ -82,6 +121,7 @@ class ServeEngine:
         max_new = max(r.max_new_tokens for r in requests)
         for t in range(max_new - 1):
             logits, state = self._decode(self.params, state, nxt)
+            self._charge_tp_step()
             nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
             for i, r in enumerate(requests):
                 if len(r.generated) < r.max_new_tokens:

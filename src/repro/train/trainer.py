@@ -6,10 +6,13 @@ Responsibilities (assignment large-scale requirements):
 * survive injected node failures by checkpoint-restart (the outer loop
   catches, restores, and replays the deterministic data stream);
 * straggler detection hooks recording per-step times;
-* PCCL integration point: the gradient reduction strategy is planned by the
-  PCCL planner per buffer size (paper §2.2) and reported in metrics — on the
-  pjit path XLA emits the collectives, on the shard_map path the executable
-  schedule-driven collectives are used (examples/pccl_dp_training.py).
+* PCCL integration point: a :class:`repro.api.PcclSession` owned by the
+  trainer plans the gradient reduction per buffer size (paper §2.2) and
+  reports it in metrics — on the pjit path XLA emits the collectives, on the
+  shard_map path ``session.communicator(...)`` executes the schedule-driven
+  collectives (examples/pccl_dp_training.py).  The session's plan cache and
+  fabric threading make the per-step planned cost the *steady-state* (warm
+  fabric) cost, not the cold-start one.
 """
 
 from __future__ import annotations
@@ -23,10 +26,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import PcclSession
 from repro.ckpt.checkpoint import CheckpointConfig, CheckpointManager
 from repro.configs.base import ModelConfig
 from repro.core import cost_model as cm
-from repro.core.pccl import choose_algorithm
 from repro.data.pipeline import DataConfig, SyntheticLMData
 from repro.models import build_model
 from repro.models.module import axes_of, param_count, unbox
@@ -78,13 +81,19 @@ class Trainer:
         self.metrics_log: list = []
 
         # PCCL planning for the DP gradient all-reduce (paper integration):
+        # one session per trainer; warm-plan (cold + threaded re-plan) gives
+        # the steady-state per-step cost the job will actually pay.
         n_dp = data_cfg.n_hosts if mesh is None else int(mesh.shape.get("data", 1))
         grad_bytes = 4.0 * param_count(jax.eval_shape(self.model.init, jax.random.PRNGKey(0)))
-        self.grad_allreduce_algorithm = (
-            choose_algorithm("all_reduce", n_dp, grad_bytes, cm.TPU_V5E_PHOTONIC)
-            if n_dp >= 2
-            else "none"
-        )
+        self.pccl = PcclSession(cm.TPU_V5E_PHOTONIC)
+        if n_dp >= 2:
+            cold = self.pccl.plan("all_reduce", grad_bytes, n=n_dp, algorithm="auto")
+            warm = self.pccl.plan("all_reduce", grad_bytes, n=n_dp, algorithm="auto")
+            self.grad_allreduce_algorithm = warm.algorithm
+            self.grad_allreduce_cost_s = {"cold": cold.cost, "steady": warm.cost}
+        else:
+            self.grad_allreduce_algorithm = "none"
+            self.grad_allreduce_cost_s = {"cold": 0.0, "steady": 0.0}
 
         self._step_fn = None
         self._shardings = None
@@ -167,6 +176,8 @@ class Trainer:
                 "final_metrics": last_metrics,
                 "history": self.metrics_log,
                 "grad_allreduce_algorithm": self.grad_allreduce_algorithm,
+                "grad_allreduce_cost_s": self.grad_allreduce_cost_s,
+                "pccl_cache": self.pccl.stats,
                 "stragglers": self.straggler.stragglers(),
             }
 

@@ -1,0 +1,42 @@
+"""Shared pytest configuration: marker registry + optional-dep helpers."""
+
+import pytest
+
+
+def hypothesis_or_stubs():
+    """``(given, settings, st)`` — the real hypothesis API, or stand-ins that
+    skip *only* the property tests so the rest of the module still runs
+    (a missing optional dep must not silence plain unit tests)."""
+    try:
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+
+        return given, settings, st
+    except ImportError:
+        class _AnyStrategy:
+            """Absorbs any strategy construction/chaining at import time."""
+
+            def __getattr__(self, name):
+                return self
+
+            def __call__(self, *args, **kwargs):
+                return self
+
+        def given(*args, **kwargs):
+            return pytest.mark.skip(reason="hypothesis not installed")
+
+        def settings(*args, **kwargs):
+            return lambda f: f
+
+        return given, settings, _AnyStrategy()
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running test (multi-minute subprocess or sweep)",
+    )
+    config.addinivalue_line(
+        "markers",
+        "multidevice: drives >1 host device via an XLA_FLAGS subprocess",
+    )

@@ -13,12 +13,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.runtime.fault import reshard_tree, shrink_mesh
 
 
 def main():
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((4, 2), ("data", "model"))
     sh = {
         "w": NamedSharding(mesh, P("data", "model")),
         "b": NamedSharding(mesh, P(None, "model")),

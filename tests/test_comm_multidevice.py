@@ -15,6 +15,7 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
 @pytest.mark.slow
+@pytest.mark.multidevice
 def test_multidevice_collectives():
     env = dict(os.environ)
     env["PYTHONPATH"] = str(ROOT / "src")

@@ -11,6 +11,7 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
 @pytest.mark.slow
+@pytest.mark.multidevice
 def test_elastic_shrink_and_reshard():
     env = dict(os.environ)
     env["PYTHONPATH"] = str(ROOT / "src")

@@ -2,8 +2,10 @@ import math
 import time
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from conftest import hypothesis_or_stubs
+
+# real hypothesis when installed; otherwise only the property tests skip
+given, settings, st = hypothesis_or_stubs()
 
 from repro.core import cost_model as C
 from repro.core import schedules as S

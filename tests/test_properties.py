@@ -3,8 +3,10 @@
 import math
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from conftest import hypothesis_or_stubs
+
+# real hypothesis when installed; otherwise only the property tests skip
+given, settings, st = hypothesis_or_stubs()
 
 from repro.core import cost_model as cm
 from repro.core import schedules as S

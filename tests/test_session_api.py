@@ -1,0 +1,205 @@
+"""Session-API tests: plan cache accounting, fabric-state threading,
+Communicator.split semantics, sim backend, and the deprecation shims.
+
+Device-level backend parity (interp vs xla) lives in multidevice_check.py,
+which runs under 8 host devices in a subprocess.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import PcclSession, get_backend, subgroup_schedule
+from repro.core import cost_model as cm
+from repro.core import schedules as S
+from repro.core import topology as T
+from repro.core.pccl import CollectiveRequest, plan_collective
+
+HW = cm.H100_DGX
+MB = 1024.0 ** 2
+
+
+# ------------------------------------------------------------------ caching
+def test_plan_cache_hit_miss_accounting():
+    s = PcclSession(HW, g0=T.ring(16), thread_fabric=False)
+    assert s.stats.requests == 0
+    p1 = s.plan("reduce_scatter", 4 * MB)
+    assert (s.stats.hits, s.stats.misses, s.stats.size) == (0, 1, 1)
+    p2 = s.plan("reduce_scatter", 4 * MB)
+    assert (s.stats.hits, s.stats.misses, s.stats.size) == (1, 1, 1)
+    assert p2 is p1  # the cached object, not a re-plan
+    s.plan("reduce_scatter", 8 * MB)           # different nbytes → miss
+    s.plan("all_gather", 4 * MB)               # different collective → miss
+    s.plan("reduce_scatter", 4 * MB, algorithm="ring")  # different algo → miss
+    assert (s.stats.hits, s.stats.misses, s.stats.size) == (1, 4, 4)
+
+
+def test_cache_key_includes_fabric_fingerprint():
+    s = PcclSession(HW, g0=T.grid2d(4, 4), thread_fabric=True)
+    s.plan("reduce_scatter", 4 * MB, algorithm="ring")
+    # fabric changed (threaded) → same request is a miss, not a stale hit
+    s.plan("reduce_scatter", 4 * MB, algorithm="ring")
+    assert s.stats.misses == 2
+    # fabric is now a fixed point of this plan → third call hits
+    s.plan("reduce_scatter", 4 * MB, algorithm="ring")
+    assert s.stats.hits == 1
+
+
+# --------------------------------------------------------------- threading
+def test_fabric_threading_lowers_repeated_collective_cost():
+    """Second of two identical collectives costs ≤ cold start: the fabric
+    already holds the circuits the first one programmed."""
+    for algo in ("ring", "rhd"):
+        s = PcclSession(HW, g0=T.grid2d(4, 8))
+        cold = s.plan("reduce_scatter", 64 * MB, algorithm=algo)
+        warm = s.plan("reduce_scatter", 64 * MB, algorithm=algo)
+        assert warm.cost <= cold.cost + 1e-15, algo
+    # ring's per-round ideal is one topology: warm start saves exactly one
+    # reconfiguration relative to cold start off-fabric
+    s = PcclSession(HW, g0=T.grid2d(4, 8))
+    cold = s.plan("reduce_scatter", 64 * MB, algorithm="ring")
+    warm = s.plan("reduce_scatter", 64 * MB, algorithm="ring")
+    assert cold.num_reconfigs == 1 and warm.num_reconfigs == 0
+    assert warm.cost == pytest.approx(cold.cost - HW.reconfig_delay)
+
+
+def test_reset_fabric_restores_cold_start():
+    s = PcclSession(HW, g0=T.grid2d(4, 8))
+    cold = s.plan("reduce_scatter", 64 * MB, algorithm="ring")
+    s.plan("reduce_scatter", 64 * MB, algorithm="ring")
+    s.reset_fabric()
+    assert s.fabric().edges == T.grid2d(4, 8).edges
+    again = s.plan("reduce_scatter", 64 * MB, algorithm="ring")
+    assert again.cost == pytest.approx(cold.cost)
+    assert s.stats.hits >= 1  # cold key re-used from the cache
+
+
+def test_session_plan_matches_stateless_facade_cold():
+    req = CollectiveRequest("reduce_scatter", 32, 64 * MB, algorithm="auto")
+    legacy = plan_collective(req, T.ring(32), HW)
+    s = PcclSession(HW, g0=T.ring(32), thread_fabric=False)
+    new = s.plan("reduce_scatter", 64 * MB, algorithm="auto")
+    assert new.cost == pytest.approx(legacy.cost)
+    assert new.algorithm == legacy.algorithm
+
+
+def test_choose_algorithm_parity_with_facade():
+    from repro.core.pccl import choose_algorithm
+
+    s = PcclSession(HW, thread_fabric=False)
+    assert s.choose_algorithm("all_to_all", 4 * 1024, n=64) == choose_algorithm(
+        "all_to_all", 64, 4 * 1024, HW
+    )
+    assert s.choose_algorithm("all_to_all", 1024 ** 3, n=64) == choose_algorithm(
+        "all_to_all", 64, 1024 ** 3, HW
+    )
+
+
+# ------------------------------------------------------------------- split
+def test_communicator_split_groups():
+    s = PcclSession(cm.TPU_V5E_PHOTONIC)
+    root = s.communicator("x", 8)
+    tp = root.split([r % 2 for r in range(8)])
+    assert tp.n == 4 and tp.axis_size == 8
+    assert tp.groups == ((0, 2, 4, 6), (1, 3, 5, 7))
+    assert tp.group_of(3) == (1, 3, 5, 7)
+    dp = root.split([r // 4 for r in range(8)])
+    assert dp.groups == ((0, 1, 2, 3), (4, 5, 6, 7))
+    # plans are made for the group size, not the axis size
+    assert tp._schedule("all_reduce", 1024).n == 4
+
+    with pytest.raises(ValueError):
+        tp.split([0] * 8)  # no re-splitting
+    with pytest.raises(ValueError):
+        root.split([0, 0, 0, 1, 1, 1, 1, 1])  # unequal groups
+    with pytest.raises(ValueError):
+        root.split([0, 1])  # wrong length
+
+
+def test_subgroup_schedule_is_valid_axis_permutation():
+    sched = S.ring_all_reduce(4, 1024.0)
+    groups = ((0, 2, 4, 6), (1, 3, 5, 7))
+    axis_sched = subgroup_schedule(sched, groups, 8)
+    assert axis_sched.n == 8
+    assert len(axis_sched.rounds) == len(sched.rounds)
+    for rnd in axis_sched.rounds:
+        assert rnd.is_permutation()
+        assert {t.src for t in rnd.transfers} == set(range(8))
+        for t in rnd.transfers:  # transfers stay inside one group
+            g = 0 if t.src in groups[0] else 1
+            assert t.dst in groups[g]
+            assert all(c < 4 for c in t.chunks)  # chunk ids stay group-local
+
+
+# ---------------------------------------------------------------- backends
+def test_get_backend_names_and_errors():
+    for name in ("xla", "interp", "sim"):
+        assert get_backend(name).name == name
+    with pytest.raises(ValueError):
+        get_backend("nope")
+
+
+def test_sim_backend_accounting_and_shapes():
+    s = PcclSession(HW, thread_fabric=False)
+    comm = s.communicator("x", 8, backend="sim")
+    x = np.ones((8, 16), np.float32)
+
+    out = comm.all_reduce(x)
+    assert out.shape == x.shape
+    want = s.plan("all_reduce", x.nbytes, n=8, algorithm="auto").cost
+    assert comm.sim_elapsed_s == pytest.approx(want)
+
+    shard = comm.reduce_scatter(np.ones((16, 4), np.float32))
+    assert shard.shape == (2, 4)
+    gathered = comm.all_gather(np.ones((2, 4), np.float32))
+    assert gathered.shape == (16, 4)
+    a2a = comm.all_to_all(np.ones((16, 2), np.float32))
+    assert a2a.shape == (16, 2)
+    assert len(comm.backend.events) == 4
+    assert comm.sim_elapsed_s > want  # every collective accumulated
+
+
+def test_split_shares_stateful_backend_accounting():
+    s = PcclSession(HW, thread_fabric=False)
+    root = s.communicator("x", 8, backend="sim")
+    sub = root.split([r % 2 for r in range(8)])
+    assert sub.backend is root.backend  # one account across the hierarchy
+    sub.all_reduce(np.ones((4, 8), np.float32))
+    assert root.sim_elapsed_s > 0.0 and len(root.backend.events) == 1
+    # explicit backend override still gets a fresh instance
+    fresh = root.split([r // 4 for r in range(8)], backend="sim")
+    assert fresh.backend is not root.backend
+
+
+def test_sim_backend_serves_engine_comm_report():
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+    cfg = dataclasses.replace(get_config("chatglm3-6b").reduced(), n_layers=2)
+    eng = ServeEngine(cfg, EngineConfig(batch_size=2, max_len=32, tp=4))
+    reqs = [Request(prompt=np.array([1, 2, 3], np.int32), max_new_tokens=4)
+            for _ in range(2)]
+    eng.generate(reqs)
+    rep = eng.comm_report()
+    assert rep["tp"] == 4 and rep["events"] > 0
+    assert rep["sim_comm_s"] > 0.0
+    assert rep["algorithm"] != "none"
+
+
+# ------------------------------------------------------------------- shims
+def test_pcclcomm_shim_warns_and_delegates():
+    from repro.comm.pccl_collectives import PcclComm
+
+    with pytest.warns(DeprecationWarning):
+        comm = PcclComm(axis_name="x", n=8)
+    assert comm.chosen_algorithm("all_reduce", 64 * 4) in (
+        "rhd", "ring", "bucket2d", "bucket3d"
+    )
+    # legacy semantics: plans stay cold (no fabric threading)
+    a1 = comm._schedule("all_reduce", 4 * MB)
+    a2 = comm._schedule("all_reduce", 4 * MB)
+    assert a1 is a2  # served by the session plan cache
+    assert comm._session.thread_fabric is False
