@@ -10,4 +10,7 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+# fast lint: every module must at least byte-compile
+python -m compileall -q src
+# --durations keeps slow planner tests visible as the suite grows
+exec python -m pytest -x -q --durations=10 "$@"

@@ -20,6 +20,8 @@ from __future__ import annotations
 
 from typing import TYPE_CHECKING, List, Protocol, Tuple, runtime_checkable
 
+from repro.comm.errors import ScheduleExecutionError  # JAX-free
+
 if TYPE_CHECKING:  # pragma: no cover
     from .communicator import Communicator
 
@@ -41,6 +43,14 @@ class Backend(Protocol):
 
 def _item_bytes(x) -> int:
     return x.dtype.itemsize
+
+
+def _check_divisible(x, n: int) -> None:
+    """Same leading-dim precondition (and error) as the interp interpreter."""
+    if x.shape[0] % n:
+        raise ScheduleExecutionError(
+            f"leading dim {x.shape[0]} not divisible by {n} ranks"
+        )
 
 
 def _xla_groups(comm: "Communicator"):
@@ -185,9 +195,14 @@ class SimBackend:
 
     Data semantics are single-copy placeholders (the caller holds the only
     logical copy): ``all_reduce``/``all_to_all`` return the input unchanged,
-    ``reduce_scatter`` returns this rank's shard slice, ``all_gather`` tiles
-    the shard ``n`` times — shapes match the real backends so code paths are
-    identical, but no inter-device data movement happens (or is needed).
+    ``reduce_scatter`` returns **rank 0's** shard slice (there is no real
+    rank here, so the first ``shape[0] // n`` rows stand in for "my shard" —
+    only the shape is meaningful, not which values land in it),
+    ``all_gather`` tiles the shard ``n`` times — shapes match the real
+    backends so code paths are identical, but no inter-device data movement
+    happens (or is needed).  Shape preconditions (leading-dim divisibility)
+    raise the same :class:`~repro.comm.errors.ScheduleExecutionError` as the
+    ``interp`` backend instead of silently mis-shaping the output.
     """
 
     name = "sim"
@@ -206,8 +221,9 @@ class SimBackend:
         return x
 
     def reduce_scatter(self, comm, x):
+        _check_divisible(x, comm.n)
         self._charge(comm, "reduce_scatter", x.size * _item_bytes(x))
-        return x[: x.shape[0] // comm.n]
+        return x[: x.shape[0] // comm.n]  # rank 0's shard (placeholder)
 
     def all_gather(self, comm, x):
         import numpy as np
@@ -216,6 +232,7 @@ class SimBackend:
         return np.concatenate([np.asarray(x)] * comm.n, axis=0)
 
     def all_to_all(self, comm, x):
+        _check_divisible(x, comm.n)
         self._charge(comm, "all_to_all", x.size * _item_bytes(x))
         return x
 

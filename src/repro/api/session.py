@@ -22,6 +22,8 @@ mesh axis and a pluggable backend (``interp`` / ``xla`` / ``sim``).
 
 from __future__ import annotations
 
+import threading
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import TYPE_CHECKING, Dict, FrozenSet, List, Optional, Sequence, Tuple
 
@@ -47,6 +49,7 @@ class CacheStats:
     hits: int
     misses: int
     size: int
+    evictions: int = 0
 
     @property
     def requests(self) -> int:
@@ -54,39 +57,70 @@ class CacheStats:
 
 
 class PlanCache:
-    """Plan memo with hit/miss accounting (one per session)."""
+    """Bounded LRU plan memo with hit/miss/eviction accounting.
 
-    def __init__(self) -> None:
-        self._plans: Dict[PlanKey, PcclPlan] = {}
+    ``max_entries`` defaults generously — a training loop rarely plans more
+    than a handful of distinct keys — but keeps a long-running serving
+    session that plans many distinct ``nbytes`` from growing without limit.
+    Lookup/store/clear are lock-guarded: ``move_to_end``/``popitem`` are not
+    safe under concurrent mutation, and sessions may plan from worker
+    threads.
+    """
+
+    def __init__(self, max_entries: int = 4096) -> None:
+        if max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        self._plans: "OrderedDict[PlanKey, PcclPlan]" = OrderedDict()
+        self.max_entries = max_entries
+        self._lock = threading.Lock()
         self._hits = 0
         self._misses = 0
+        self._evictions = 0
 
     def lookup(self, key: PlanKey) -> Optional[PcclPlan]:
-        plan = self._plans.get(key)
-        if plan is not None:
-            self._hits += 1
-        else:
-            self._misses += 1
-        return plan
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self._hits += 1
+                self._plans.move_to_end(key)
+            else:
+                self._misses += 1
+            return plan
 
     def store(self, key: PlanKey, plan: PcclPlan) -> None:
-        self._plans[key] = plan
+        with self._lock:
+            self._plans[key] = plan
+            self._plans.move_to_end(key)
+            while len(self._plans) > self.max_entries:
+                self._plans.popitem(last=False)
+                self._evictions += 1
 
     def clear(self) -> None:
-        self._plans.clear()
-        self._hits = 0
-        self._misses = 0
+        with self._lock:
+            self._plans.clear()
+            self._hits = 0
+            self._misses = 0
+            self._evictions = 0
 
     @property
     def stats(self) -> CacheStats:
-        return CacheStats(self._hits, self._misses, len(self._plans))
+        with self._lock:
+            return CacheStats(
+                self._hits, self._misses, len(self._plans), self._evictions
+            )
 
 
 class PcclSession:
     """Stateful planning session over one photonic fabric.
 
     Args:
-      hw: α–β + reconfiguration hardware parameters.
+      hw: α–β + reconfiguration hardware parameters.  ``hw``'s
+        reconfiguration mode (``HardwareParams.reconfig_mode``) flows through
+        every plan: with partial/overlapped reconfiguration
+        (``hw.with_link_reconfig(r_link, overlap=True)``) the threaded fabric
+        state makes warm starts even cheaper — the fabric already holds most
+        of the next plan's circuits, so only the few changed links are
+        reprogrammed (and hidden behind communication).
       g0: initial fabric topology.  Optional; collectives over ``n`` ranks
         with no recorded fabric default to ``ring(n)`` (the paper's G0).
       standard_set: the planner's standard fallback graphs ``S``
@@ -94,6 +128,8 @@ class PcclSession:
       thread_fabric: when True (default) each plan's final topology becomes
         the next plan's ``G0`` for the same rank count.  Benchmarks that
         need cold-start numbers pass False.
+      max_cached_plans: LRU bound on the plan cache (evictions show up in
+        :attr:`stats`).
     """
 
     def __init__(
@@ -103,10 +139,15 @@ class PcclSession:
         standard_set: Optional[Sequence[Topology]] = None,
         *,
         thread_fabric: bool = True,
+        max_cached_plans: int = 4096,
     ) -> None:
         self.hw = hw
         self.thread_fabric = thread_fabric
-        self.cache = PlanCache()
+        self.cache = PlanCache(max_entries=max_cached_plans)
+        # plan() is a read-plan-store-thread sequence over fabric state;
+        # serialize it so concurrent planners never start from a topology
+        # the fabric doesn't hold (distinct sessions still plan in parallel)
+        self._plan_lock = threading.RLock()
         self._initial: Dict[int, Topology] = {}
         self._fabric: Dict[int, Topology] = {}
         self._standard: Dict[int, List[Topology]] = {}
@@ -161,29 +202,32 @@ class PcclSession:
         dims: Optional[Sequence[int]] = None,
     ) -> PcclPlan:
         """Plan ``collective`` from the *current* fabric state (cached)."""
-        n = self._resolve_n(n)
-        g0 = self.fabric(n)
-        key: PlanKey = (
-            collective,
-            n,
-            float(nbytes),
-            algorithm,
-            tuple(dims) if dims is not None else None,
-            g0.edges,
-        )
-        plan = self.cache.lookup(key)
-        if plan is None:
-            plan = plan_collective(
-                CollectiveRequest(collective, n, float(nbytes), algorithm=algorithm),
-                g0,
-                self.hw,
-                standard=self.standard_set(n),
-                dims=dims,
+        with self._plan_lock:
+            n = self._resolve_n(n)
+            g0 = self.fabric(n)
+            key: PlanKey = (
+                collective,
+                n,
+                float(nbytes),
+                algorithm,
+                tuple(dims) if dims is not None else None,
+                g0.edges,
             )
-            self.cache.store(key, plan)
-        if self.thread_fabric and plan.final_topology is not None:
-            self._fabric[n] = plan.final_topology
-        return plan
+            plan = self.cache.lookup(key)
+            if plan is None:
+                plan = plan_collective(
+                    CollectiveRequest(
+                        collective, n, float(nbytes), algorithm=algorithm
+                    ),
+                    g0,
+                    self.hw,
+                    standard=self.standard_set(n),
+                    dims=dims,
+                )
+                self.cache.store(key, plan)
+            if self.thread_fabric and plan.final_topology is not None:
+                self._fabric[n] = plan.final_topology
+            return plan
 
     def choose_algorithm(
         self, collective: str, nbytes: float, *, n: Optional[int] = None
@@ -214,6 +258,12 @@ class PcclSession:
     @property
     def stats(self) -> CacheStats:
         return self.cache.stats
+
+    @property
+    def reconfig_mode(self) -> str:
+        """``serial`` | ``partial`` | ``overlap`` — how this session's
+        hardware model prices topology changes (see ``HardwareParams``)."""
+        return self.hw.reconfig_mode
 
     # ------------------------------------------------------- communicators
     def communicator(

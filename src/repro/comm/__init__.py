@@ -1,18 +1,31 @@
-"""Executable PCCL collectives for JAX (shard_map + ppermute)."""
+"""Executable PCCL collectives for JAX (shard_map + ppermute).
 
-from .pccl_collectives import (
-    ErrorFeedbackState,
-    PcclComm,
-    compressed_all_reduce,
-    compressed_all_reduce_ef,
-)
-from .primitives import (
-    ScheduleExecutionError,
-    all_gather,
-    all_reduce,
-    all_to_all,
-    execute_schedule,
-    reduce_scatter,
-)
+Re-exports are lazy (PEP 562): the interpreter modules import JAX at module
+scope, and device-free users (the ``sim`` backend, planning-only processes)
+must be able to import :mod:`repro.comm.errors` — and this package — without
+touching it.
+"""
 
-__all__ = [k for k in dir() if not k.startswith("_")]
+from .errors import ScheduleExecutionError
+
+_LAZY = {
+    "ErrorFeedbackState": ".pccl_collectives",
+    "PcclComm": ".pccl_collectives",
+    "compressed_all_reduce": ".pccl_collectives",
+    "compressed_all_reduce_ef": ".pccl_collectives",
+    "all_gather": ".primitives",
+    "all_reduce": ".primitives",
+    "all_to_all": ".primitives",
+    "execute_schedule": ".primitives",
+    "reduce_scatter": ".primitives",
+}
+
+__all__ = ["ScheduleExecutionError", *sorted(_LAZY)]
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(_LAZY[name], __name__), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -34,9 +34,7 @@ from jax import lax
 
 from repro.core.schedules import Round, Schedule
 
-
-class ScheduleExecutionError(ValueError):
-    pass
+from .errors import ScheduleExecutionError
 
 
 def _round_tables(rnd: Round, n: int) -> Tuple[List[Tuple[int, int]], np.ndarray, np.ndarray, bool]:

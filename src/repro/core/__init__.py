@@ -23,6 +23,7 @@ from .cost_model import (
     ScheduleCost,
     comm_cost_round,
     ideal_cost,
+    reconfig_cost,
     schedule_cost_fixed,
 )
 from .pccl import (

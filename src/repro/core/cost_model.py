@@ -16,6 +16,8 @@ the TPU-v5e adaptation target used by the launch/roofline stack.
 
 from __future__ import annotations
 
+import threading
+from collections import OrderedDict
 from dataclasses import dataclass, replace
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -27,17 +29,74 @@ LARGE_PENALTY = 1.0e18  # seconds; Alg. 2 line 10
 
 @dataclass(frozen=True)
 class HardwareParams:
-    """α–β coefficients plus reconfiguration delay (all seconds / bytes)."""
+    """α–β coefficients plus reconfiguration delay (all seconds / bytes).
+
+    Reconfiguration cost model (``reconfig_cost``):
+
+    * ``reconfig_delay_per_link is None`` (default) — the paper's serial
+      model: any topology change pays the full fabric delay ``r``.
+    * ``reconfig_delay_per_link = r_link`` — partial reconfiguration: a
+      change pays ``r_link`` per *changed* directed circuit (set up or torn
+      down), capped at ``reconfig_delay``.  Models switches that reprogram
+      ports independently rather than the whole fabric at once.
+    * ``overlap = True`` — additionally hide round *i*'s reprogramming
+      behind round *i−1*'s communication (SWOT-style
+      reconfiguration/communication overlap); the planner charges only the
+      part of the reconfiguration that outlasts the previous round.
+    """
 
     name: str
     alpha: float            # fixed per-transfer cost (s)
     beta: float             # 1 / link bandwidth (s per byte)
-    reconfig_delay: float   # r: optical fabric reprogram time (s)
+    reconfig_delay: float   # r: full-fabric reprogram time (s)
     tx_per_gpu: int = 1     # optical transmitters per accelerator tile
     rx_per_gpu: int = 1
+    # r_link: per-changed-circuit reprogram time (s); None → serial model
+    reconfig_delay_per_link: Optional[float] = None
+    # hide reconfiguration behind the previous round's communication
+    overlap: bool = False
 
     def with_reconfig(self, r: float) -> "HardwareParams":
         return replace(self, name=f"{self.name}_r{r:g}", reconfig_delay=r)
+
+    def with_link_reconfig(
+        self, r_link: float, *, overlap: bool = False
+    ) -> "HardwareParams":
+        """Partial-reconfiguration variant (optionally overlapped)."""
+        tag = f"{self.name}_rl{r_link:g}" + ("_ov" if overlap else "")
+        return replace(
+            self, name=tag, reconfig_delay_per_link=r_link, overlap=overlap
+        )
+
+    def with_overlap(self, overlap: bool = True) -> "HardwareParams":
+        return replace(self, name=f"{self.name}_ov", overlap=overlap)
+
+    @property
+    def reconfig_mode(self) -> str:
+        """``serial`` | ``partial`` | ``overlap`` (how changes are priced)."""
+        if self.overlap:
+            return "overlap"
+        return "serial" if self.reconfig_delay_per_link is None else "partial"
+
+
+def reconfig_cost(prev_topo: Topology, next_topo: Topology, hw: HardwareParams) -> float:
+    """Cost (s) of reprogramming the fabric from ``prev_topo`` to ``next_topo``.
+
+    Serial model: the full ``reconfig_delay`` on any change.  Partial model
+    (``reconfig_delay_per_link`` set): ``r_link`` per changed directed
+    circuit — circuits present in exactly one of the two edge sets — capped
+    at the full-fabric delay.  Identical edge sets always cost 0.
+
+    Overlap (``hw.overlap``) is *not* applied here: it depends on what the
+    fabric is doing while reprogramming, so the planner subtracts the
+    previous round's communication time at the DP transition.
+    """
+    if prev_topo.edges == next_topo.edges:
+        return 0.0
+    if hw.reconfig_delay_per_link is None:
+        return hw.reconfig_delay
+    changed = len(prev_topo.edges ^ next_topo.edges)
+    return min(hw.reconfig_delay, hw.reconfig_delay_per_link * changed)
 
 
 # §5: α = 3 µs (H100 DGX p2p latency), β = 1/450 GB/s (NVLink), r = 5 µs
@@ -84,7 +143,13 @@ class RoundCost:
     feasible: bool
 
 
-_SP_CACHE: Dict = {}
+# Bounded LRU over (n, edges) → (dist, pred).  Sessions may plan from
+# multiple threads, so all access is lock-guarded; eviction drops only the
+# least-recently-used entry (a blanket clear() used to dump the hot entry
+# mid-sweep).
+_SP_CACHE: "OrderedDict[Tuple, Tuple]" = OrderedDict()
+_SP_CACHE_MAX = 64
+_SP_CACHE_LOCK = threading.Lock()
 
 
 def _scipy_paths(topo: Topology):
@@ -94,11 +159,11 @@ def _scipy_paths(topo: Topology):
     import numpy as np
 
     key = (topo.n, topo.edges)
-    hit = _SP_CACHE.get(key)
-    if hit is not None:
-        return hit
-    if len(_SP_CACHE) > 64:  # bound memory across benchmark sweeps
-        _SP_CACHE.clear()
+    with _SP_CACHE_LOCK:
+        hit = _SP_CACHE.get(key)
+        if hit is not None:
+            _SP_CACHE.move_to_end(key)
+            return hit
     from scipy.sparse import csr_matrix
     from scipy.sparse.csgraph import shortest_path as sp
 
@@ -112,7 +177,11 @@ def _scipy_paths(topo: Topology):
     )
     dist, pred = sp(g, method="D", directed=True, unweighted=True,
                     return_predecessors=True)
-    _SP_CACHE[key] = (dist, pred)
+    with _SP_CACHE_LOCK:
+        _SP_CACHE[key] = (dist, pred)
+        _SP_CACHE.move_to_end(key)
+        while len(_SP_CACHE) > _SP_CACHE_MAX:
+            _SP_CACHE.popitem(last=False)
     return dist, pred
 
 

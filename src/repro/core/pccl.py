@@ -111,6 +111,12 @@ def plan_collective(
 ) -> PcclPlan:
     """Plan one collective from a cold fabric state.
 
+    The reconfiguration cost model rides on ``hw``
+    (``HardwareParams.reconfig_mode``): the paper's serial full-delay model
+    by default, or per-changed-link partial reconfiguration — optionally
+    hidden behind the previous round's communication — via
+    ``hw.with_link_reconfig(r_link, overlap=True)``.
+
     .. deprecated::
         Application code should go through :class:`repro.api.PcclSession`,
         which adds plan caching and fabric-state threading across

@@ -13,30 +13,43 @@ That constraint structure is a shortest path over a tiny layered graph, so the
 primary solver here is an **exact dynamic program** (`plan`):
 
     f(i, s) = CommCost(topo(s), R_i, w_i)
-              + min over admissible predecessors p of [ f(i-1, p) + r·1[p≠s] ]
+              + min over admissible predecessors p of [ f(i-1, p) + T_i(p, s) ]
 
 where the state space is the edge-set-deduplicated union of {G0} ∪ S ∪
 {ideal(R_k)}.  Deduplication matters for fidelity: e.g. every round of a ring
 schedule has the *same* ideal graph, so staying on it must not re-pay ``r``
 (paper Eq. 7 charges only on change).
 
+The transition cost ``T_i(p, s)`` generalizes the paper's ``r·1[p≠s]``
+(``cost_model.reconfig_cost``):
+
+* serial (default): the full fabric delay ``r`` on any change — the paper's
+  pessimistic model, bit-identical to the original planner;
+* partial (``hw.reconfig_delay_per_link``): ``r_link`` per changed directed
+  circuit, capped at ``r`` — only the links that differ are reprogrammed;
+* overlapped (``hw.overlap``): ``max(0, ReconfCost(p, s) − CommCost_{i−1}(p))``
+  for ``i ≥ 1`` — round *i*'s reprogramming is hidden behind round *i−1*'s
+  communication (SWOT-style overlap).  The reconfiguration out of ``G0``
+  (round 0) has nothing to hide behind and is always paid in full.
+
 Cross-checks (used in tests):
 * `plan_bruteforce` — exhaustive enumeration of all feasible assignments.
-* `plan_milp` — the paper's ILP, literally, via scipy HiGHS.
+* `plan_milp` — the paper's ILP (with pairwise transition variables when
+  costs are non-uniform), via scipy HiGHS.
 
-All three agree; the DP runs in O(rounds · states²) and plans the largest
-scale-up domains in well under the paper's one-second budget (§4.1).
+All three agree in every reconfiguration mode; the DP runs in
+O(rounds · states²) and plans the largest scale-up domains in well under the
+paper's one-second budget (§4.1).
 """
 
 from __future__ import annotations
 
-import itertools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .cost_model import HardwareParams, RoundCost, comm_cost_round
+from .cost_model import HardwareParams, RoundCost, comm_cost_round, reconfig_cost
 from .schedules import Round, Schedule
 from .topology import Edge, Topology, from_transfers
 
@@ -127,8 +140,9 @@ def build_states(
 
 def _round_costs(
     states: Sequence[TopoState], schedule: Schedule, hw: HardwareParams
-) -> np.ndarray:
-    """cost[i, s] = CommCost(topo_s, R_i, w_i) (Algorithm 2), cached per state."""
+) -> Tuple[np.ndarray, Dict[Tuple[int, int], RoundCost]]:
+    """(cost, objs): cost[i, s] = CommCost(topo_s, R_i, w_i) (Algorithm 2)
+    and objs[(i, s)] the full RoundCost decomposition."""
     n_rounds = len(schedule.rounds)
     cost = np.empty((n_rounds, len(states)))
     cost_objs: Dict[Tuple[int, int], RoundCost] = {}
@@ -137,8 +151,36 @@ def _round_costs(
             rc = comm_cost_round(s.topo, rnd, None, hw)
             cost[i, s.idx] = rc.total
             cost_objs[(i, s.idx)] = rc
-    _round_costs.last_objs = cost_objs  # type: ignore[attr-defined]
-    return cost
+    return cost, cost_objs
+
+
+def _transition_costs(states: Sequence[TopoState], hw: HardwareParams) -> np.ndarray:
+    """trans[p, s] = ReconfCost(topo_p → topo_s); 0 on the diagonal.
+
+    States are deduplicated by edge set, so every off-diagonal entry is a
+    genuine change (serial mode: the constant ``r``, recovering the paper's
+    ``r·1[p≠s]``)."""
+    ns = len(states)
+    trans = np.zeros((ns, ns))
+    for p in states:
+        for s in states:
+            if p.idx != s.idx:
+                trans[p.idx, s.idx] = reconfig_cost(p.topo, s.topo, hw)
+    return trans
+
+
+def _effective_transition(
+    trans: np.ndarray, cost: np.ndarray, i: int, hw: HardwareParams
+) -> np.ndarray:
+    """T_i[p, s] for entering round ``i`` on ``s`` from round ``i−1`` on ``p``.
+
+    With overlap enabled, reprogramming round ``i``'s circuits happens while
+    round ``i−1`` communicates on ``p``; only the excess is charged.  Round 0
+    (``i == 0``) has no previous communication and pays ``trans`` in full.
+    """
+    if not hw.overlap or i == 0:
+        return trans
+    return np.maximum(0.0, trans - cost[i - 1][:, None])
 
 
 def _g0_state(states: Sequence[TopoState], g0: Topology) -> int:
@@ -154,57 +196,48 @@ def plan(
     schedule: Schedule,
     hw: HardwareParams,
 ) -> Plan:
-    """Exact DP solution of Algorithm 1."""
+    """Exact DP solution of Algorithm 1 (any reconfiguration mode)."""
     states = build_states(g0, standard, schedule)
     n_rounds = len(schedule.rounds)
     if n_rounds == 0:
         return Plan(schedule, hw, (), 0.0, final_topology=g0)
-    cost = _round_costs(states, schedule, hw)
-    cost_objs = _round_costs.last_objs  # type: ignore[attr-defined]
+    cost, cost_objs = _round_costs(states, schedule, hw)
     g0_idx = _g0_state(states, g0)
-    r = hw.reconfig_delay
+    trans = _transition_costs(states, hw)
 
     INF = float("inf")
     ns = len(states)
+    idx = np.arange(ns)
     f = np.full((n_rounds, ns), INF)
     parent = np.full((n_rounds, ns), -1, dtype=np.int64)
 
     for s in states:
         if s.enterable_at(0) or s.idx == g0_idx:
-            f[0, s.idx] = cost[0, s.idx] + (0.0 if s.idx == g0_idx else r)
+            f[0, s.idx] = cost[0, s.idx] + trans[g0_idx, s.idx]
             parent[0, s.idx] = g0_idx
 
+    effs = [_effective_transition(trans, cost, i, hw) for i in range(n_rounds)]
+
     for i in range(1, n_rounds):
-        # predecessor minima: best over all states, plus per-state carry value
         prev = f[i - 1]
-        best_prev = prev.min()
-        best_prev_idx = int(prev.argmin())
+        cand = prev[:, None] + effs[i]      # cand[p, s]: arrive at s from p
+        best_p = cand.argmin(axis=0)
+        best = cand[best_p, idx]
+        # staying put (p == s, zero transition) wins ties, matching Eq. 7's
+        # charge-only-on-change semantics
+        stay = cand[idx, idx]
+        prefer_stay = stay <= best
+        best = np.where(prefer_stay, stay, best)
+        best_p = np.where(prefer_stay, idx, best_p)
         for s in states:
-            carry = prev[s.idx]  # stay on the same topology: no reconfig
+            j = s.idx
             if s.enterable_at(i):
-                # entering/re-entering: pay r unless predecessor is itself
-                enter = best_prev + r
-                enter_idx = best_prev_idx
-                if enter_idx == s.idx:
-                    # best predecessor is already this state → carry is better
-                    # or equal; also consider second-best for a true "enter"
-                    masked = prev.copy()
-                    masked[s.idx] = INF
-                    if np.isfinite(masked.min()):
-                        enter = masked.min() + r
-                        enter_idx = int(masked.argmin())
-                    else:
-                        enter = INF
-                if carry <= enter:
-                    f[i, s.idx] = carry + cost[i, s.idx]
-                    parent[i, s.idx] = s.idx
-                else:
-                    f[i, s.idx] = enter + cost[i, s.idx]
-                    parent[i, s.idx] = enter_idx
-            else:
-                if np.isfinite(carry):
-                    f[i, s.idx] = carry + cost[i, s.idx]
-                    parent[i, s.idx] = s.idx
+                f[i, j] = best[j] + cost[i, j]
+                parent[i, j] = best_p[j]
+            elif np.isfinite(prev[j]):
+                # Eq. 5: ideal graphs outside their entry round carry only
+                f[i, j] = prev[j] + cost[i, j]
+                parent[i, j] = j
 
     last = int(f[n_rounds - 1].argmin())
     total = float(f[n_rounds - 1, last])
@@ -219,6 +252,7 @@ def plan(
     prev_idx = g0_idx
     for i, s_idx in enumerate(seq):
         reconf = s_idx != prev_idx
+        eff = effs[i]
         steps.append(
             PlanStep(
                 round_index=i,
@@ -226,7 +260,7 @@ def plan(
                 topo_name=states[s_idx].topo.name,
                 reconfigured=reconf,
                 cost=cost_objs[(i, s_idx)],
-                reconfig_cost=r if reconf else 0.0,
+                reconfig_cost=float(eff[prev_idx, s_idx]),
             )
         )
         prev_idx = s_idx
@@ -247,9 +281,10 @@ def plan_bruteforce(
     """Exhaustive minimum over all feasible topology assignments (tests only)."""
     states = build_states(g0, standard, schedule)
     n_rounds = len(schedule.rounds)
-    cost = _round_costs(states, schedule, hw)
+    cost, _ = _round_costs(states, schedule, hw)
     g0_idx = _g0_state(states, g0)
-    r = hw.reconfig_delay
+    trans = _transition_costs(states, hw)
+    effs = [_effective_transition(trans, cost, i, hw) for i in range(n_rounds)]
     best = [float("inf")]
 
     def feasible(prev: int, s: TopoState, i: int) -> bool:
@@ -264,7 +299,7 @@ def plan_bruteforce(
         for s in states:
             if not feasible(prev, s, i):
                 continue
-            step = cost[i, s.idx] + (0.0 if s.idx == prev else r)
+            step = cost[i, s.idx] + effs[i][prev, s.idx]
             dfs(i + 1, s.idx, acc + step)
 
     dfs(0, g0_idx, 0.0)
@@ -279,12 +314,20 @@ def plan_milp(
 ) -> float:
     """The paper's ILP (Eqs. 2–7) via scipy HiGHS, for cross-validation.
 
-    Variables: t_{i,j} ∈ {0,1} for each round i and state j, plus
-    same_{i,j} ∈ {0,1} linearizing Bitmap(t_{i,j}) ∧ Bitmap(t_{i-1,j}).
-    Objective: Σ t_{i,j}·CommCost + r·Σ_i (1 - Σ_j same_{i,j}),
-    with same_{0,j} only allowed for j = G0's state (no initial reconfig).
-    Constraint 5 becomes t_{i,j} ≤ t_{i-1,j} for non-standard j outside its
-    entry rounds.
+    Variables: t_{i,j} ∈ {0,1} for each round i and state j, plus — because
+    partial/overlapped reconfiguration makes the transition cost depend on
+    the *pair* of consecutive topologies, not just "changed or not" — flow
+    variables y_{i,p,s} ≥ 0 linearizing t_{i-1,p} ∧ t_{i,s}:
+
+        Σ_s y_{i,p,s} = t_{i-1,p}   ∀ i ≥ 1, p
+        Σ_p y_{i,p,s} = t_{i,s}     ∀ i ≥ 1, s
+
+    With binary t each round's y is a one-unit transportation problem whose
+    only feasible point is the indicator of the chosen (p, s) pair, so the
+    continuous relaxation of y is exact.  Objective:
+    Σ t_{i,j}·CommCost + Σ y_{i,p,s}·T_i(p, s), with the round-0 transition
+    out of G0 folded into the t_{0,j} coefficients.  Constraint 5 becomes
+    t_{i,j} ≤ t_{i-1,j} for non-standard j outside its entry rounds.
     """
     from scipy.optimize import LinearConstraint, milp
     from scipy.sparse import lil_matrix
@@ -292,25 +335,31 @@ def plan_milp(
     states = build_states(g0, standard, schedule)
     n_rounds = len(schedule.rounds)
     ns = len(states)
-    cost = _round_costs(states, schedule, hw)
+    cost, _ = _round_costs(states, schedule, hw)
     g0_idx = _g0_state(states, g0)
-    r = hw.reconfig_delay
+    trans = _transition_costs(states, hw)
 
-    # variable layout: t vars [0, n_rounds*ns), same vars [n_rounds*ns, 2*...)
+    # variable layout: t vars [0, n_rounds*ns), y vars afterwards
     nt = n_rounds * ns
-    nv = 2 * nt
+    nv = nt + max(0, n_rounds - 1) * ns * ns
 
     def t(i: int, j: int) -> int:
         return i * ns + j
 
-    def same(i: int, j: int) -> int:
-        return nt + i * ns + j
+    def y(i: int, p: int, s: int) -> int:  # i >= 1
+        return nt + (i - 1) * ns * ns + p * ns + s
 
     c = np.zeros(nv)
     for i in range(n_rounds):
         for j in range(ns):
             c[t(i, j)] = cost[i, j]
-            c[same(i, j)] = -r  # + r per round added as constant afterwards
+    for j in range(ns):
+        c[t(0, j)] += trans[g0_idx, j]
+    for i in range(1, n_rounds):
+        eff = _effective_transition(trans, cost, i, hw)
+        for p in range(ns):
+            for s in range(ns):
+                c[y(i, p, s)] = eff[p, s]
 
     rows: List[Tuple[Dict[int, float], float, float]] = []  # (coeffs, lb, ub)
 
@@ -318,19 +367,16 @@ def plan_milp(
     for i in range(n_rounds):
         rows.append(({t(i, j): 1.0 for j in range(ns)}, 1.0, 1.0))
 
-    # same_{i,j} ≤ t_{i,j}; same_{i,j} ≤ t_{i-1,j} (i=0 compares against G0)
-    for i in range(n_rounds):
-        for j in range(ns):
-            rows.append(({same(i, j): 1.0, t(i, j): -1.0}, -np.inf, 0.0))
-            if i == 0:
-                if j != g0_idx:
-                    rows.append(({same(i, j): 1.0}, 0.0, 0.0))
-            else:
-                rows.append(({same(i, j): 1.0, t(i - 1, j): -1.0}, -np.inf, 0.0))
-
-    # at most one 'same' per round (it indicates "no change")
-    for i in range(n_rounds):
-        rows.append(({same(i, j): 1.0 for j in range(ns)}, 0.0, 1.0))
+    # transition-flow consistency
+    for i in range(1, n_rounds):
+        for p in range(ns):
+            coeffs = {y(i, p, s): 1.0 for s in range(ns)}
+            coeffs[t(i - 1, p)] = -1.0
+            rows.append((coeffs, 0.0, 0.0))
+        for s in range(ns):
+            coeffs = {y(i, p, s): 1.0 for p in range(ns)}
+            coeffs[t(i, s)] = -1.0
+            rows.append((coeffs, 0.0, 0.0))
 
     # Eq. 5 (carry-only for ideal states outside entry rounds)
     for j, s in enumerate(states):
@@ -353,12 +399,14 @@ def plan_milp(
         lb[k] = lo
         ub[k] = hi
 
+    integrality = np.zeros(nv)
+    integrality[:nt] = 1.0
     res = milp(
         c=c,
         constraints=LinearConstraint(A.tocsr(), lb, ub),
-        integrality=np.ones(nv),
+        integrality=integrality,
         bounds=(0, 1),
     )
     if not res.success:
         raise RuntimeError(f"MILP failed: {res.message}")
-    return float(res.fun + r * n_rounds)
+    return float(res.fun)

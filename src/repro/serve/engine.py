@@ -70,13 +70,20 @@ class ServeEngine:
         )
         self._decode = jax.jit(self.model.decode_step)
 
-    def _charge_tp_step(self) -> None:
-        """Price one decode step's TP collectives: two partial-sum activation
-        all-reduces per layer (attention out-proj + MLP down-proj)."""
+    def _charge_tp_step(self, seq_len: int = 1) -> None:
+        """Price one model step's TP collectives: two partial-sum activation
+        all-reduces per layer (attention out-proj + MLP down-proj).  Decode
+        moves a (batch, d_model) activation; prefill moves the full
+        (batch, seq_len, d_model) prompt activation."""
         if self.comm is None:
             return
+        act = (
+            self._act
+            if seq_len <= 1
+            else np.broadcast_to(self._act, (seq_len, *self._act.shape))
+        )
         for _ in range(2 * self.cfg.n_layers):
-            self.comm.all_reduce(self._act)
+            self.comm.all_reduce(act)
 
     def comm_report(self) -> Dict[str, Any]:
         """Planned TP communication accounting for this engine's lifetime."""
@@ -113,7 +120,7 @@ class ServeEngine:
             toks[i, S - len(r.prompt):] = r.prompt  # left-pad
         batch = {"tokens": jnp.asarray(toks), **self._extra_inputs(B)}
         logits, state = self._prefill(self.params, batch)
-        self._charge_tp_step()
+        self._charge_tp_step(seq_len=S)
         nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
         for i, r in enumerate(requests):
             r.generated.append(int(nxt[i, 0]))

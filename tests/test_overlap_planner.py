@@ -1,0 +1,340 @@
+"""Overlap-aware reconfiguration planning: the per-link/overlappable cost
+model (``cost_model.reconfig_cost``), its threading through all three
+solvers, and the regression fixes that rode along (planner side channel,
+shortest-path LRU, sim-backend shard shape, bounded plan cache)."""
+
+import threading
+
+import numpy as np
+import pytest
+from conftest import hypothesis_or_stubs
+
+given, settings, st = hypothesis_or_stubs()
+
+from repro.core import cost_model as C
+from repro.core import schedules as S
+from repro.core import topology as T
+from repro.core.cost_model import reconfig_cost
+from repro.core.planner import (
+    _round_costs,
+    build_states,
+    plan,
+    plan_bruteforce,
+    plan_milp,
+)
+
+HW = C.H100_DGX
+MB = 1024.0 ** 2
+
+
+def _std(n):
+    std = T.standard_topologies(n)
+    return [std["ring"], std["torus2d"]]
+
+
+def _sched(collective, n, buf):
+    algo = {"all_to_all": "dex"}.get(collective, "rhd")
+    return S.get_schedule(collective, algo, n, buf)
+
+
+def _modes(r):
+    base = HW.with_reconfig(r)
+    return {
+        "serial": base,
+        "partial": base.with_link_reconfig(r / 16),
+        "overlap": base.with_link_reconfig(r / 16, overlap=True),
+    }
+
+
+# ------------------------------------------------------------ reconfig_cost
+def test_reconfig_cost_identity_is_free():
+    for hw in _modes(1e-3).values():
+        assert reconfig_cost(T.ring(8), T.ring(8), hw) == 0.0
+
+
+def test_reconfig_cost_serial_charges_full_delay_on_any_change():
+    hw = HW.with_reconfig(1e-3)
+    assert hw.reconfig_mode == "serial"
+    assert reconfig_cost(T.ring(8), T.hypercube(8), hw) == 1e-3
+    # even a single-circuit delta pays the full fabric delay in serial mode
+    near = T.Topology(8, frozenset(set(T.ring(8).edges) - {(0, 1)}))
+    assert reconfig_cost(T.ring(8), near, hw) == 1e-3
+
+
+def test_reconfig_cost_partial_counts_changed_directed_circuits():
+    hw = HW.with_reconfig(1e-3).with_link_reconfig(1e-6)
+    assert hw.reconfig_mode == "partial"
+    ring = T.ring(8)
+    near = T.Topology(8, frozenset(set(ring.edges) - {(0, 1)}))
+    assert reconfig_cost(ring, near, hw) == pytest.approx(1e-6)  # one circuit
+    assert reconfig_cost(near, ring, hw) == pytest.approx(1e-6)  # symmetric
+    k = len(ring.edges ^ T.hypercube(8).edges)
+    assert reconfig_cost(ring, T.hypercube(8), hw) == pytest.approx(k * 1e-6)
+
+
+def test_reconfig_cost_caps_at_full_fabric_delay():
+    hw = HW.with_reconfig(1e-5).with_link_reconfig(1e-3)  # r_link >> r_full
+    assert reconfig_cost(T.ring(8), T.hypercube(8), hw) == pytest.approx(1e-5)
+
+
+def test_hw_param_helpers_and_mode():
+    hw = HW.with_link_reconfig(1e-6, overlap=True)
+    assert hw.reconfig_mode == "overlap"
+    assert hw.reconfig_delay == HW.reconfig_delay  # cap preserved
+    assert HW.with_overlap().reconfig_mode == "overlap"
+    assert HW.reconfig_mode == "serial"  # defaults unchanged
+
+
+# ----------------------------------------------- solver agreement, all modes
+@pytest.mark.parametrize("n", [4, 8])
+@pytest.mark.parametrize(
+    "collective", ["reduce_scatter", "all_gather", "all_reduce", "all_to_all"]
+)
+@pytest.mark.parametrize("mode", ["partial", "overlap"])
+def test_dp_bruteforce_milp_agree_in_new_modes(n, collective, mode):
+    hw = _modes(5e-4)[mode]
+    for topo_name in ("ring", "grid2d"):
+        g0 = T.standard_topologies(n)[topo_name]
+        for buf in (64 * 1024.0, 256 * MB):
+            sched = _sched(collective, n, buf)
+            p = plan(g0, _std(n), sched, hw)
+            bf = plan_bruteforce(g0, _std(n), sched, hw)
+            m = plan_milp(g0, _std(n), sched, hw)
+            assert p.total_cost == pytest.approx(bf, rel=1e-12), (topo_name, buf)
+            assert p.total_cost == pytest.approx(m, rel=1e-9), (topo_name, buf)
+
+
+def test_overlap_le_partial_le_serial_everywhere():
+    """Pointwise-cheaper transitions + exact planner ⇒ ordered optima."""
+    for n in (8, 16):
+        for r in (5e-6, 5e-4, 1e-3):
+            modes = _modes(r)
+            for topo_name in ("ring", "torus2d", "grid2d"):
+                g0 = T.standard_topologies(n)[topo_name]
+                for coll in ("reduce_scatter", "all_to_all"):
+                    for buf in (1 * MB, 256 * MB):
+                        sched = _sched(coll, n, buf)
+                        cs = {
+                            mode: plan(g0, _std(n), sched, hw).total_cost
+                            for mode, hw in modes.items()
+                        }
+                        assert cs["partial"] <= cs["serial"] + 1e-15
+                        assert cs["overlap"] <= cs["partial"] + 1e-15
+
+
+def test_overlap_strictly_wins_in_mems_regime():
+    """r = 1 ms, large buffer: hiding reprogramming behind the previous
+    round's communication must beat the serial planner strictly."""
+    n, buf, r = 8, 256 * MB, 1e-3
+    sched = _sched("reduce_scatter", n, buf)
+    serial_hw = HW.with_reconfig(r)
+    # r_link scaled so a full-fabric swap (≈4n changed circuits) costs r
+    over_hw = serial_hw.with_link_reconfig(r / (4 * n), overlap=True)
+    serial = plan(T.ring(n), _std(n), sched, serial_hw).total_cost
+    over = plan(T.ring(n), _std(n), sched, over_hw).total_cost
+    assert over < serial * 0.999
+
+
+def test_round0_reconfig_is_never_hidden():
+    """The reconfiguration out of G0 has no previous round to hide behind:
+    a one-round schedule must price overlap == partial."""
+    n, buf = 8, 16 * MB
+    sched = S.Schedule(
+        "all_to_all", "direct", n, buf, (S.dex_all_to_all(n, buf).rounds[0],)
+    )
+    base = HW.with_reconfig(5e-4)
+    partial = plan(T.grid2d(2, 4), _std(n), sched, base.with_link_reconfig(5e-4 / 16))
+    over = plan(
+        T.grid2d(2, 4), _std(n), sched,
+        base.with_link_reconfig(5e-4 / 16, overlap=True),
+    )
+    assert over.total_cost == pytest.approx(partial.total_cost, rel=1e-12)
+
+
+def test_overlap_plan_breakdown_sums_to_total():
+    n, buf = 16, 256 * MB
+    hw = _modes(1e-3)["overlap"]
+    p = plan(T.grid2d(4, 4), _std(n), S.rhd_reduce_scatter(n, buf), hw)
+    b = p.breakdown()
+    assert b["total"] == pytest.approx(
+        b["alpha"] + b["beta"] + b["dilation"] + b["congestion"] + b["reconfig"]
+    )
+
+
+def test_serial_defaults_bit_identical_to_reference_recurrence():
+    """With the new fields at their defaults the DP must still equal the
+    paper's closed-form best cases exactly (the pre-PR behavior)."""
+    n, buf = 128, 256e6
+    p = plan(T.ring(n), _std(n), S.rhd_reduce_scatter(n, buf), HW)
+    assert p.num_reconfigs == 7
+    assert p.total_cost == pytest.approx(
+        C.ideal_cost(S.rhd_reduce_scatter(n, buf), HW) + 7 * HW.reconfig_delay
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([4, 8]),
+    buf=st.floats(min_value=1e3, max_value=1e9),
+    r=st.floats(min_value=1e-7, max_value=1e-2),
+    link_div=st.sampled_from([4, 16, 64]),
+    topo=st.sampled_from(["ring", "torus2d", "grid2d", "hypercube"]),
+    coll=st.sampled_from(["reduce_scatter", "all_reduce", "all_to_all"]),
+)
+def test_property_overlapped_never_costs_more_than_serial(
+    n, buf, r, link_div, topo, coll
+):
+    g0 = T.standard_topologies(n)[topo]
+    sched = _sched(coll, n, buf)
+    serial_hw = HW.with_reconfig(r)
+    over_hw = serial_hw.with_link_reconfig(r / link_div, overlap=True)
+    serial = plan(g0, _std(n), sched, serial_hw).total_cost
+    over = plan(g0, _std(n), sched, over_hw).total_cost
+    assert over <= serial + 1e-15
+    # and the overlapped DP stays exact
+    assert over == pytest.approx(plan_bruteforce(g0, _std(n), sched, over_hw),
+                                 rel=1e-12)
+
+
+# ------------------------------------------------------- satellite: planner
+def test_round_costs_has_no_function_attribute_side_channel():
+    """Regression: costs are returned, not stashed on the function object
+    (plan_bruteforce/plan_milp used to clobber plan()'s copy; concurrent
+    sessions raced on it)."""
+    n = 8
+    sched = S.rhd_reduce_scatter(n, 1 * MB)
+    states = build_states(T.ring(n), _std(n), sched)
+    out = _round_costs(states, sched, HW)
+    assert isinstance(out, tuple) and len(out) == 2
+    cost, objs = out
+    assert cost.shape == (len(sched.rounds), len(states))
+    assert objs[(0, 0)].total == cost[0, 0]
+    plan(T.ring(n), _std(n), sched, HW)
+    plan_bruteforce(T.ring(n), _std(n), sched, HW)
+    assert not hasattr(_round_costs, "last_objs")
+
+
+# ------------------------------------------------------ satellite: SP cache
+def test_sp_cache_is_bounded_lru_and_keeps_hot_entry():
+    from repro.core.cost_model import _SP_CACHE, _SP_CACHE_MAX, _scipy_paths
+
+    hot = T.fully_connected(6)  # no fast path: exercises the scipy cache
+    hot_key = (hot.n, hot.edges)
+    _scipy_paths(hot)
+    for i in range(_SP_CACHE_MAX + 10):
+        edges = frozenset({(0, 1), (1, 2), (2, 0), (0, i % 3 + 3)})
+        _scipy_paths(T.Topology(7, edges, name=f"t{i}"))
+        _scipy_paths(hot)  # touch: must survive the whole sweep
+    assert len(_SP_CACHE) <= _SP_CACHE_MAX
+    assert hot_key in _SP_CACHE
+
+
+def test_sp_cache_thread_safety_smoke():
+    from repro.core.cost_model import _scipy_paths
+
+    errs = []
+
+    def worker(seed):
+        try:
+            for i in range(40):
+                k = (seed * 40 + i) % 90
+                edges = frozenset({(0, 1), (1, 2), (2, 3), (3, 0), (0, k % 4 + 4)})
+                dist, _ = _scipy_paths(T.Topology(9, edges))
+                assert dist.shape == (9, 9)
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(s,)) for s in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+
+
+# --------------------------------------------------- satellite: sim backend
+def test_sim_reduce_scatter_rejects_indivisible_leading_dim():
+    from repro.api import PcclSession
+    from repro.comm.errors import ScheduleExecutionError
+
+    comm = PcclSession(HW, thread_fabric=False).communicator(
+        "x", 8, backend="sim"
+    )
+    with pytest.raises(ScheduleExecutionError, match="not divisible"):
+        comm.reduce_scatter(np.ones((10, 4), np.float32))
+    with pytest.raises(ScheduleExecutionError, match="not divisible"):
+        comm.all_to_all(np.ones((10, 4), np.float32))
+    assert comm.backend.events == []  # nothing charged on the error path
+    shard = comm.reduce_scatter(np.ones((16, 4), np.float32))
+    assert shard.shape == (2, 4)  # rank 0's placeholder shard
+
+
+def test_sim_error_matches_interp_error_type():
+    from repro.comm import ScheduleExecutionError as exported
+    from repro.comm.errors import ScheduleExecutionError
+    from repro.comm.primitives import ScheduleExecutionError as interp_err
+
+    assert exported is ScheduleExecutionError is interp_err
+    assert issubclass(ScheduleExecutionError, ValueError)
+
+
+# ----------------------------------------------------- satellite: plan cache
+def test_plan_cache_lru_bound_and_eviction_counter():
+    from repro.api import PcclSession
+
+    s = PcclSession(HW, g0=T.ring(8), thread_fabric=False, max_cached_plans=3)
+    for i in range(5):
+        s.plan("reduce_scatter", (i + 1) * MB)
+    st_ = s.stats
+    assert st_.size == 3 and st_.evictions == 2 and st_.misses == 5
+    # most recent keys survived: re-planning them hits
+    s.plan("reduce_scatter", 5 * MB)
+    assert s.stats.hits == 1
+    # the evicted oldest key re-plans (miss), not a stale hit
+    s.plan("reduce_scatter", 1 * MB)
+    assert s.stats.misses == 6
+
+
+def test_plan_cache_lookup_refreshes_recency():
+    from repro.api import PlanCache
+
+    cache = PlanCache(max_entries=2)
+    cache.store("a", "plan_a")
+    cache.store("b", "plan_b")
+    assert cache.lookup("a") == "plan_a"  # refresh a
+    cache.store("c", "plan_c")            # evicts b, not a
+    assert cache.lookup("a") == "plan_a"
+    assert cache.lookup("b") is None
+    assert cache.stats.evictions == 1
+    with pytest.raises(ValueError):
+        PlanCache(max_entries=0)
+
+
+# -------------------------------------------------- session × overlap modes
+def test_session_surfaces_reconfig_mode_and_warm_partial_reconfigs():
+    from repro.api import PcclSession
+
+    hw = HW.with_reconfig(5e-4).with_link_reconfig(5e-4 / 64, overlap=True)
+    s = PcclSession(hw, g0=T.grid2d(4, 8))
+    assert s.reconfig_mode == "overlap"
+    cold = s.plan("reduce_scatter", 64 * MB, algorithm="ring")
+    warm = s.plan("reduce_scatter", 64 * MB, algorithm="ring")
+    assert warm.cost <= cold.cost + 1e-15
+    # warm start re-enters the fabric's own ring for free
+    assert warm.num_reconfigs == 0
+
+
+def test_session_overlap_cost_le_serial_session_cost():
+    from repro.api import PcclSession
+
+    r = 1e-3
+    serial_s = PcclSession(HW.with_reconfig(r), g0=T.ring(16))
+    over_s = PcclSession(
+        HW.with_reconfig(r).with_link_reconfig(r / 64, overlap=True),
+        g0=T.ring(16),
+    )
+    for nb in (1 * MB, 64 * MB, 256 * MB):
+        assert (
+            over_s.plan("reduce_scatter", nb, algorithm="auto").cost
+            <= serial_s.plan("reduce_scatter", nb, algorithm="auto").cost + 1e-15
+        )
