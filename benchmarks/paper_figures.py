@@ -106,10 +106,14 @@ def fig7_reduce_scatter_sweep(n: int = 128) -> List[Row]:
     everywhere); up to 2.5× over the best baseline somewhere."""
     rows: List[Row] = []
     best_gain = 0.0
+    bufs = [1 * MB, 32 * MB, 256 * MB, 1 * GB]
     for topo_name, topo in _topos(n).items():
         session = _session(n, topo)
-        for buf in [1 * MB, 32 * MB, 256 * MB, 1 * GB]:
-            pccl = session.plan("reduce_scatter", buf, algorithm="auto").cost
+        # one structure phase prices the whole buffer sweep (bit-identical
+        # to per-size plan() calls; sessions don't thread fabric here)
+        pccl_plans = session.plan_sweep("reduce_scatter", bufs, algorithm="auto")
+        for buf, pccl_plan in zip(bufs, pccl_plans):
+            pccl = pccl_plan.cost
             rows.append(
                 (f"fig7/{topo_name}/{int(buf/MB)}MB/pccl", pccl * 1e6, "us")
             )
@@ -305,12 +309,21 @@ def sweep_overlap_reconfig() -> List[Row]:
         }
         for topo_name, topo in topos.items():
             for coll in collectives:
-                for buf in (1 * MB, 256 * MB):
-                    costs = {}
-                    for mode, hw in modes.items():
-                        costs[mode] = (
-                            _session(n, topo, hw).plan(coll, buf, algorithm="auto").cost
+                bufs = (1 * MB, 256 * MB)
+                # per mode, both buffer sizes come out of one plan_sweep
+                # (bit-identical to per-size plan() on these cold sessions)
+                per_mode = {
+                    mode: [
+                        p.cost
+                        for p in _session(n, topo, hw).plan_sweep(
+                            coll, bufs, algorithm="auto"
                         )
+                    ]
+                    for mode, hw in modes.items()
+                }
+                for bi, buf in enumerate(bufs):
+                    costs = {mode: per_mode[mode][bi] for mode in modes}
+                    for mode in modes:
                         rows.append((
                             f"overlap/r{r_us}us/{topo_name}/{coll}/{int(buf/MB)}MB/{mode}",
                             costs[mode] * 1e6,

@@ -1,0 +1,190 @@
+"""Planner performance benchmark: cold per-size planning vs ``plan_sweep``.
+
+Times an 8-point buffer sweep (1 MB → 1 GB, three orders of magnitude — the
+span of the paper's Figs. 8–10) two ways per (n, collective) point:
+
+* **naive loop** — one cold ``plan_collective`` per size: the caches this
+  PR introduced (structure table, linear labels, transition memo) are
+  cleared before each plan, reproducing the pre-split planner that
+  re-derived routing factors at every ``plan()`` call.  The shortest-path
+  cache (``_SP_CACHE``) predates the split and always persisted across
+  ``plan()`` calls, so it stays warm — the baseline is not billed for work
+  the old planner amortized;
+* **sweep** — one ``plan_collective_sweep`` over all sizes under the same
+  cache regime: a single size-independent structure phase prices every
+  size in one batched numeric pass.
+
+Both must return bit-identical plans (checked).  Also reports single-plan
+cold latency for the planner's heaviest query — direct AllToAll at n = 128
+(127 rounds × ~130 candidate states) — against the paper's §4.1 one-second
+budget, after a warm-up plan so library/numpy initialisation is not billed
+to the planner (the paper's claim is about a running system).
+
+Writes ``BENCH_planner.json``:
+
+    {"sweep_points": [{n, collective, sizes_mb, loop_s, sweep_s, speedup,
+                       loop_routing_calls, sweep_routing_calls}, ...],
+     "n128_direct_alltoall_plan_s": float,
+     "smoke": bool}
+
+``--smoke`` (used by scripts/ci.sh) restricts to n = 16, asserts the
+regression guards, and skips the JSON write so a CI run never clobbers the
+full numbers.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from dataclasses import replace
+from pathlib import Path
+from typing import Dict, List
+
+from repro.core import cost_model as cm
+from repro.core import topology as T
+from repro.core.pccl import CollectiveRequest, plan_collective, plan_collective_sweep
+from repro.core.planner import clear_planner_caches
+
+MB = 1024.0 ** 2
+SIZES_MB = (1, 2, 8, 32, 64, 128, 512, 1024)  # 8 points, 1 MB → 1 GB
+COLLECTIVES = ("reduce_scatter", "all_gather", "all_reduce", "all_to_all")
+HW = cm.H100_DGX
+
+
+def _plans_equal(a, b) -> bool:
+    """Bit-identical: same algorithm, same totals, same step sequence."""
+    return (
+        a.algorithm == b.algorithm
+        and a.cost == b.cost
+        and [s.state_idx for s in a.plan.steps] == [s.state_idx for s in b.plan.steps]
+        and [s.total for s in a.plan.steps] == [s.total for s in b.plan.steps]
+    )
+
+
+def bench_point(n: int, collective: str, repeats: int = 3) -> Dict:
+    g0 = T.ring(n)
+    sizes = [m * MB for m in SIZES_MB]
+    req = CollectiveRequest(collective, n, sizes[0], algorithm="paper_default")
+
+    # best-of-N: each leg is deterministic work, so the minimum is the true
+    # cost and the comparison survives noisy-neighbor/GC interference
+    loop_s = float("inf")
+    loop_plans = None
+    loop_routing = 0
+    for _ in range(repeats):
+        plans, total, routing = [], 0.0, 0
+        for d in sizes:
+            # pre-split behavior: every plan re-derives routing factors
+            clear_planner_caches(keep_shortest_paths=True)
+            t0 = time.perf_counter()
+            plans.append(plan_collective(replace(req, buffer_bytes=d), g0, HW))
+            total += time.perf_counter() - t0
+            routing += cm.STRUCTURE_TABLE.stats.routing_calls
+        if total < loop_s:
+            loop_s = total
+        loop_plans = plans
+        loop_routing = routing
+
+    sweep_s = float("inf")
+    sweep_plans = None
+    sweep_routing = 0
+    for _ in range(repeats):
+        clear_planner_caches(keep_shortest_paths=True)
+        t0 = time.perf_counter()
+        sweep_plans = plan_collective_sweep(req, sizes, g0, HW)
+        sweep_s = min(sweep_s, time.perf_counter() - t0)
+        sweep_routing = cm.STRUCTURE_TABLE.stats.routing_calls
+
+    identical = all(_plans_equal(a, b) for a, b in zip(loop_plans, sweep_plans))
+    assert identical, f"sweep != loop at n={n} {collective}"
+    return {
+        "n": n,
+        "collective": collective,
+        "sizes_mb": list(SIZES_MB),
+        "loop_s": loop_s,
+        "sweep_s": sweep_s,
+        "speedup": loop_s / sweep_s if sweep_s > 0 else float("inf"),
+        "loop_routing_calls": loop_routing,
+        "sweep_routing_calls": sweep_routing,
+    }
+
+
+def bench_single_plan_latency(repeats: int = 3) -> float:
+    """Cold direct-AllToAll plan at n = 128 (§4.1 <1 s budget); best-of-N."""
+    req = CollectiveRequest("all_to_all", 128, 32 * MB, algorithm="direct")
+    g0 = T.ring(128)
+    plan_collective(req, g0, HW)  # warm numpy/scipy; planner caches cleared next
+    best = float("inf")
+    for _ in range(repeats):
+        clear_planner_caches()
+        t0 = time.perf_counter()
+        plan_collective(req, g0, HW)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="n=16 only, assert guards, no JSON write (CI)")
+    ap.add_argument("--out", default="BENCH_planner.json")
+    args = ap.parse_args()
+
+    # warm library imports (scipy, numpy ufunc setup) so neither side of the
+    # comparison is billed for one-time process initialisation
+    plan_collective(
+        CollectiveRequest("reduce_scatter", 8, MB, algorithm="paper_default"),
+        T.ring(8), HW,
+    )
+
+    ns = (16,) if args.smoke else (16, 64, 128)
+    points: List[Dict] = []
+    for n in ns:
+        for coll in COLLECTIVES:
+            p = bench_point(n, coll)
+            points.append(p)
+            print(
+                f"n={p['n']:<4} {p['collective']:<15} "
+                f"loop {p['loop_s']*1e3:8.1f} ms  sweep {p['sweep_s']*1e3:7.1f} ms  "
+                f"{p['speedup']:5.1f}x   routing {p['loop_routing_calls']} -> "
+                f"{p['sweep_routing_calls']}"
+            )
+
+    result: Dict = {"sweep_points": points, "smoke": args.smoke}
+
+    if args.smoke:
+        # regression guards.  The deterministic one is the routing-call
+        # count (the sweep must reuse one structure phase); the wall-clock
+        # bar is deliberately loose so a noisy CI runner can't flake it
+        # (observed locally: 3.7–10x).
+        for p in points:
+            assert p["sweep_routing_calls"] * 2 <= p["loop_routing_calls"], (
+                f"structure phase not amortized at n={p['n']} "
+                f"{p['collective']}: {p['sweep_routing_calls']} vs "
+                f"{p['loop_routing_calls']} routing calls"
+            )
+            assert p["speedup"] >= 1.3, (
+                f"plan_sweep regression: only {p['speedup']:.2f}x at "
+                f"n={p['n']} {p['collective']}"
+            )
+        print("smoke OK: sweeps amortize routing and stay faster than the loop")
+        return
+
+    latency = bench_single_plan_latency()
+    result["n128_direct_alltoall_plan_s"] = latency
+    print(f"n=128 direct all_to_all cold plan: {latency*1e3:.1f} ms")
+
+    n64 = [p for p in points if p["n"] == 64]
+    assert min(p["speedup"] for p in n64) >= 5.0, (
+        "acceptance: >=5x sweep speedup at n=64",
+        [(p["collective"], p["speedup"]) for p in n64],
+    )
+    assert latency < 1.0, f"n=128 direct a2a plan took {latency:.2f}s (budget 1s)"
+
+    Path(args.out).write_text(json.dumps(result, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

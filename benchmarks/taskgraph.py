@@ -84,6 +84,33 @@ def allreduce_time(
     ).total
 
 
+def allreduce_times_sweep(
+    scheme: CommScheme,
+    session: PcclSession,
+    n: int,
+    sizes: Sequence[float],
+) -> List[float]:
+    """Price one AllReduce per bucket size, batched.
+
+    PCCL schemes go through ``PcclSession.plan_sweep``: one size-independent
+    structure phase prices every gradient bucket.  Equal to per-size
+    ``plan`` calls from the same fabric state — bit-identical for
+    power-of-two bucket ratios (so the default homogeneous per-layer
+    pricing below matches the old one-plan-per-layer loop exactly), to the
+    last ulp for arbitrary heterogeneous buckets."""
+    if scheme.kind == "pccl":
+        return [
+            p.cost
+            for p in session.plan_sweep("all_reduce", sizes, n=n, algorithm="auto")
+        ]
+    return [
+        session.baseline(
+            "all_reduce", scheme.algorithm, d, n=n, dims=scheme.dims
+        ).total
+        for d in sizes
+    ]
+
+
 def p2p_time(scheme: CommScheme, topo: T.Topology, src: int, dst: int,
              nbytes: float, hw: cm.HardwareParams) -> float:
     if scheme.kind == "pccl":
@@ -108,11 +135,22 @@ def simulate_training(
     hw: cm.HardwareParams,
     *,
     pipeline_stages: int = 1,
+    grad_buckets: Optional[Sequence[float]] = None,
 ) -> SimResult:
     """One data-parallel training iteration on n GPUs (paper Fig. 12 setup:
     the optimized strategy is data-parallel with per-layer gradient
     AllReduce; with pipeline_stages>1, stage boundaries add P2P transfers
-    prioritized per §6)."""
+    prioritized per §6).
+
+    ``grad_buckets`` optionally gives each layer its own gradient bucket
+    size (Fig. 10b-style heterogeneous buckets); default is one
+    ``wl.layer_grad_bytes()`` bucket per layer.  Warm layers are priced in
+    a single batched ``plan_sweep`` over the distinct bucket sizes, all
+    from the post-layer-1 fabric state — the same steady-state
+    approximation the homogeneous model always used (one warm cost × L−1),
+    so alternating bucket sizes whose plans end on different topologies
+    price each layer cold-from-steady-state rather than threading fabric
+    layer to layer."""
     n = topo.n
     std = [T.ring(n), T.torus2d(*T.square_dims2(n))]
     # One session per simulated job: PCCL plans thread fabric state across the
@@ -132,10 +170,24 @@ def simulate_training(
         comm += p2p_time(scheme, topo, 0, 1, wl.p2p_bytes(), hw)
 
     # per-layer gradient AllReduce (the paper buckets by layer; Fig. 10b
-    # shows 1–64 MB buffers — one d_model² bucket per layer lands mid-range)
-    ar_cold = allreduce_time(scheme, session, n, wl.layer_grad_bytes())
-    ar_warm = allreduce_time(scheme, session, n, wl.layer_grad_bytes())
-    comm += ar_cold + (wl.n_layers - 1) * ar_warm
+    # shows 1–64 MB buffers — one d_model² bucket per layer lands mid-range).
+    # Layer 1 plans cold and threads the fabric; layers 2..L are then priced
+    # warm in one batched sweep over the distinct bucket sizes.
+    buckets = (
+        list(grad_buckets)
+        if grad_buckets is not None
+        else [wl.layer_grad_bytes()] * wl.n_layers
+    )
+    if len(buckets) != wl.n_layers:
+        raise ValueError(
+            f"got {len(buckets)} grad buckets for {wl.n_layers} layers"
+        )
+    ar_cold = allreduce_time(scheme, session, n, buckets[0])
+    warm_sizes = sorted(set(buckets[1:]))
+    warm = dict(
+        zip(warm_sizes, allreduce_times_sweep(scheme, session, n, warm_sizes))
+    )
+    comm += ar_cold + sum(warm[b] for b in buckets[1:])
 
     it = compute + comm
     return SimResult(

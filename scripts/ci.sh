@@ -12,5 +12,8 @@ cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # fast lint: every module must at least byte-compile
 python -m compileall -q src
+# planner perf smoke (n=16): plan_sweep must stay bit-identical to the
+# per-size plan() loop and meaningfully faster; fails fast on regression
+python -m benchmarks.planner_bench --smoke
 # --durations keeps slow planner tests visible as the suite grows
 exec python -m pytest -x -q --durations=10 "$@"

@@ -25,7 +25,7 @@ from .backends import (
     register_backend,
 )
 from .communicator import Communicator, subgroup_schedule
-from .session import CacheStats, PcclSession, PlanCache
+from .session import CacheStats, PcclSession, PlanCache, StructureCache
 
 __all__ = [
     "Backend",
@@ -34,6 +34,7 @@ __all__ = [
     "InterpBackend",
     "PcclSession",
     "PlanCache",
+    "StructureCache",
     "SimBackend",
     "XlaBackend",
     "get_backend",

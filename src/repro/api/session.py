@@ -5,10 +5,16 @@ collective request and the current fabric state, synthesizes the cheapest
 reconfiguration-aware execution.  :class:`PcclSession` is that entry point.
 It improves on the free-function facade (``repro.core.pccl``) in two ways:
 
-* **Plan cache** — plans are memoized by
+* **Two-level plan cache** — plans are memoized by
   ``(collective, n, nbytes, algorithm, dims, fabric-fingerprint)``, so a
   training loop that issues the same gradient all-reduce every step plans
-  once.  Hit/miss accounting is exposed via :attr:`PcclSession.stats`.
+  once.  Underneath, a *structure cache* keyed without ``nbytes`` holds the
+  planner's size-independent routing/transition tables, so a plan-cache
+  miss at a new buffer size (a sweep, a new gradient bucket) skips all
+  routing and pays only the cheap numeric phase.  Hit/miss accounting is
+  exposed via :attr:`PcclSession.stats` / :attr:`PcclSession.structure_stats`,
+  and :meth:`PcclSession.plan_sweep` prices a whole list of buffer sizes in
+  one batched numeric pass.
 * **Fabric-state threading** — the final topology of plan *k* becomes the
   initial topology ``G0`` of plan *k+1*.  Back-to-back collectives therefore
   stop paying for reconfigurations the fabric already has: e.g. a repeated
@@ -32,8 +38,9 @@ from repro.core.pccl import (
     CollectiveRequest,
     PcclPlan,
     default_standard_set,
-    plan_collective,
+    plan_collective_sweep,
 )
+from repro.core.planner import PlanStructure
 from repro.core import schedules as S
 from repro.core.topology import Edge, Topology, ring
 
@@ -42,6 +49,8 @@ if TYPE_CHECKING:  # pragma: no cover
 
 # (collective, n, nbytes, algorithm, dims, fabric edge-set fingerprint)
 PlanKey = Tuple[str, int, float, str, Optional[Tuple[int, ...]], FrozenSet[Edge]]
+# PlanKey minus nbytes: everything a plan's *structure* depends on
+StructureKey = Tuple[str, int, str, Optional[Tuple[int, ...]], FrozenSet[Edge]]
 
 
 @dataclass(frozen=True)
@@ -110,6 +119,18 @@ class PlanCache:
             )
 
 
+class StructureCache(PlanCache):
+    """First level of the session's two-level plan cache.
+
+    Maps a :data:`StructureKey` — a plan key *without* ``nbytes`` — to the
+    per-candidate-algorithm ``{algorithm: PlanStructure}`` bundle produced
+    by the planner's size-independent phase.  A plan-cache miss at a new
+    buffer size reuses the bundle and pays only the cheap numeric phase;
+    only a new (collective, fabric, algorithm-mode) combination routes.
+    Same bounded lock-guarded LRU semantics as :class:`PlanCache`.
+    """
+
+
 class PcclSession:
     """Stateful planning session over one photonic fabric.
 
@@ -130,6 +151,11 @@ class PcclSession:
         need cold-start numbers pass False.
       max_cached_plans: LRU bound on the plan cache (evictions show up in
         :attr:`stats`).
+      max_cached_structures: LRU bound on the structure cache — the first
+        level of the two-level cache, keyed without ``nbytes``, holding the
+        planner's size-independent routing/transition tables.  A plan-cache
+        miss that hits here (e.g. a new buffer size over a known fabric)
+        skips all routing and pays only the numeric phase.
     """
 
     def __init__(
@@ -140,10 +166,12 @@ class PcclSession:
         *,
         thread_fabric: bool = True,
         max_cached_plans: int = 4096,
+        max_cached_structures: int = 512,
     ) -> None:
         self.hw = hw
         self.thread_fabric = thread_fabric
         self.cache = PlanCache(max_entries=max_cached_plans)
+        self.structures = StructureCache(max_entries=max_cached_structures)
         # plan() is a read-plan-store-thread sequence over fabric state;
         # serialize it so concurrent planners never start from a topology
         # the fabric doesn't hold (distinct sessions still plan in parallel)
@@ -192,6 +220,35 @@ class PcclSession:
         return self._default_n
 
     # ------------------------------------------------------------ planning
+    def _plan_missing(
+        self,
+        collective: str,
+        sizes: Sequence[float],
+        n: int,
+        g0: Topology,
+        algorithm: str,
+        dims_t: Optional[Tuple[int, ...]],
+        dims: Optional[Sequence[int]],
+    ) -> List[PcclPlan]:
+        """Plan ``sizes`` through the structure cache (caller holds the
+        plan lock and has already missed the per-``nbytes`` plan cache)."""
+        skey: StructureKey = (collective, n, algorithm, dims_t, g0.edges)
+        bundle: Optional[Dict[str, PlanStructure]] = self.structures.lookup(skey)
+        if bundle is None:
+            bundle = {}
+        plans = plan_collective_sweep(
+            CollectiveRequest(collective, n, sizes[0], algorithm=algorithm),
+            sizes,
+            g0,
+            self.hw,
+            standard=self.standard_set(n),
+            dims=dims,
+            structure_for=bundle.get,
+            on_structure=bundle.__setitem__,
+        )
+        self.structures.store(skey, bundle)
+        return plans
+
     def plan(
         self,
         collective: str,
@@ -205,29 +262,73 @@ class PcclSession:
         with self._plan_lock:
             n = self._resolve_n(n)
             g0 = self.fabric(n)
+            dims_t = tuple(dims) if dims is not None else None
             key: PlanKey = (
                 collective,
                 n,
                 float(nbytes),
                 algorithm,
-                tuple(dims) if dims is not None else None,
+                dims_t,
                 g0.edges,
             )
             plan = self.cache.lookup(key)
             if plan is None:
-                plan = plan_collective(
-                    CollectiveRequest(
-                        collective, n, float(nbytes), algorithm=algorithm
-                    ),
-                    g0,
-                    self.hw,
-                    standard=self.standard_set(n),
-                    dims=dims,
-                )
+                plan = self._plan_missing(
+                    collective, [float(nbytes)], n, g0, algorithm, dims_t, dims
+                )[0]
                 self.cache.store(key, plan)
             if self.thread_fabric and plan.final_topology is not None:
                 self._fabric[n] = plan.final_topology
             return plan
+
+    def plan_sweep(
+        self,
+        collective: str,
+        sizes: Sequence[float],
+        *,
+        n: Optional[int] = None,
+        algorithm: str = "paper_default",
+        dims: Optional[Sequence[int]] = None,
+    ) -> List[PcclPlan]:
+        """Plan ``collective`` at every buffer size in ``sizes``, from the
+        *current* fabric state, in one batched numeric phase.
+
+        Returns one plan per size, equal to calling :meth:`plan` per size
+        on a non-threading session — bit-identical when size ratios are
+        powers of two (the common sweep layout), to the last ulp otherwise
+        (sweeps rescale one template schedule; see
+        :func:`repro.core.planner.plan_sweep`).  A sweep prices
+        alternatives, so every size starts from the same fabric state and —
+        unlike :meth:`plan` — the fabric is **not** threaded afterwards.
+        Results feed the per-``nbytes`` plan cache both ways:
+        already-planned sizes are served from it, and newly planned sizes
+        are stored for later :meth:`plan` calls.
+        """
+        with self._plan_lock:
+            n = self._resolve_n(n)
+            g0 = self.fabric(n)
+            dims_t = tuple(dims) if dims is not None else None
+            sizes_f = [float(d) for d in sizes]
+            keys: List[PlanKey] = [
+                (collective, n, d, algorithm, dims_t, g0.edges) for d in sizes_f
+            ]
+            plans: Dict[int, PcclPlan] = {}
+            missing: List[int] = []
+            for k, key in enumerate(keys):
+                hit = self.cache.lookup(key)
+                if hit is not None:
+                    plans[k] = hit
+                else:
+                    missing.append(k)
+            if missing:
+                fresh = self._plan_missing(
+                    collective, [sizes_f[k] for k in missing], n, g0,
+                    algorithm, dims_t, dims,
+                )
+                for k, p in zip(missing, fresh):
+                    self.cache.store(keys[k], p)
+                    plans[k] = p
+            return [plans[k] for k in range(len(sizes_f))]
 
     def choose_algorithm(
         self, collective: str, nbytes: float, *, n: Optional[int] = None
@@ -258,6 +359,11 @@ class PcclSession:
     @property
     def stats(self) -> CacheStats:
         return self.cache.stats
+
+    @property
+    def structure_stats(self) -> CacheStats:
+        """Hit/miss accounting for the size-independent structure cache."""
+        return self.structures.stats
 
     @property
     def reconfig_mode(self) -> str:

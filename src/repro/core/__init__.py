@@ -32,9 +32,19 @@ from .pccl import (
     baseline_cost,
     choose_algorithm,
     plan_collective,
+    plan_collective_sweep,
     theoretical_cost,
 )
-from .planner import Plan, PlanStep, plan, plan_bruteforce, plan_milp
+from .planner import (
+    Plan,
+    PlanStep,
+    PlanStructure,
+    build_structure,
+    plan,
+    plan_bruteforce,
+    plan_milp,
+    plan_sweep,
+)
 from .schedules import Round, Schedule, Transfer, get_schedule, split_for_fanout
 from .simulate import SimulationError, simulate, verify
 from .topology import (

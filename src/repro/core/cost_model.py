@@ -19,7 +19,7 @@ from __future__ import annotations
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass, replace
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
 
 from .schedules import Round, Schedule
 from .topology import Topology, _BIG
@@ -185,30 +185,273 @@ def _scipy_paths(topo: Topology):
     return dist, pred
 
 
-def round_factors(topo: Topology, rnd: Round) -> Tuple[int, int, bool]:
-    """Algorithm 2 lines 1–14: (dilation, congestion, feasible).
+PairKey = FrozenSet[Tuple[Tuple[int, int], int]]
 
-    Vectorized: all transfers' shortest paths are walked simultaneously via
-    the predecessor matrix (one numpy step per hop depth)."""
+
+# Bounded LRU over (n, edges) → component labels for *linear* graphs (every
+# node: out-degree ≤ 1 and in-degree ≤ 1, i.e. unions of simple paths and
+# cycles — exactly the ideal graphs of permutation rounds, the planner's
+# dominant candidate states).  None is cached too: "not linear" is as
+# expensive to rediscover as the labels are to build.
+_LINEAR_CACHE: "OrderedDict[Tuple, Optional[Tuple]]" = OrderedDict()
+_LINEAR_CACHE_MAX = 512
+_LINEAR_CACHE_LOCK = threading.Lock()
+
+
+def _linear_labels(topo: Topology):
+    """(comp, pos, off, length, cyclic, n_slots) labels for a linear graph,
+    or None if ``topo`` is not linear.
+
+    ``comp[v]``/``pos[v]`` place each node on its path/cycle; ``off[c]``
+    gives component ``c`` a private block of ``length[c] + 1`` edge slots
+    (slot ``p`` = the edge out of position ``p``), so all components share
+    one flat difference array when counting edge loads."""
     import numpy as np
 
-    pairs = [(t.src, t.dst) for t in rnd.transfers if t.src != t.dst]
+    key = (topo.n, topo.edges)
+    with _LINEAR_CACHE_LOCK:
+        if key in _LINEAR_CACHE:
+            _LINEAR_CACHE.move_to_end(key)
+            return _LINEAR_CACHE[key]
+
+    n = topo.n
+    succ = [-1] * n
+    pred = [-1] * n
+    linear = True
+    for u, v in topo.edges:
+        if succ[u] != -1 or pred[v] != -1:
+            linear = False
+            break
+        succ[u] = v
+        pred[v] = u
+
+    labels = None
+    if linear:
+        comp = [-1] * n
+        pos = [0] * n
+        length: List[int] = []
+        cyclic: List[bool] = []
+        for s in range(n):  # paths (and isolated nodes) start where pred is unset
+            if pred[s] == -1:
+                u, p, c = s, 0, len(length)
+                while u != -1:
+                    comp[u] = c
+                    pos[u] = p
+                    p += 1
+                    u = succ[u]
+                length.append(p)
+                cyclic.append(False)
+        for s in range(n):  # everything left lies on a cycle
+            if comp[s] == -1:
+                u, p, c = s, 0, len(length)
+                while comp[u] == -1:
+                    comp[u] = c
+                    pos[u] = p
+                    p += 1
+                    u = succ[u]
+                length.append(p)
+                cyclic.append(True)
+        length_a = np.asarray(length, dtype=np.int64)
+        off = np.zeros(len(length) + 1, dtype=np.int64)
+        np.cumsum(length_a + 1, out=off[1:])
+        labels = (
+            np.asarray(comp, dtype=np.int64),
+            np.asarray(pos, dtype=np.int64),
+            off[:-1],
+            length_a,
+            np.asarray(cyclic, dtype=bool),
+            int(off[-1]),
+        )
+
+    with _LINEAR_CACHE_LOCK:
+        _LINEAR_CACHE[key] = labels
+        _LINEAR_CACHE.move_to_end(key)
+        while len(_LINEAR_CACHE) > _LINEAR_CACHE_MAX:
+            _LINEAR_CACHE.popitem(last=False)
+    return labels
+
+
+def _route_pairs_linear(labels, srcs, dsts) -> Tuple[int, int, bool]:
+    """Route on a linear graph: unique paths ⇒ exact dilation/congestion.
+
+    Distance is position arithmetic per component; per-edge load is an
+    interval count (difference array over each component's edge slots,
+    cycles split at the wrap point).  ``srcs``/``dsts`` are index arrays."""
+    import numpy as np
+
+    comp, pos, off, length, cyclic, n_slots = labels
+    cu = comp[srcs]
+    if (cu != comp[dsts]).any():
+        return (_BIG, _BIG, False)
+    L = length[cu]
+    cyc = cyclic[cu]
+    pu = pos[srcs]
+    pv = pos[dsts]
+    d = pv - pu
+    if (~cyc & (d < 0)).any():  # backwards along a path: unreachable
+        return (_BIG, _BIG, False)
+    d = np.where(cyc, d % L, d)  # src != dst on one comp ⇒ d ≥ 1
+    dilation = int(d.max())
+
+    base = off[cu]
+    wrap = cyc & (pv < pu)
+    plus1 = base + pu
+    minus1 = np.where(wrap, base + L, base + pv)
+    plus2 = base[wrap]
+    minus2 = (base + pv)[wrap]
+    idx = np.concatenate([plus1, plus2, minus1, minus2])
+    sgn = np.ones(idx.shape[0])
+    sgn[plus1.shape[0] + plus2.shape[0]:] = -1.0
+    diff = np.bincount(idx, weights=sgn, minlength=n_slots + 1)
+    return (dilation, int(diff.cumsum().max()), True)
+
+
+class _StackedLinear:
+    """Label arrays of many linear topologies stacked for batch routing.
+
+    Component ids and edge slots are globalized (state ``s`` owns slot block
+    ``[bounds[s], bounds[s+1])``), so one set of vectorized ops routes a
+    round against *every* linear candidate state simultaneously — the
+    planner's structure phase is O(distinct round structures) batched calls
+    instead of O(structures × states) scalar ones."""
+
+    def __init__(self, labels_list: Sequence[Tuple]) -> None:
+        import numpy as np
+
+        comp_rows, pos_rows, lens, cycs, offs = [], [], [], [], []
+        comp_base = 0
+        slot_base = 0
+        bounds = [0]
+        for comp, pos, off, length, cyclic, n_slots in labels_list:
+            comp_rows.append(comp + comp_base)
+            pos_rows.append(pos)
+            offs.append(off + slot_base)
+            lens.append(length)
+            cycs.append(cyclic)
+            comp_base += length.shape[0]
+            slot_base += n_slots
+            bounds.append(slot_base)
+        self.comp = np.stack(comp_rows)          # (S, n) global comp ids
+        self.pos = np.stack(pos_rows)            # (S, n)
+        self.glen = np.concatenate(lens)         # (C,)
+        self.gcyc = np.concatenate(cycs)         # (C,)
+        self.goff = np.concatenate(offs)         # (C,) global slot offsets
+        self.bounds = np.asarray(bounds)         # (S+1,)
+        self.n_slots = slot_base
+
+
+def _route_linear_batch(stacked: "_StackedLinear", srcs, dsts):
+    """(dilation, congestion, feasible) arrays over all stacked states.
+
+    Identical arithmetic to :func:`_route_pairs_linear` per state; the diff
+    arrays of all states share one flat buffer (each state's block sums to
+    zero, so a single cumsum segments cleanly at block boundaries)."""
+    import numpy as np
+
+    cu = stacked.comp[:, srcs]                   # (S, P)
+    cv = stacked.comp[:, dsts]
+    L = stacked.glen[cu]
+    cyc = stacked.gcyc[cu]
+    pu = stacked.pos[:, srcs]
+    pv = stacked.pos[:, dsts]
+    d = pv - pu
+    ok = (cu == cv) & (cyc | (d > 0))
+    feas = ok.all(axis=1)                        # (S,)
+    d = np.where(cyc, d % L, d)  # feasible rows: every entry ≥ 1
+    dil = np.where(feas, d.max(axis=1), _BIG)
+
+    cong = np.full(feas.shape[0], _BIG, dtype=np.int64)
+    fidx = np.nonzero(feas)[0]
+    if fidx.shape[0]:
+        base = stacked.goff[cu[fidx]]            # (F, P)
+        pu_f, pv_f, L_f = pu[fidx], pv[fidx], L[fidx]
+        wrap = stacked.gcyc[cu[fidx]] & (pv_f < pu_f)
+        plus1 = (base + pu_f).ravel()
+        minus1 = np.where(wrap, base + L_f, base + pv_f).ravel()
+        plus2 = base[wrap]                       # bool-indexing flattens
+        minus2 = (base + pv_f)[wrap]
+        idx = np.concatenate([plus1, plus2, minus1, minus2])
+        sgn = np.ones(idx.shape[0])
+        sgn[plus1.shape[0] + plus2.shape[0]:] = -1.0
+        run = np.bincount(idx, weights=sgn, minlength=stacked.n_slots + 1).cumsum()
+        # each feasible block's running load; interleaved infeasible blocks
+        # contributed nothing so their slots sit at exactly 0
+        seg = np.maximum.reduceat(run, stacked.bounds[fidx])
+        cong[fidx] = seg.astype(np.int64)
+    return dil, cong, feas
+
+
+def pairs_of(rnd: Round) -> List[Tuple[int, int]]:
+    """The (src, dst) pairs of a round that actually move data."""
+    return [(t.src, t.dst) for t in rnd.transfers if t.src != t.dst]
+
+
+def round_structure_key(pairs: Sequence[Tuple[int, int]]) -> PairKey:
+    """Canonical pair-*multiset* key of a round's structure.
+
+    Dilation/congestion (Alg. 2) depend only on which (src, dst) pairs a
+    round routes and how many copies of each — not on the payload size and
+    not on transfer order.  Rounds sharing this key share routing factors on
+    every topology."""
+    from collections import Counter
+
+    return frozenset(Counter(pairs).items())
+
+
+def _route_pairs(
+    topo: Topology,
+    pairs: Sequence[Tuple[int, int]],
+    *,
+    allow_fast: bool = True,
+    pair_arrays=None,
+) -> Tuple[int, int, bool]:
+    """Algorithm 2 lines 1–14 on explicit pairs: (dilation, congestion,
+    feasible).  ``allow_fast=False`` forces the scipy general path (used by
+    the property tests to cross-check the fast paths).  ``pair_arrays`` is
+    an optional prebuilt ``(srcs, dsts)`` index-array pair — callers pricing
+    one round against many topologies build it once.
+
+    General path is vectorized: all transfers' shortest paths are walked
+    simultaneously via the predecessor matrix (one numpy step per hop
+    depth)."""
+    import numpy as np
+
     if not pairs:
         return (0, 0, True)
+    if pair_arrays is None:
+        pair_arrays = (
+            np.asarray([p[0] for p in pairs]),
+            np.asarray([p[1] for p in pairs]),
+        )
+    srcs, dsts = pair_arrays
 
-    # Fast path 1: every transfer is a direct circuit (a round priced on its
-    # own ideal graph — the planner's most common query).
-    if all(p in topo.edges for p in pairs):
+    # Fast path 1: linear graphs (out-degree ≤ 1 AND in-degree ≤ 1 — unions
+    # of simple paths/cycles, i.e. permutation rounds' ideal graphs, the
+    # planner's dominant candidate states): paths are unique and
+    # distances/edge loads fall out of cached component position labels,
+    # vectorized over all transfers at once.  Subsumes the
+    # round-on-its-own-ideal-graph query (every pair a direct circuit).
+    if allow_fast:
+        labels = _linear_labels(topo)
+        if labels is not None:
+            return _route_pairs_linear(labels, srcs, dsts)
+
+    # Fast path 2: every transfer is a direct circuit on a non-linear
+    # topology.  Any length-1 shortest path is necessarily the direct edge,
+    # so this agrees with the general path exactly.
+    if allow_fast and all(p in topo.edges for p in pairs):
         from collections import Counter
 
         cong = max(Counter(pairs).values())
         return (1, cong, True)
 
-    # Fast path 2: functional graphs (out-degree ≤ 1, i.e. other rounds'
-    # ideal graphs): the only path from u is the unique outgoing chain.
+    # Fast path 3: other functional graphs (out-degree ≤ 1 but some node
+    # receives twice): the only path from u is the unique outgoing chain.
     out: Dict[int, int] = {}
-    functional = True
+    functional = allow_fast
     for u, v in topo.edges:
+        if not functional:
+            break
         if u in out:
             functional = False
             break
@@ -228,8 +471,6 @@ def round_factors(topo: Topology, rnd: Round) -> Tuple[int, int, bool]:
             dil = max(dil, hops)
         return (dil, max(edge_usage.values(), default=0), True)
 
-    srcs = np.asarray([p[0] for p in pairs])
-    dsts = np.asarray([p[1] for p in pairs])
     dist, pred = _scipy_paths(topo)
     d = dist[srcs, dsts]
     if not np.all(np.isfinite(d)):
@@ -252,12 +493,142 @@ def round_factors(topo: Topology, rnd: Round) -> Tuple[int, int, bool]:
     return (dilation, int(counts.max()), True)
 
 
-def comm_cost_round(
-    topo: Topology, rnd: Round, w: Optional[float], hw: HardwareParams
+@dataclass(frozen=True)
+class StructureStats:
+    """Hit/miss accounting for :class:`StructureTable`.  ``misses`` is the
+    number of actual routing computations (the quantity the planner
+    benchmarks report as *routing calls*)."""
+
+    hits: int
+    misses: int
+    size: int
+    evictions: int = 0
+
+    @property
+    def routing_calls(self) -> int:
+        return self.misses
+
+
+class StructureTable:
+    """Cache of size-independent routing factors (the planner's *structure*
+    phase).
+
+    Keyed by ``(topology edge-set, round pair-multiset)``: dilation and
+    congestion are integers that depend only on the candidate topology and
+    which pairs a round routes, never on α/β/w.  A buffer-size sweep
+    therefore prices every size from one routing pass, and ring/bucket
+    schedules — whose rounds share a single pair set — collapse to one
+    routing query per candidate topology.
+
+    Lock-guarded bounded LRU (same discipline as ``_SP_CACHE``): sessions
+    may plan from multiple threads, and eviction drops only the
+    least-recently-used entry.
+    """
+
+    def __init__(self, max_entries: int = 65536) -> None:
+        if max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        self._table: "OrderedDict[Tuple, Tuple[int, int, bool]]" = OrderedDict()
+        self.max_entries = max_entries
+        self._lock = threading.Lock()
+        self._hits = 0
+        self._misses = 0
+        self._evictions = 0
+
+    def lookup(
+        self, topo: Topology, key: PairKey
+    ) -> Optional[Tuple[int, int, bool]]:
+        """Cached factors or None; counts a hit or a miss (a miss means the
+        caller is about to route — ``misses`` tallies routing computations)."""
+        full_key = (topo.n, topo.edges, key)
+        with self._lock:
+            hit = self._table.get(full_key)
+            if hit is not None:
+                self._hits += 1
+                self._table.move_to_end(full_key)
+            else:
+                self._misses += 1
+            return hit
+
+    def store(
+        self, topo: Topology, key: PairKey, factors: Tuple[int, int, bool]
+    ) -> None:
+        full_key = (topo.n, topo.edges, key)
+        with self._lock:
+            self._table[full_key] = factors
+            self._table.move_to_end(full_key)
+            while len(self._table) > self.max_entries:
+                self._table.popitem(last=False)
+                self._evictions += 1
+
+    def factors(
+        self,
+        topo: Topology,
+        pairs: Sequence[Tuple[int, int]],
+        key: Optional[PairKey] = None,
+        pair_arrays=None,
+    ) -> Tuple[int, int, bool]:
+        """(dilation, congestion, feasible) for routing ``pairs`` on
+        ``topo``, computing at most once per (edge-set, pair-multiset).
+        ``key``/``pair_arrays`` let bulk callers amortize key and index
+        construction across topologies."""
+        if not pairs:
+            return (0, 0, True)
+        if key is None:
+            key = round_structure_key(pairs)
+        hit = self.lookup(topo, key)
+        if hit is not None:
+            return hit
+        factors = _route_pairs(topo, pairs, pair_arrays=pair_arrays)
+        self.store(topo, key, factors)
+        return factors
+
+    def clear(self) -> None:
+        with self._lock:
+            self._table.clear()
+            self._hits = 0
+            self._misses = 0
+            self._evictions = 0
+
+    @property
+    def stats(self) -> StructureStats:
+        with self._lock:
+            return StructureStats(
+                self._hits, self._misses, len(self._table), self._evictions
+            )
+
+
+#: Process-wide structure table; all ``round_factors`` queries go through it.
+STRUCTURE_TABLE = StructureTable()
+
+
+def round_factors(topo: Topology, rnd: Round) -> Tuple[int, int, bool]:
+    """Algorithm 2 lines 1–14: (dilation, congestion, feasible), cached by
+    ``(topology edge-set, round pair-multiset)`` in :data:`STRUCTURE_TABLE`."""
+    return STRUCTURE_TABLE.factors(topo, pairs_of(rnd))
+
+
+def clear_structure_caches(keep_shortest_paths: bool = False) -> None:
+    """Drop the routing caches in this module.  Benchmarks call this to
+    time cold planning; ``keep_shortest_paths=True`` retains ``_SP_CACHE``
+    (which predates the structure table and persists across ``plan()``
+    calls), for baselines that model the pre-split planner faithfully."""
+    STRUCTURE_TABLE.clear()
+    if not keep_shortest_paths:
+        with _SP_CACHE_LOCK:
+            _SP_CACHE.clear()
+    with _LINEAR_CACHE_LOCK:
+        _LINEAR_CACHE.clear()
+
+
+def round_cost_from_factors(
+    dilation: int, congestion: int, feasible: bool, size: float, hw: HardwareParams
 ) -> RoundCost:
-    """Algorithm 2: α·dilation + β·congestion·w, or the large penalty."""
-    size = rnd.size if w is None else w
-    dilation, congestion, feasible = round_factors(topo, rnd)
+    """Price routing factors at one size: α·dilation + β·congestion·w.
+
+    The single source of the Alg. 2 arithmetic — :func:`comm_cost_round` and
+    the planner's batched numeric phase both use it, so per-size plans and
+    ``plan_sweep`` agree bit-for-bit."""
     if not feasible:
         return RoundCost(LARGE_PENALTY, dilation, congestion, 0, 0, 0, 0, False)
     if dilation == 0:  # empty round
@@ -268,6 +639,15 @@ def comm_cost_round(
     con_extra = (congestion - 1) * hw.beta * size
     total = hw.alpha * dilation + hw.beta * congestion * size
     return RoundCost(total, dilation, congestion, alpha_base, beta_base, dil_extra, con_extra, True)
+
+
+def comm_cost_round(
+    topo: Topology, rnd: Round, w: Optional[float], hw: HardwareParams
+) -> RoundCost:
+    """Algorithm 2: α·dilation + β·congestion·w, or the large penalty."""
+    size = rnd.size if w is None else w
+    dilation, congestion, feasible = round_factors(topo, rnd)
+    return round_cost_from_factors(dilation, congestion, feasible, size, hw)
 
 
 @dataclass(frozen=True)

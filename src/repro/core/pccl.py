@@ -21,12 +21,12 @@ exposes to distributed-ML programmers.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, replace
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from . import schedules as S
 from .cost_model import HardwareParams, ScheduleCost, ideal_cost, schedule_cost_fixed
-from .planner import Plan, plan
+from .planner import Plan, PlanStructure, build_structure, plan_sweep
 from .schedules import Schedule
 from .topology import Topology, ring, standard_topologies
 
@@ -123,10 +123,49 @@ def plan_collective(
         collectives.  This free function remains as the stateless planning
         kernel the session calls into (and as a back-compat shim).
     """
+    return plan_collective_sweep(
+        request, [request.buffer_bytes], g0, hw, standard=standard, dims=dims
+    )[0]
+
+
+def plan_collective_sweep(
+    request: CollectiveRequest,
+    sizes: Sequence[float],
+    g0: Topology,
+    hw: HardwareParams,
+    standard: Optional[Sequence[Topology]] = None,
+    dims: Optional[Sequence[int]] = None,
+    structure_for: Optional[Callable[[str], Optional[PlanStructure]]] = None,
+    on_structure: Optional[Callable[[str, PlanStructure], None]] = None,
+) -> List[PcclPlan]:
+    """Plan one collective at many buffer sizes from one fabric state.
+
+    The batched front of :func:`plan_collective`: per candidate algorithm,
+    one size-independent structure phase (``planner.build_structure``)
+    prices every size via ``planner.plan_sweep``, and the cheapest plan is
+    selected *per size* — exactly the arbitration a per-size
+    ``plan_collective`` loop performs.  ``request.buffer_bytes`` is ignored
+    in favour of ``sizes``.
+
+    Each candidate's schedule is *built once* at ``sizes[0]`` and rescaled
+    to the other sizes (schedule generators are the next cost after routing
+    in a sweep; only ``Round.size`` varies with the buffer).  Plans for
+    ``sizes[0]`` are therefore bit-identical to ``plan_collective`` at that
+    size; other sizes are bit-identical whenever their ratio to ``sizes[0]``
+    is a power of two (the common sweep layout) and equal to the last ulp
+    otherwise — see :func:`repro.core.planner.plan_sweep`.
+
+    ``structure_for`` / ``on_structure`` let a caller (the session's
+    two-level cache) reuse structures across calls: ``structure_for(algo)``
+    may return a previously built :class:`PlanStructure` for that candidate
+    algorithm, and ``on_structure(algo, structure)`` is invoked for each one
+    built here.
+    """
     if standard is None:
         standard = default_standard_set(request.n)
-    best: Optional[PcclPlan] = None
-    cands: List[Tuple[str, float]] = []
+    sizes = list(sizes)
+    best: List[Optional[PcclPlan]] = [None] * len(sizes)
+    cands: List[List[Tuple[str, float]]] = [[] for _ in sizes]
     for algo in candidate_algorithms(request.collective, request.n, request.algorithm):
         algo_dims = dims
         if algo_dims is None and algo.startswith("bucket"):
@@ -137,15 +176,31 @@ def plan_collective(
             )
             if min(algo_dims) == 1:
                 continue  # degenerate factorization
-        sched = S.get_schedule(
-            request.collective, algo, request.n, request.buffer_bytes, dims=algo_dims
+        template = S.get_schedule(
+            request.collective, algo, request.n, sizes[0], dims=algo_dims
         )
-        p = plan(g0, standard, sched, hw)
-        cands.append((algo, p.total_cost))
-        if best is None or p.total_cost < best.cost:
-            best = PcclPlan(request, sched, p, ())
-    assert best is not None
-    return PcclPlan(request, best.schedule, best.plan, tuple(cands))
+        structure = structure_for(algo) if structure_for is not None else None
+        if structure is None:
+            structure = build_structure(g0, standard, template, hw)
+            if on_structure is not None:
+                on_structure(algo, structure)
+        plans = plan_sweep(
+            g0, standard, template, hw, sizes, structure=structure
+        )
+        for k, p in enumerate(plans):
+            cands[k].append((algo, p.total_cost))
+            if best[k] is None or p.total_cost < best[k].cost:
+                req_k = (
+                    request
+                    if sizes[k] == request.buffer_bytes
+                    else replace(request, buffer_bytes=sizes[k])
+                )
+                best[k] = PcclPlan(req_k, p.schedule, p, ())
+    out: List[PcclPlan] = []
+    for b, c in zip(best, cands):
+        assert b is not None
+        out.append(PcclPlan(b.request, b.schedule, b.plan, tuple(c)))
+    return out
 
 
 def baseline_cost(

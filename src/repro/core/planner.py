@@ -20,6 +20,26 @@ where the state space is the edge-set-deduplicated union of {G0} ∪ S ∪
 schedule has the *same* ideal graph, so staying on it must not re-pay ``r``
 (paper Eq. 7 charges only on change).
 
+Structure / numeric split
+-------------------------
+Everything the buffer size touches is a *price*; everything expensive is
+*structure*.  The planner therefore runs in two phases:
+
+* **Structure phase** (:func:`build_structure`, size-independent): the
+  deduplicated state set, the per-(round, state) dilation/congestion integer
+  matrices ``(D, C)`` (Algorithm 2 routing, served by
+  ``cost_model.STRUCTURE_TABLE`` keyed on (edge-set, pair-multiset) so
+  structurally identical rounds are routed once), and the pairwise
+  reconfiguration table (``_transition_costs``: an edge-incidence boolean
+  matrix and one vectorized symmetric-difference count, memoized across
+  calls).
+* **Numeric phase** (cheap): price ``(D, C)`` at the requested α/β/w and run
+  the DP.  The DP value table is batched over a *size axis* — ``f`` has shape
+  ``(len(sizes), ns)`` — so :func:`plan_sweep` prices an entire buffer-size
+  sweep from a single structure phase.  ``plan`` is the K=1 special case of
+  the same code path, which makes sweep plans bit-identical to a per-size
+  ``plan`` loop (same step sequence, same totals, same tie-breaking).
+
 The transition cost ``T_i(p, s)`` generalizes the paper's ``r·1[p≠s]``
 (``cost_model.reconfig_cost``):
 
@@ -38,18 +58,32 @@ Cross-checks (used in tests):
   costs are non-uniform), via scipy HiGHS.
 
 All three agree in every reconfiguration mode; the DP runs in
-O(rounds · states²) and plans the largest scale-up domains in well under the
-paper's one-second budget (§4.1).
+O(rounds · states²) *numeric* work after O(distinct round structures ·
+states) routing calls, and plans the largest scale-up domains in well under
+the paper's one-second budget (§4.1).
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, replace
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .cost_model import HardwareParams, RoundCost, comm_cost_round, reconfig_cost
+from .cost_model import (
+    LARGE_PENALTY,
+    STRUCTURE_TABLE,
+    HardwareParams,
+    RoundCost,
+    clear_structure_caches,
+    comm_cost_round,
+    pairs_of,
+    reconfig_cost,
+    round_cost_from_factors,
+    round_structure_key,
+)
 from .schedules import Round, Schedule
 from .topology import Edge, Topology, from_transfers
 
@@ -138,35 +172,231 @@ def build_states(
     return states
 
 
-def _round_costs(
-    states: Sequence[TopoState], schedule: Schedule, hw: HardwareParams
-) -> Tuple[np.ndarray, Dict[Tuple[int, int], RoundCost]]:
-    """(cost, objs): cost[i, s] = CommCost(topo_s, R_i, w_i) (Algorithm 2)
-    and objs[(i, s)] the full RoundCost decomposition."""
+# -------------------------------------------------------------- structure
+
+
+@dataclass(frozen=True, eq=False)
+class PlanStructure:
+    """The size-independent phase of Algorithm 1.
+
+    Holds everything ``plan``/``plan_sweep`` need that does not depend on
+    α/β/w: the deduplicated state set, the ``(rounds × states)`` integer
+    dilation/congestion matrices plus feasibility mask, and the pairwise
+    reconfiguration-cost table.  Building one is the expensive part of
+    planning; pricing it at a size is a handful of vectorized ops.  Sessions
+    cache these keyed *without* ``nbytes`` (api.session.PcclSession).
+    """
+
+    states: Tuple[TopoState, ...]
+    g0_idx: int
+    n_rounds: int
+    dilation: np.ndarray      # (R, ns) int64
+    congestion: np.ndarray    # (R, ns) int64
+    feasible: np.ndarray      # (R, ns) bool
+    enterable: np.ndarray     # (R, ns) bool: Eq. 5 entry constraint
+    trans: np.ndarray         # (ns, ns) float64, read-only
+    round_keys: Tuple         # per-round pair-multiset keys (for validation)
+    # build provenance, checked when a structure is reused (plan_sweep):
+    # trans bakes in these reconfig params, g0_idx this start state
+    g0_edges: FrozenSet[Edge] = frozenset()
+    reconfig_params: Tuple[float, Optional[float]] = (0.0, None)
+
+
+def _round_structures(
+    states: Sequence[TopoState], schedule: Schedule
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray, Tuple]:
+    """(dilation, congestion, feasible, round_keys): Algorithm 2's integer
+    factors for every (round, state).
+
+    Structurally identical rounds (same pair multiset) are routed once and
+    their rows copied — a ring schedule's n−1 rounds are one routing query
+    per state.  Individual (topology, pair-set) queries additionally hit the
+    process-wide ``STRUCTURE_TABLE``."""
+    from .cost_model import _StackedLinear, _linear_labels, _route_linear_batch
+
     n_rounds = len(schedule.rounds)
-    cost = np.empty((n_rounds, len(states)))
-    cost_objs: Dict[Tuple[int, int], RoundCost] = {}
+    ns = len(states)
+    dil = np.zeros((n_rounds, ns), dtype=np.int64)
+    cong = np.zeros((n_rounds, ns), dtype=np.int64)
+    feas = np.ones((n_rounds, ns), dtype=bool)
+
+    # Linear states (permutation ideal graphs — usually most of the state
+    # set) are routed against each distinct round structure in ONE batched
+    # numpy pass over stacked component labels, not per-state calls.
+    lin_states: List[TopoState] = []
+    lin_labels: List = []
+    other_states: List[TopoState] = []
+    for s in states:
+        lab = _linear_labels(s.topo)
+        if lab is not None:
+            lin_states.append(s)
+            lin_labels.append(lab)
+        else:
+            other_states.append(s)
+    stacked = _StackedLinear(lin_labels) if len(lin_states) > 1 else None
+
+    keys = []
+    first_row: Dict = {}
     for i, rnd in enumerate(schedule.rounds):
-        for s in states:
-            rc = comm_cost_round(s.topo, rnd, None, hw)
-            cost[i, s.idx] = rc.total
-            cost_objs[(i, s.idx)] = rc
-    return cost, cost_objs
+        pairs = pairs_of(rnd)
+        key = round_structure_key(pairs)
+        keys.append(key)
+        j = first_row.get(key)
+        if j is not None:
+            dil[i] = dil[j]
+            cong[i] = cong[j]
+            feas[i] = feas[j]
+            continue
+        first_row[key] = i
+        if not pairs:  # empty round: (0, 0, True) on every topology
+            continue
+        arrays = (
+            np.asarray([p[0] for p in pairs]),
+            np.asarray([p[1] for p in pairs]),
+        )
+        scalar_states: Sequence[TopoState] = states
+        if stacked is not None:
+            scalar_states = other_states
+            cached = {}
+            for s in lin_states:
+                hit = STRUCTURE_TABLE.lookup(s.topo, key)
+                if hit is not None:
+                    cached[s.idx] = hit
+            if len(cached) == len(lin_states):
+                for s_idx, (d, c, ok) in cached.items():
+                    dil[i, s_idx], cong[i, s_idx], feas[i, s_idx] = d, c, ok
+            else:
+                bd, bc, bf = _route_linear_batch(stacked, arrays[0], arrays[1])
+                for t, s in enumerate(lin_states):
+                    f3 = (int(bd[t]), int(bc[t]), bool(bf[t]))
+                    if s.idx not in cached:
+                        STRUCTURE_TABLE.store(s.topo, key, f3)
+                    dil[i, s.idx], cong[i, s.idx], feas[i, s.idx] = f3
+        for s in scalar_states:
+            d, c, ok = STRUCTURE_TABLE.factors(s.topo, pairs, key, arrays)
+            dil[i, s.idx] = d
+            cong[i, s.idx] = c
+            feas[i, s.idx] = ok
+    return dil, cong, feas, tuple(keys)
+
+
+def build_structure(
+    g0: Topology,
+    standard: Sequence[Topology],
+    schedule: Schedule,
+    hw: HardwareParams,
+) -> PlanStructure:
+    """Run the size-independent phase once; see :class:`PlanStructure`.
+
+    Only ``schedule``'s round *structure* (pair multisets) matters — its
+    sizes are ignored, so one structure prices any member of a buffer-size
+    sweep."""
+    states = build_states(g0, standard, schedule)
+    dil, cong, feas, keys = _round_structures(states, schedule)
+    trans = _transition_costs(states, hw)
+    enterable = np.array(
+        [[s.enterable_at(i) for s in states] for i in range(len(schedule.rounds))],
+        dtype=bool,
+    ).reshape(len(schedule.rounds), len(states))
+    return PlanStructure(
+        states=tuple(states),
+        g0_idx=_g0_state(states, g0),
+        n_rounds=len(schedule.rounds),
+        dilation=dil,
+        congestion=cong,
+        feasible=feas,
+        enterable=enterable,
+        trans=trans,
+        round_keys=keys,
+        g0_edges=g0.edges,
+        reconfig_params=(hw.reconfig_delay, hw.reconfig_delay_per_link),
+    )
+
+
+# Bounded LRU over (state edge-sets, reconfig params) → transition matrix.
+# A session sweeping buffer sizes re-plans the same (states, hw) pair per
+# size point; the table is dense but tiny (ns² floats), so memoizing it
+# behind the same lock/LRU discipline as _SP_CACHE removes the rebuild.
+_TRANS_CACHE: "OrderedDict[Tuple, np.ndarray]" = OrderedDict()
+_TRANS_CACHE_MAX = 64
+_TRANS_CACHE_LOCK = threading.Lock()
 
 
 def _transition_costs(states: Sequence[TopoState], hw: HardwareParams) -> np.ndarray:
     """trans[p, s] = ReconfCost(topo_p → topo_s); 0 on the diagonal.
 
-    States are deduplicated by edge set, so every off-diagonal entry is a
-    genuine change (serial mode: the constant ``r``, recovering the paper's
-    ``r·1[p≠s]``)."""
+    Vectorized: states become rows of a boolean edge-incidence matrix over
+    the union of all states' directed edges (edges in no state contribute 0
+    to any symmetric difference), and ``|E_p Δ E_s|`` for every pair falls
+    out of one matmul: ``|E_p| + |E_s| − 2·|E_p ∩ E_s|``.  States are
+    deduplicated by edge set, so every off-diagonal entry is a genuine
+    change (serial mode: the constant ``r``, recovering the paper's
+    ``r·1[p≠s]``).
+
+    Memoized per (state edge-sets, reconfiguration params); the returned
+    array is shared and marked read-only."""
+    key = (
+        tuple(s.topo.edges for s in states),
+        hw.reconfig_delay,
+        hw.reconfig_delay_per_link,
+    )
+    with _TRANS_CACHE_LOCK:
+        hit = _TRANS_CACHE.get(key)
+        if hit is not None:
+            _TRANS_CACHE.move_to_end(key)
+            return hit
+
     ns = len(states)
-    trans = np.zeros((ns, ns))
-    for p in states:
-        for s in states:
-            if p.idx != s.idx:
-                trans[p.idx, s.idx] = reconfig_cost(p.topo, s.topo, hw)
+    edge_union = sorted(set().union(*(s.topo.edges for s in states)) or set())
+    index = {e: k for k, e in enumerate(edge_union)}
+    # float64 so the Gram matrix goes through BLAS; counts stay exact
+    inc = np.zeros((ns, max(len(edge_union), 1)))
+    for s in states:
+        for e in s.topo.edges:
+            inc[s.idx, index[e]] = 1.0
+    sizes = inc.sum(axis=1)
+    changed = sizes[:, None] + sizes[None, :] - 2.0 * (inc @ inc.T)
+    if hw.reconfig_delay_per_link is None:
+        trans = np.where(changed > 0, hw.reconfig_delay, 0.0)
+    else:
+        trans = np.minimum(hw.reconfig_delay, hw.reconfig_delay_per_link * changed)
+    trans.setflags(write=False)
+
+    with _TRANS_CACHE_LOCK:
+        _TRANS_CACHE[key] = trans
+        _TRANS_CACHE.move_to_end(key)
+        while len(_TRANS_CACHE) > _TRANS_CACHE_MAX:
+            _TRANS_CACHE.popitem(last=False)
     return trans
+
+
+def clear_planner_caches(keep_shortest_paths: bool = False) -> None:
+    """Drop the transition memo plus every routing cache below it (structure
+    table, shortest paths).  Benchmarks use this to time cold planning;
+    ``keep_shortest_paths=True`` retains the pre-split-era ``_SP_CACHE``
+    (see ``cost_model.clear_structure_caches``)."""
+    with _TRANS_CACHE_LOCK:
+        _TRANS_CACHE.clear()
+    clear_structure_caches(keep_shortest_paths=keep_shortest_paths)
+
+
+# ---------------------------------------------------------------- numeric
+
+
+def _price(structure: PlanStructure, schedules: Sequence[Schedule],
+           hw: HardwareParams) -> np.ndarray:
+    """cost[k, i, s] = CommCost(topo_s, R_i, w_i(size_k)): the numeric phase.
+
+    One vectorized expression over the whole ``(sizes × rounds × states)``
+    block, with the identical operation order to
+    ``cost_model.round_cost_from_factors`` so batched totals are bit-equal
+    to scalar pricing."""
+    w = np.array([[r.size for r in sch.rounds] for sch in schedules])  # (K, R)
+    dil = structure.dilation[None, :, :]
+    cong = structure.congestion[None, :, :]
+    priced = hw.alpha * dil + (hw.beta * cong) * w[:, :, None]
+    cost = np.where(dil == 0, 0.0, priced)
+    return np.where(~structure.feasible[None, :, :], LARGE_PENALTY, cost)
 
 
 def _effective_transition(
@@ -190,6 +420,102 @@ def _g0_state(states: Sequence[TopoState], g0: Topology) -> int:
     raise AssertionError("G0 missing from state set")
 
 
+def _plans_from_structure(
+    structure: PlanStructure,
+    schedules: Sequence[Schedule],
+    hw: HardwareParams,
+) -> List[Plan]:
+    """Exact DP over a pre-built structure, batched along the size axis.
+
+    ``f`` is shaped ``(K, ns)`` per round (K = len(schedules)); every numpy
+    step mirrors the K=1 recurrence exactly — same candidate sums, same
+    argmin tie-breaking (first minimum, stay-put wins ties per Eq. 7's
+    charge-only-on-change semantics) — so each returned plan is bit-identical
+    to planning its schedule alone."""
+    states = structure.states
+    g0_idx = structure.g0_idx
+    trans = structure.trans
+    n_rounds = structure.n_rounds
+    K = len(schedules)
+    ns = len(states)
+    idx = np.arange(ns)
+    cost = _price(structure, schedules, hw)          # (K, R, ns)
+
+    INF = float("inf")
+    f = np.full((K, n_rounds, ns), INF)
+    parent = np.full((K, n_rounds, ns), -1, dtype=np.int64)
+
+    enter0 = structure.enterable[0] | (idx == g0_idx)
+    f[:, 0, enter0] = cost[:, 0, enter0] + trans[g0_idx, enter0][None, :]
+    parent[:, 0, enter0] = g0_idx
+
+    for i in range(1, n_rounds):
+        prev = f[:, i - 1, :]                        # (K, ns)
+        if hw.overlap:
+            eff = np.maximum(0.0, trans[None, :, :] - cost[:, i - 1, :, None])
+        else:
+            eff = trans[None, :, :]
+        cand = prev[:, :, None] + eff                # cand[k, p, s]
+        best_p = cand.argmin(axis=1)                 # (K, ns)
+        best = np.take_along_axis(cand, best_p[:, None, :], axis=1)[:, 0, :]
+        # staying put (p == s, zero transition) wins ties, matching Eq. 7's
+        # charge-only-on-change semantics
+        stay = cand[:, idx, idx]
+        prefer_stay = stay <= best
+        best = np.where(prefer_stay, stay, best)
+        best_p = np.where(prefer_stay, idx[None, :], best_p)
+
+        enterable = structure.enterable[i]
+        f[:, i, enterable] = best[:, enterable] + cost[:, i, enterable]
+        parent[:, i, enterable] = best_p[:, enterable]
+        carry = ~enterable
+        if carry.any():
+            # Eq. 5: ideal graphs outside their entry round carry only
+            fin = np.isfinite(prev[:, carry])
+            f[:, i, carry] = np.where(fin, prev[:, carry] + cost[:, i, carry], INF)
+            parent[:, i, carry] = np.where(fin, idx[carry][None, :], -1)
+
+    last = f[:, n_rounds - 1, :].argmin(axis=1)      # (K,)
+    plans: List[Plan] = []
+    for k, sched in enumerate(schedules):
+        seq = [int(last[k])]
+        for i in range(n_rounds - 1, 0, -1):
+            seq.append(int(parent[k, i, seq[-1]]))
+        seq.reverse()
+
+        steps: List[PlanStep] = []
+        prev_idx = g0_idx
+        for i, s_idx in enumerate(seq):
+            reconf = s_idx != prev_idx
+            t = trans[prev_idx, s_idx]
+            if hw.overlap and i > 0:
+                t = max(0.0, t - cost[k, i - 1, prev_idx])
+            steps.append(
+                PlanStep(
+                    round_index=i,
+                    state_idx=s_idx,
+                    topo_name=states[s_idx].topo.name,
+                    reconfigured=reconf,
+                    cost=round_cost_from_factors(
+                        int(structure.dilation[i, s_idx]),
+                        int(structure.congestion[i, s_idx]),
+                        bool(structure.feasible[i, s_idx]),
+                        sched.rounds[i].size,
+                        hw,
+                    ),
+                    reconfig_cost=float(t),
+                )
+            )
+            prev_idx = s_idx
+        plans.append(
+            Plan(
+                sched, hw, tuple(steps), float(f[k, n_rounds - 1, seq[-1]]),
+                final_topology=states[seq[-1]].topo,
+            )
+        )
+    return plans
+
+
 def plan(
     g0: Topology,
     standard: Sequence[Topology],
@@ -197,79 +523,150 @@ def plan(
     hw: HardwareParams,
 ) -> Plan:
     """Exact DP solution of Algorithm 1 (any reconfiguration mode)."""
-    states = build_states(g0, standard, schedule)
-    n_rounds = len(schedule.rounds)
-    if n_rounds == 0:
+    if len(schedule.rounds) == 0:
         return Plan(schedule, hw, (), 0.0, final_topology=g0)
-    cost, cost_objs = _round_costs(states, schedule, hw)
-    g0_idx = _g0_state(states, g0)
-    trans = _transition_costs(states, hw)
+    structure = build_structure(g0, standard, schedule, hw)
+    return _plans_from_structure(structure, [schedule], hw)[0]
 
-    INF = float("inf")
-    ns = len(states)
-    idx = np.arange(ns)
-    f = np.full((n_rounds, ns), INF)
-    parent = np.full((n_rounds, ns), -1, dtype=np.int64)
 
-    for s in states:
-        if s.enterable_at(0) or s.idx == g0_idx:
-            f[0, s.idx] = cost[0, s.idx] + trans[g0_idx, s.idx]
-            parent[0, s.idx] = g0_idx
-
-    effs = [_effective_transition(trans, cost, i, hw) for i in range(n_rounds)]
-
-    for i in range(1, n_rounds):
-        prev = f[i - 1]
-        cand = prev[:, None] + effs[i]      # cand[p, s]: arrive at s from p
-        best_p = cand.argmin(axis=0)
-        best = cand[best_p, idx]
-        # staying put (p == s, zero transition) wins ties, matching Eq. 7's
-        # charge-only-on-change semantics
-        stay = cand[idx, idx]
-        prefer_stay = stay <= best
-        best = np.where(prefer_stay, stay, best)
-        best_p = np.where(prefer_stay, idx, best_p)
-        for s in states:
-            j = s.idx
-            if s.enterable_at(i):
-                f[i, j] = best[j] + cost[i, j]
-                parent[i, j] = best_p[j]
-            elif np.isfinite(prev[j]):
-                # Eq. 5: ideal graphs outside their entry round carry only
-                f[i, j] = prev[j] + cost[i, j]
-                parent[i, j] = j
-
-    last = int(f[n_rounds - 1].argmin())
-    total = float(f[n_rounds - 1, last])
-
-    # backtrack
-    seq = [last]
-    for i in range(n_rounds - 1, 0, -1):
-        seq.append(int(parent[i, seq[-1]]))
-    seq.reverse()
-
-    steps: List[PlanStep] = []
-    prev_idx = g0_idx
-    for i, s_idx in enumerate(seq):
-        reconf = s_idx != prev_idx
-        eff = effs[i]
-        steps.append(
-            PlanStep(
-                round_index=i,
-                state_idx=s_idx,
-                topo_name=states[s_idx].topo.name,
-                reconfigured=reconf,
-                cost=cost_objs[(i, s_idx)],
-                reconfig_cost=float(eff[prev_idx, s_idx]),
-            )
-        )
-        prev_idx = s_idx
-    return Plan(
-        schedule, hw, tuple(steps), total, final_topology=states[seq[-1]].topo
+def _rescale_schedule(schedule: Schedule, nbytes: float) -> Schedule:
+    """Same round structure, every payload scaled to buffer size ``nbytes``."""
+    if not schedule.rounds:
+        return replace(schedule, buffer_bytes=nbytes)
+    factor = nbytes / schedule.buffer_bytes
+    return replace(
+        schedule,
+        buffer_bytes=nbytes,
+        rounds=tuple(replace(r, size=r.size * factor) for r in schedule.rounds),
     )
 
 
+def plan_sweep(
+    g0: Topology,
+    standard: Sequence[Topology],
+    schedule: Schedule,
+    hw: HardwareParams,
+    sizes: Sequence[float],
+    *,
+    schedules: Optional[Sequence[Schedule]] = None,
+    structure: Optional[PlanStructure] = None,
+) -> List[Plan]:
+    """Plan one schedule structure at many buffer sizes — one structure
+    phase, one batched numeric phase.
+
+    ``schedule`` donates the round *structure* (which pairs, which rounds);
+    ``sizes`` are the per-rank buffer sizes to price.  By default each size
+    point reuses ``schedule`` with payloads rescaled proportionally; pass
+    ``schedules`` (one per size, e.g. rebuilt via
+    ``schedules.get_schedule``) when exact per-size payload arithmetic
+    matters — every schedule must share ``schedule``'s round structure.
+    Pass ``structure`` to reuse a previously built :class:`PlanStructure`.
+
+    Returns one :class:`Plan` per size, bit-identical (steps and totals) to
+    calling :func:`plan` on each size's schedule individually.  (With the
+    default rescaling, a rescaled payload ``r.size · (d / d_ref)`` can
+    differ in the last ulp from a generator-built one at ``d`` unless the
+    size ratio is a power of two — build the sweep's template at the size
+    whose exactness matters, or pass ``schedules``.)
+    """
+    if len(schedule.rounds) == 0:
+        sweep = (
+            schedules
+            if schedules is not None
+            else [_rescale_schedule(schedule, float(d)) for d in sizes]
+        )
+        return [Plan(sch, hw, (), 0.0, final_topology=g0) for sch in sweep]
+    if structure is None:
+        structure = build_structure(g0, standard, schedule, hw)
+    else:
+        # a caller-supplied structure may have been built from a different
+        # schedule, fabric, or hardware model — its (D, C) matrices,
+        # transition table, and start state are only valid for its own
+        if structure.g0_edges != g0.edges:
+            raise ValueError(
+                "supplied structure was built for a different G0 edge set"
+            )
+        if structure.reconfig_params != (
+            hw.reconfig_delay, hw.reconfig_delay_per_link
+        ):
+            raise ValueError(
+                "supplied structure was built under different reconfiguration "
+                f"parameters {structure.reconfig_params}; its transition table "
+                "does not price this hardware model"
+            )
+        std_edges = {s.topo.edges for s in structure.states if s.standard}
+        for topo in standard:
+            if topo.edges not in std_edges:
+                raise ValueError(
+                    f"standard topology {topo.name} is not a state of the "
+                    "supplied structure"
+                )
+        if len(schedule.rounds) != structure.n_rounds:
+            raise ValueError(
+                f"template has {len(schedule.rounds)} rounds; supplied "
+                f"structure has {structure.n_rounds}"
+            )
+        for i, rnd in enumerate(schedule.rounds):
+            if round_structure_key(pairs_of(rnd)) != structure.round_keys[i]:
+                raise ValueError(
+                    f"template round {i} does not match the supplied "
+                    "structure's pair multiset"
+                )
+    if schedules is None:
+        # rescaled schedules share the template's transfers, so they match
+        # the (now template-validated) structure by construction
+        schedules = [_rescale_schedule(schedule, float(d)) for d in sizes]
+    else:
+        if len(schedules) != len(sizes):
+            raise ValueError(
+                f"got {len(schedules)} schedules for {len(sizes)} sizes"
+            )
+        for sch in schedules:
+            if len(sch.rounds) != structure.n_rounds:
+                raise ValueError(
+                    f"schedule {sch.algorithm}@{sch.buffer_bytes:g}B has "
+                    f"{len(sch.rounds)} rounds; structure has {structure.n_rounds}"
+                )
+            for i, rnd in enumerate(sch.rounds):
+                if round_structure_key(pairs_of(rnd)) != structure.round_keys[i]:
+                    raise ValueError(
+                        f"schedule {sch.algorithm}@{sch.buffer_bytes:g}B round {i} "
+                        "does not match the structure's pair multiset"
+                    )
+    return _plans_from_structure(structure, schedules, hw)
+
+
 # ------------------------------------------------------------------ oracles
+
+
+def _round_costs(
+    states: Sequence[TopoState], schedule: Schedule, hw: HardwareParams
+) -> Tuple[np.ndarray, Dict[Tuple[int, int], RoundCost]]:
+    """(cost, objs): cost[i, s] = CommCost(topo_s, R_i, w_i) (Algorithm 2)
+    and objs[(i, s)] the full RoundCost decomposition.
+
+    Structurally identical rounds at the same payload size — keyed by
+    ``(pair multiset, size)`` — share one row of costs and one set of
+    RoundCost objects, so e.g. a ring schedule's n−1 identical rounds are
+    priced once even outside ``plan_sweep``."""
+    n_rounds = len(schedule.rounds)
+    cost = np.empty((n_rounds, len(states)))
+    cost_objs: Dict[Tuple[int, int], RoundCost] = {}
+    first_row: Dict[Tuple, int] = {}
+    for i, rnd in enumerate(schedule.rounds):
+        key = (round_structure_key(pairs_of(rnd)), rnd.size)
+        j = first_row.get(key)
+        if j is not None:
+            cost[i] = cost[j]
+            for s in states:
+                cost_objs[(i, s.idx)] = cost_objs[(j, s.idx)]
+            continue
+        first_row[key] = i
+        for s in states:
+            rc = comm_cost_round(s.topo, rnd, None, hw)
+            cost[i, s.idx] = rc.total
+            cost_objs[(i, s.idx)] = rc
+    return cost, cost_objs
 
 
 def plan_bruteforce(
