@@ -1,0 +1,191 @@
+"""Execution-engine benchmark: cold per-call interpreter vs cached engine.
+
+Times repeated same-shape collectives two ways per (n, collective) point,
+on forced CPU host devices:
+
+* **interpreter (cold)** — the pre-PR dispatch: every call builds a fresh
+  ``jit(shard_map(...))`` around the per-round reference interpreter
+  (``execute_schedule_reference`` + dense all-to-all state), re-deriving
+  every round table in Python and re-tracing/compiling — what a serving
+  or eval loop paid whenever XLA's jit cache missed;
+* **engine (warm)** — the compiled execution engine through the eager
+  Communicator path: the first call traces once into the process-wide
+  executable cache (fingerprint + shape + dtype + axis + groups key),
+  every later call is a cache hit with **zero retraces** (asserted from
+  ``exec_stats`` deltas, the deterministic regression guard).
+
+Both legs are best-of-N so the minimum reflects deterministic work, and
+the engine outputs are checked against the interpreter outputs before
+timing (bit-identical).
+
+Writes ``BENCH_exec.json``::
+
+    {"points": [{n, collective, algorithm, rounds, round_groups,
+                 interp_cold_s, engine_cold_s, engine_warm_s, speedup,
+                 first_call_traces, second_call_retraces}, ...],
+     "smoke": bool}
+
+``--smoke`` (used by scripts/ci.sh) restricts to n = 8, asserts the
+retrace guard plus a loose wall-clock bar, and skips the JSON write so a
+CI run never clobbers the full numbers.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=16 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.api import PcclSession
+from repro.comm import exec_engine
+from repro.comm import primitives as prim
+from repro.core import cost_model as cm
+
+COLLECTIVES = ("reduce_scatter", "all_gather", "all_reduce", "all_to_all")
+HW = cm.TPU_V5E_PHOTONIC
+
+
+def _mesh(n):
+    return compat.make_mesh((n,), ("x",), devices=jax.devices()[:n])
+
+
+def _global_input(collective, n, rng):
+    if collective == "all_gather":
+        return rng.normal(size=(n, 64)).astype(np.float32)
+    return rng.normal(size=(n, n * 64)).astype(np.float32)
+
+
+def bench_point(n: int, collective: str, repeats: int = 3) -> Dict:
+    rng = np.random.default_rng(n)
+    X = _global_input(collective, n, rng)
+    session = PcclSession(HW, thread_fabric=False)
+    comm = session.communicator("x", n, backend="interp")
+    mesh = _mesh(n)
+
+    # resolve the exact schedule both legs will execute
+    itemsize = X.dtype.itemsize
+    local = X[0]
+    if collective == "all_gather":
+        nbytes = local.size * itemsize * n
+    else:
+        nbytes = local.size * itemsize
+    sched = comm.axis_schedule(collective, nbytes)
+
+    def fresh_interpreter():
+        """One *cold* interpreter call: new jit wrapper, full retrace."""
+        fn = jax.jit(
+            compat.shard_map(
+                lambda x: prim.run_reference(collective, x[0], sched, "x")[None],
+                mesh=mesh, in_specs=P("x", None), out_specs=P("x", None),
+                check_vma=False,
+            )
+        )
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(fn(X))
+        return time.perf_counter() - t0, np.asarray(out)
+
+    # --- engine: first (cold) call populates the executable cache
+    exec_engine.clear_exec_caches()
+    t0 = time.perf_counter()
+    engine_out = np.asarray(jax.block_until_ready(comm.__getattribute__(collective)(X)))
+    engine_cold_s = time.perf_counter() - t0
+    s1 = exec_engine.exec_stats()
+
+    # --- engine: warm calls (cache hit, zero retraces)
+    engine_warm_s = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(getattr(comm, collective)(X))
+        engine_warm_s = min(engine_warm_s, time.perf_counter() - t0)
+    s2 = exec_engine.exec_stats()
+    second_call_retraces = s2.traces - s1.traces
+    assert s2.executable_hits >= repeats, (s2, repeats)
+    np.testing.assert_array_equal(np.asarray(out), engine_out)
+
+    # --- interpreter: every call cold (best-of-N)
+    interp_cold_s = float("inf")
+    for _ in range(repeats):
+        dt, interp_out = fresh_interpreter()
+        interp_cold_s = min(interp_cold_s, dt)
+    np.testing.assert_array_equal(engine_out, interp_out)  # bit-identical
+
+    compiled = exec_engine.compile_schedule(sched)
+    return {
+        "n": n,
+        "collective": collective,
+        "algorithm": sched.algorithm,
+        "rounds": compiled.num_rounds,
+        "round_groups": len(compiled.groups),
+        "interp_cold_s": interp_cold_s,
+        "engine_cold_s": engine_cold_s,
+        "engine_warm_s": engine_warm_s,
+        "speedup": interp_cold_s / engine_warm_s if engine_warm_s > 0 else float("inf"),
+        "first_call_traces": s1.traces,
+        "second_call_retraces": second_call_retraces,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="n=8 only, assert guards, no JSON write (CI)")
+    ap.add_argument("--out", default="BENCH_exec.json")
+    args = ap.parse_args()
+
+    ns = (8,) if args.smoke else (8, 16)
+    points: List[Dict] = []
+    for n in ns:
+        for coll in COLLECTIVES:
+            p = bench_point(n, coll)
+            points.append(p)
+            print(
+                f"n={p['n']:<3} {p['collective']:<15} ({p['algorithm']:<7}) "
+                f"interp-cold {p['interp_cold_s']*1e3:8.1f} ms  "
+                f"engine-warm {p['engine_warm_s']*1e3:7.2f} ms  "
+                f"{p['speedup']:7.1f}x  "
+                f"retraces {p['first_call_traces']}->{p['second_call_retraces']}  "
+                f"rounds {p['rounds']}->{p['round_groups']} groups"
+            )
+
+    # deterministic guard at every scale: a repeated same-shape collective
+    # must never retrace after its first call
+    for p in points:
+        assert p["second_call_retraces"] == 0, (
+            f"retrace regression at n={p['n']} {p['collective']}: "
+            f"{p['second_call_retraces']} retraces on warm calls"
+        )
+
+    if args.smoke:
+        # loose wall-clock bar (observed locally: 100-4000x); deliberately
+        # far below the acceptance number so CI noise cannot flake it
+        for p in points:
+            assert p["speedup"] >= 3.0, (
+                f"engine speedup regression: only {p['speedup']:.2f}x at "
+                f"n={p['n']} {p['collective']}"
+            )
+        print("smoke OK: warm engine calls never retrace and stay >=3x the "
+              "cold interpreter")
+        return
+
+    assert min(p["speedup"] for p in points) >= 3.0, (
+        "acceptance: >=3x warm-engine speedup at every point",
+        [(p["n"], p["collective"], round(p["speedup"], 1)) for p in points],
+    )
+    Path(args.out).write_text(json.dumps({"points": points, "smoke": False}, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,5 +15,9 @@ python -m compileall -q src
 # planner perf smoke (n=16): plan_sweep must stay bit-identical to the
 # per-size plan() loop and meaningfully faster; fails fast on regression
 python -m benchmarks.planner_bench --smoke
+# execution-engine smoke (n=8): warm engine calls must be 0-retrace
+# (deterministic guard) and beat the cold per-round interpreter by the
+# loose wall-clock bar; outputs are checked bit-identical inside
+python -m benchmarks.exec_bench --smoke
 # --durations keeps slow planner tests visible as the suite grows
 exec python -m pytest -x -q --durations=10 "$@"

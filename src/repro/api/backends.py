@@ -2,10 +2,18 @@
 
 Three implementations of one protocol:
 
-* ``interp`` — the executable ppermute schedule interpreter
-  (``repro.comm.primitives``): every planned round lowers to exactly one
-  ``lax.ppermute`` whose permutation *is* the circuit set PCCL would program
-  on the photonic fabric.  Call inside ``shard_map``.
+* ``interp`` — the compiled-schedule execution engine
+  (``repro.comm.exec_engine`` under ``repro.comm.primitives``): every
+  planned round lowers to exactly one ``lax.ppermute`` whose permutation
+  *is* the circuit set PCCL would program on the photonic fabric, with
+  per-round tables compiled once per schedule and runs of like rounds
+  fused into a single ``lax.scan``.  Call inside ``shard_map`` — or call
+  with a **concrete** ``(axis_size, *local)`` array and the backend runs it
+  through a process-wide cache of jitted ``shard_map`` executables keyed by
+  ``(schedule fingerprint, shape, dtype, axis name, group fingerprint)``;
+  repeated same-shape collectives then dispatch with zero retraces, and
+  shape-preserving collectives (all_reduce, all_to_all) donate the input
+  chunk buffer to the executable.
 * ``xla``    — native ``lax`` collectives; the paper-faithful A/B baseline
   (what ``PcclComm(algorithm="xla")`` used to spell as a string hack).
 * ``sim``    — cost-model-only: data passes through with single-copy
@@ -18,11 +26,13 @@ JAX is imported lazily so a ``sim``-only process never touches it.
 
 from __future__ import annotations
 
-from typing import TYPE_CHECKING, List, Protocol, Tuple, runtime_checkable
+from typing import TYPE_CHECKING, List, Optional, Protocol, Tuple, runtime_checkable
 
 from repro.comm.errors import ScheduleExecutionError  # JAX-free
 
 if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.schedules import Schedule
+
     from .communicator import Communicator
 
 
@@ -95,37 +105,74 @@ class XlaBackend:
         return y.reshape(x.shape)
 
 
+def _eager_eligible(x) -> bool:
+    """True only for actual arrays *outside any trace*.
+
+    Checking the operand alone is not enough: a constant created or closed
+    over inside a ``shard_map`` body is not a tracer, yet must still take
+    the trace path (the axis name is bound there, and re-entering jit
+    mid-trace would be wrong).
+    """
+    import jax
+
+    return not isinstance(x, jax.core.Tracer) and jax.core.trace_state_clean()
+
+
 class InterpBackend:
-    """Schedule interpreter: planned rounds → ppermute (inside shard_map)."""
+    """Compiled schedule engine: planned rounds → fused ppermute groups.
+
+    Inside ``shard_map`` the collectives trace as usual (compiled tables
+    are memoized process-wide, so retraces skip all Python table
+    derivation).  Called with concrete arrays, the backend instead routes
+    through :func:`_run_eager`'s jitted-executable cache.
+    """
 
     name = "interp"
 
-    # -- full-axis path reuses the proven primitives wrappers ------------
     def all_reduce(self, comm, x):
-        import jax.numpy as jnp
-
-        shape = x.shape
-        flat = x.reshape(-1)
-        pad = (-flat.size) % comm.n
-        if pad:
-            flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
-        sched = comm.axis_schedule("all_reduce", flat.size * _item_bytes(flat))
-        out = self._run(comm, "all_reduce", flat, sched)
-        if pad:
-            out = out[: out.size - pad]
-        return out.reshape(shape)
+        return self._collective(comm, "all_reduce", x)
 
     def reduce_scatter(self, comm, x):
-        sched = comm.axis_schedule("reduce_scatter", x.size * _item_bytes(x))
-        return self._run(comm, "reduce_scatter", x, sched)
+        return self._collective(comm, "reduce_scatter", x)
 
     def all_gather(self, comm, x):
-        sched = comm.axis_schedule("all_gather", x.size * _item_bytes(x) * comm.n)
-        return self._run(comm, "all_gather", x, sched)
+        return self._collective(comm, "all_gather", x)
 
     def all_to_all(self, comm, x):
-        sched = comm.axis_schedule("all_to_all", x.size * _item_bytes(x))
-        return self._run(comm, "all_to_all", x, sched)
+        return self._collective(comm, "all_to_all", x)
+
+    # ------------------------------------------------------------ dispatch
+    def _collective(self, comm, collective, x):
+        if _eager_eligible(x):
+            return _run_eager(comm, collective, x)
+        return self._traced(comm, collective, x, None)
+
+    def _traced(self, comm, collective, x, sched: "Optional[Schedule]"):
+        """Trace-time body; ``sched`` pre-resolved on the eager path (the
+        executable must run exactly the schedule its cache key names)."""
+        from repro.comm import exec_engine
+
+        exec_engine.note_trace()
+        if collective == "all_reduce":
+            import jax.numpy as jnp
+
+            shape = x.shape
+            flat = x.reshape(-1)
+            pad = (-flat.size) % comm.n
+            if pad:
+                flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+            if sched is None:
+                sched = comm.axis_schedule(
+                    "all_reduce", flat.size * _item_bytes(flat)
+                )
+            out = self._run(comm, "all_reduce", flat, sched)
+            if pad:
+                out = out[: out.size - pad]
+            return out.reshape(shape)
+        if sched is None:
+            mult = comm.n if collective == "all_gather" else 1
+            sched = comm.axis_schedule(collective, x.size * _item_bytes(x) * mult)
+        return self._run(comm, collective, x, sched)
 
     # -- dispatch: ungrouped → primitives; grouped → local-rank variants --
     def _run(self, comm, collective, x, sched):
@@ -136,18 +183,133 @@ class InterpBackend:
         return _grouped_collective(comm, collective, x, sched)
 
 
+# ------------------------------------------------------------- eager path
+
+
+def _eager_nbytes(comm, collective, local_shape, itemsize: int) -> float:
+    """The nbytes the trace path will derive from the local operand."""
+    import math
+
+    size = math.prod(local_shape) if local_shape else 1
+    if collective == "all_reduce":
+        return float(size + ((-size) % comm.n)) * itemsize
+    if collective == "all_gather":
+        return float(size) * itemsize * comm.n
+    return float(size) * itemsize
+
+
+def _run_eager(comm, collective, x):
+    """Concrete-array path: one cached, jitted shard_map executable.
+
+    ``x`` is the **global** operand: ``(axis_size, *local)``, row ``r``
+    being rank ``r``'s local operand of the in-``shard_map`` convention
+    (all_reduce: full addend; reduce_scatter: ``(n·k, …)``; all_gather:
+    shard; all_to_all: dest-major blocks).  The output keeps the leading
+    axis: row ``r`` is rank ``r``'s local result.
+
+    Executables are memoized process-wide in
+    ``repro.comm.exec_engine.EXECUTABLES`` keyed by ``(schedule
+    fingerprint, collective, global shape, dtype, axis name, group
+    fingerprint)`` — a repeated same-shape collective is a cache hit and
+    zero retraces.  Shape-preserving collectives donate the input buffer
+    to XLA, so steady-state loops reuse the chunk storage.
+    """
+    import jax
+
+    from repro.comm import exec_engine
+
+    if x.ndim < 1 or x.shape[0] != comm.axis_size:
+        raise ScheduleExecutionError(
+            f"eager {collective}: expected global (axis_size={comm.axis_size},"
+            f" *local) operand, got shape {tuple(x.shape)}; inside shard_map"
+            " pass the local operand instead"
+        )
+    if len(jax.devices()) < comm.axis_size:
+        raise ScheduleExecutionError(
+            f"eager {collective} over axis {comm.axis_name!r} needs "
+            f"{comm.axis_size} devices, found {len(jax.devices())}; call "
+            "inside shard_map or set --xla_force_host_platform_device_count"
+        )
+    sched = comm.axis_schedule(
+        collective, _eager_nbytes(comm, collective, x.shape[1:], _item_bytes(x))
+    )
+    key = (
+        sched.fingerprint(),
+        collective,
+        tuple(x.shape),
+        str(x.dtype),
+        comm.axis_name,
+        comm.group_fingerprint(),
+    )
+    fn = exec_engine.EXECUTABLES.get(key)
+    if fn is None:
+        fn = _build_executable(comm, collective, sched, x.ndim)
+        exec_engine.EXECUTABLES.put(key, fn)
+    return fn(x)
+
+
+class _ExecView:
+    """Static execution-time view of a Communicator.
+
+    Everything ``InterpBackend._traced`` touches once the schedule is
+    resolved — and nothing more: cached executables live in a
+    process-wide LRU, so closing over the live Communicator would pin its
+    whole PcclSession (plan + structure caches) for the cache's lifetime.
+    """
+
+    __slots__ = ("axis_name", "n", "axis_size", "groups", "_table", "_table_dev")
+
+    def __init__(self, comm: "Communicator") -> None:
+        self.axis_name = comm.axis_name
+        self.n = comm.n
+        self.axis_size = comm.axis_size
+        self.groups = comm.groups
+        self._table = comm.local_index_table()
+        # built outside any trace, so this shares the communicator's own
+        # cached upload rather than re-implementing it
+        self._table_dev = comm.local_index_device_table()
+
+    def local_index_table(self):
+        return self._table
+
+    def local_index_device_table(self):
+        return self._table_dev
+
+
+def _build_executable(comm, collective, sched, ndim: int):
+    """jit(shard_map(...)) over the resolved schedule; donates when the
+    output can alias the input (global shape and dtype preserved)."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro import compat
+
+    backend = comm.backend  # stateless InterpBackend
+    view = _ExecView(comm)
+    axis = view.axis_name
+
+    def inner(xl):
+        return backend._traced(view, collective, xl[0], sched)[None]
+
+    mesh = compat.make_mesh(
+        (view.axis_size,), (axis,), devices=jax.devices()[: view.axis_size]
+    )
+    spec = P(axis, *([None] * (ndim - 1)))
+    fun = compat.shard_map(
+        inner, mesh=mesh, in_specs=spec, out_specs=spec, check_vma=False
+    )
+    donate = (0,) if collective in ("all_reduce", "all_to_all") else ()
+    return jax.jit(fun, donate_argnums=donate)
+
+
 def _local_index(comm: "Communicator"):
-    """me → index within my group, as a traced lookup table."""
+    """me → index within my group, as a traced lookup of the communicator's
+    cached rank→local table (built and uploaded once, not per trace)."""
     import jax.numpy as jnp
-    import numpy as np
     from jax import lax
 
-    table = np.zeros(comm.axis_size, dtype=np.int32)
-    for g in comm.groups:
-        for i, rank in enumerate(g):
-            table[rank] = i
     me = lax.axis_index(comm.axis_name)
-    return jnp.take(jnp.asarray(table), me)
+    return jnp.take(comm.local_index_device_table(), me)
 
 
 def _grouped_collective(comm: "Communicator", collective: str, x, sched):
@@ -158,7 +320,12 @@ def _grouped_collective(comm: "Communicator", collective: str, x, sched):
     chunk ids (and local buffers) stay group-local.
     """
     import jax.numpy as jnp
+    from jax import lax
 
+    from repro.comm.exec_engine import (
+        compile_all_to_all,
+        execute_all_to_all_compact,
+    )
     from repro.comm.primitives import ScheduleExecutionError, execute_schedule
 
     m = comm.n
@@ -181,6 +348,14 @@ def _grouped_collective(comm: "Communicator", collective: str, x, sched):
         return chunks.reshape((m * x.shape[0],) + x.shape[1:])
     if collective == "all_to_all":
         blocks = x.reshape((m, x.shape[0] // m) + x.shape[1:])
+        local_of = tuple(int(v) for v in comm.local_index_table())
+        compact = compile_all_to_all(sched, m, local_of)
+        if compact is not None:
+            me = lax.axis_index(comm.axis_name)
+            return execute_all_to_all_compact(
+                blocks, compact, comm.axis_name, me
+            ).reshape(x.shape)
+        # dense fallback: O(m²·blk) origin×target state
         state = jnp.zeros((m, m) + blocks.shape[1:], blocks.dtype)
         state = state.at[me_local].set(blocks)
         flat = state.reshape((m * m,) + blocks.shape[1:])
@@ -200,9 +375,12 @@ class SimBackend:
     only the shape is meaningful, not which values land in it),
     ``all_gather`` tiles the shard ``n`` times — shapes match the real
     backends so code paths are identical, but no inter-device data movement
-    happens (or is needed).  Shape preconditions (leading-dim divisibility)
-    raise the same :class:`~repro.comm.errors.ScheduleExecutionError` as the
-    ``interp`` backend instead of silently mis-shaping the output.
+    happens (or is needed).  Tiling happens in the input's own array
+    namespace (numpy in → numpy out, jax in → jax out), so a sim-backend
+    pipeline over device arrays never hops to host mid-graph.  Shape
+    preconditions (leading-dim divisibility) raise the same
+    :class:`~repro.comm.errors.ScheduleExecutionError` as the ``interp``
+    backend instead of silently mis-shaping the output.
     """
 
     name = "sim"
@@ -229,7 +407,12 @@ class SimBackend:
         import numpy as np
 
         self._charge(comm, "all_gather", x.size * _item_bytes(x) * comm.n)
-        return np.concatenate([np.asarray(x)] * comm.n, axis=0)
+        reps = (comm.n,) + (1,) * (x.ndim - 1)
+        if isinstance(x, np.ndarray):
+            return np.tile(x, reps)
+        import jax.numpy as jnp  # jax array in → jax array out, one tile
+
+        return jnp.tile(x, reps)
 
     def all_to_all(self, comm, x):
         _check_divisible(x, comm.n)

@@ -20,7 +20,11 @@ not the full axis.
 from __future__ import annotations
 
 from dataclasses import replace
-from typing import TYPE_CHECKING, Optional, Sequence, Tuple, Union
+from typing import TYPE_CHECKING, Any, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.comm.exec_engine import _LruCache  # jax-free
 
 from repro.core.schedules import Round, Schedule
 
@@ -78,6 +82,12 @@ class Communicator:
         self.backend: Backend = (
             get_backend(backend) if isinstance(backend, str) else backend
         )
+        self._local_table: Optional[np.ndarray] = None
+        self._local_table_dev: Optional[Any] = None
+        # composed full-axis schedules, keyed (fingerprint, buffer_bytes):
+        # subgroup_schedule rebuilds every transfer, so the eager hot path
+        # must not pay it (or the fingerprint hash) per call
+        self._axis_sched_cache = _LruCache(max_entries=64)
         if groups is not None:
             sizes = {len(g) for g in groups}
             if sizes != {n}:
@@ -94,11 +104,22 @@ class Communicator:
         ).schedule
 
     def axis_schedule(self, collective: str, nbytes: float) -> Schedule:
-        """The executable full-axis schedule (groups composed in)."""
+        """The executable full-axis schedule (groups composed in).
+
+        Composed schedules are memoized per communicator — the group-local
+        fingerprint covers the transfers, ``buffer_bytes`` the sizes — so
+        repeated collectives on a split communicator return one object
+        (with its fingerprint already memoized) instead of recomposing.
+        """
         sched = self._schedule(collective, nbytes)
         if self.groups is None:
             return sched
-        return subgroup_schedule(sched, self.groups, self.axis_size)
+        key = (sched.fingerprint(), sched.buffer_bytes)
+        composed = self._axis_sched_cache.get(key)
+        if composed is None:
+            composed = subgroup_schedule(sched, self.groups, self.axis_size)
+            self._axis_sched_cache.put(key, composed)
+        return composed
 
     def chosen_algorithm(self, collective: str, nbytes: float) -> str:
         return self._schedule(collective, nbytes).algorithm
@@ -161,6 +182,43 @@ class Communicator:
             groups=groups,
             axis_size=self.axis_size,
         )
+
+    def group_fingerprint(self) -> Tuple:
+        """Hashable identity of the axis partition — part of the engine's
+        executable-cache key (full axis vs. a particular split execute
+        differently even when the group-local schedule coincides)."""
+        if self.groups is None:
+            return ("full", self.axis_size)
+        return ("split", self.groups)
+
+    def local_index_table(self) -> np.ndarray:
+        """rank → group-local index, built once and cached on the
+        communicator (identity mapping for the full axis).  Grouped-
+        collective traces index this instead of rebuilding the table."""
+        if self._local_table is None:
+            if self.groups is None:
+                table = np.arange(self.axis_size, dtype=np.int32)
+            else:
+                table = np.zeros(self.axis_size, dtype=np.int32)
+                for g in self.groups:
+                    for i, rank in enumerate(g):
+                        table[rank] = i
+            table.flags.writeable = False
+            self._local_table = table
+        return self._local_table
+
+    def local_index_device_table(self):
+        """The same table as a device array, uploaded once per communicator
+        (not once per trace)."""
+        if self._local_table_dev is None:
+            import jax
+            import jax.numpy as jnp
+
+            # a first use under a trace must still yield a cacheable
+            # *concrete* array, not a leaked tracer
+            with jax.ensure_compile_time_eval():
+                self._local_table_dev = jnp.asarray(self.local_index_table())
+        return self._local_table_dev
 
     def group_of(self, rank: int) -> Tuple[int, ...]:
         """Axis ranks in ``rank``'s group."""

@@ -365,6 +365,20 @@ class PcclSession:
         """Hit/miss accounting for the size-independent structure cache."""
         return self.structures.stats
 
+    def exec_stats(self):
+        """Execution-engine counters: the jitted-executable cache (hits /
+        misses / size), the compiled-schedule cache, and how many Python
+        traces actually ran.  The caches are **process-wide** (executables
+        are keyed by schedule fingerprint + shape + dtype + axis + groups,
+        so sessions share them safely); a steady-state loop shows hits
+        climbing while ``traces`` stays flat.  JAX-free to read — a
+        sim-only process reports zeros.  See
+        :func:`repro.comm.exec_engine.exec_stats`.
+        """
+        from repro.comm.exec_engine import exec_stats
+
+        return exec_stats()
+
     @property
     def reconfig_mode(self) -> str:
         """``serial`` | ``partial`` | ``overlap`` — how this session's

@@ -16,8 +16,19 @@ _LAZY = {
     "all_gather": ".primitives",
     "all_reduce": ".primitives",
     "all_to_all": ".primitives",
+    "all_to_all_dense": ".primitives",
     "execute_schedule": ".primitives",
+    "execute_schedule_reference": ".primitives",
     "reduce_scatter": ".primitives",
+    "run_reference": ".primitives",
+    # execution engine (jax-free module; executors import jax lazily)
+    "CompiledSchedule": ".exec_engine",
+    "ExecStats": ".exec_engine",
+    "clear_exec_caches": ".exec_engine",
+    "compile_all_to_all": ".exec_engine",
+    "compile_schedule": ".exec_engine",
+    "exec_stats": ".exec_engine",
+    "execute_compiled": ".exec_engine",
 }
 
 __all__ = ["ScheduleExecutionError", *sorted(_LAZY)]

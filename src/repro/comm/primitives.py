@@ -6,15 +6,19 @@ permutation (each rank ≤1 Tx, ≤1 Rx — the paper's per-tile transmitter
 constraint), so it lowers to exactly one ``ppermute`` whose permutation *is*
 the circuit set PCCL would program on the photonic fabric.
 
-``execute_schedule`` is a generic interpreter: it reads the chunk metadata of
-the *same* Schedule objects the analytical planner prices, so the modeled and
-executed communication cannot drift apart.  Per round it
+``execute_schedule`` is the hot path: it hands the schedule to the compiled
+execution engine (:mod:`repro.comm.exec_engine`), which derives all static
+per-round tables once (memoized process-wide by ``Schedule.fingerprint()``)
+and folds runs of rounds sharing a permutation into a single ``lax.scan`` —
+same chunk metadata, same add order, bit-identical outputs, O(round-groups)
+trace size.  ``execute_schedule_reference`` keeps the original per-round
+interpreter as the engine's equivalence oracle (tests, benchmarks).
 
-1. gathers the chunks this rank must send (a static per-rank table indexed by
-   the runtime ``axis_index``),
-2. ppermutes them along the mesh axis, and
-3. scatter-adds (reduce rounds) or scatter-stores (gather rounds) the payload
-   into the local chunk buffer.
+``all_to_all`` uses the engine's slot-addressed compile: local state is one
+``(n, blk)`` buffer — O(n·blk) memory — whenever the chunk metadata admits
+one live block per slot (every generated all-to-all schedule does; asserted
+statically at compile time).  ``all_to_all_dense`` keeps the original
+origin×target O(n²·blk) state as the fallback and cross-check path.
 
 Requirements on the schedule (all generators in ``core.schedules`` satisfy
 them; asserted at trace time):
@@ -35,33 +39,20 @@ from jax import lax
 from repro.core.schedules import Round, Schedule
 
 from .errors import ScheduleExecutionError
+from .exec_engine import (
+    compile_all_to_all,
+    compile_schedule,
+    execute_all_to_all_compact,
+    execute_compiled,
+    round_tables,
+)
 
 
-def _round_tables(rnd: Round, n: int) -> Tuple[List[Tuple[int, int]], np.ndarray, np.ndarray, bool]:
-    """Static per-round tables: (perm, send_ids[n,k], recv_ids[n,k], reduce)."""
-    if not rnd.is_permutation():
-        raise ScheduleExecutionError("round is not a permutation (Tx/Rx > 1)")
-    senders = {t.src for t in rnd.transfers}
-    if len(senders) != n:
-        raise ScheduleExecutionError(
-            f"round must have all {n} ranks sending, got {len(senders)}"
-        )
-    ks = {len(t.chunks) for t in rnd.transfers}
-    if len(ks) != 1:
-        raise ScheduleExecutionError(f"non-uniform chunk counts per rank: {ks}")
-    k = ks.pop()
-    if k == 0:
-        raise ScheduleExecutionError("schedule has no chunk metadata (e.g. swing)")
-    reduces = {t.reduce for t in rnd.transfers}
-    if len(reduces) != 1:
-        raise ScheduleExecutionError("mixed reduce/store within one round")
-    perm = sorted((t.src, t.dst) for t in rnd.transfers)
-    send_ids = np.zeros((n, k), dtype=np.int32)
-    recv_ids = np.zeros((n, k), dtype=np.int32)
-    for t in rnd.transfers:
-        send_ids[t.src] = np.asarray(t.chunks, dtype=np.int32)
-        recv_ids[t.dst] = np.asarray(t.chunks, dtype=np.int32)
-    return perm, send_ids, recv_ids, reduces.pop()
+def _round_tables(
+    rnd: Round, n: int, *, ctx: str = ""
+) -> Tuple[List[Tuple[int, int]], np.ndarray, np.ndarray, bool]:
+    """Static per-round tables (see :func:`repro.comm.exec_engine.round_tables`)."""
+    return round_tables(rnd, n, ctx=ctx)
 
 
 def execute_schedule(
@@ -76,12 +67,27 @@ def execute_schedule(
       schedule: permutation-round schedule from ``repro.core.schedules``.
       axis_name: mesh axis of size ``schedule.n``.
 
-    Returns the updated local chunk buffer.
+    Returns the updated local chunk buffer.  Compiles the schedule once
+    (process-wide memo) and runs the fused engine — bit-identical to
+    :func:`execute_schedule_reference`.
+    """
+    return execute_compiled(chunks, compile_schedule(schedule), axis_name)
+
+
+def execute_schedule_reference(
+    chunks: jax.Array, schedule: Schedule, axis_name: str
+) -> jax.Array:
+    """Pre-engine per-round interpreter — the engine's bit-identity oracle.
+
+    Re-derives static tables per round per trace and emits one ppermute +
+    scatter pair per round with no fusion.  Kept for equivalence tests and
+    the ``exec_bench`` old-vs-new comparison; use ``execute_schedule``.
     """
     n = schedule.n
     me = lax.axis_index(axis_name)
-    for rnd in schedule.rounds:
-        perm, send_ids, recv_ids, reduce = _round_tables(rnd, n)
+    for i, rnd in enumerate(schedule.rounds):
+        ctx = f"{schedule.collective}/{schedule.algorithm} round {i}/{schedule.num_rounds}: "
+        perm, send_ids, recv_ids, reduce = round_tables(rnd, n, ctx=ctx)
         my_send = jnp.take(jnp.asarray(send_ids), me, axis=0)       # (k,)
         my_recv = jnp.take(jnp.asarray(recv_ids), me, axis=0)       # (k,)
         payload = jnp.take(chunks, my_send, axis=0)                 # (k, …)
@@ -138,11 +144,61 @@ def all_to_all(x: jax.Array, schedule: Schedule, axis_name: str) -> jax.Array:
     """x: (n*blk, …) where block j is this rank's payload for rank j.
     Returns (n*blk, …) where block j is the payload received from rank j.
 
-    Chunk ids in all_to_all schedules are ``src*n + dst``; locally each rank
-    stores the block for chunk id c at slot that depends on the phase: we keep
-    a full n×n-addressable buffer indexed by origin — memory-inefficient for
-    huge n but exact w.r.t. the schedule semantics (blocks in flight from
-    different origins can coexist at one rank, e.g. DEX)."""
+    Chunk ids in all_to_all schedules are ``src*n + dst``.  The engine's
+    slot-addressed compile keeps local state at one (n, blk, …) buffer —
+    O(n·blk) memory — assigning every in-flight block a live slot from the
+    static chunk metadata; schedules whose metadata cannot be
+    slot-addressed fall back to :func:`all_to_all_dense`.
+    """
+    n = schedule.n
+    compact = compile_all_to_all(schedule, n, tuple(range(n)))
+    if compact is None:
+        return all_to_all_dense(x, schedule, axis_name)
+    blocks = _split_chunks(x, n)                       # (n, blk, …) dest-major
+    me = lax.axis_index(axis_name)
+    return execute_all_to_all_compact(blocks, compact, axis_name, me).reshape(x.shape)
+
+
+def run_reference(
+    collective: str, x: jax.Array, schedule: Schedule, axis_name: str
+) -> jax.Array:
+    """Whole-collective pre-engine interpreter — the bit-identity oracle.
+
+    The original wrappers verbatim over :func:`execute_schedule_reference`
+    (dense all-to-all state included); shared by the equivalence tests and
+    ``benchmarks/exec_bench.py`` so the oracle exists exactly once.
+    """
+    n = schedule.n
+    me = lax.axis_index(axis_name)
+    if collective == "reduce_scatter":
+        chunks = _split_chunks(x, n)
+        chunks = execute_schedule_reference(chunks, schedule, axis_name)
+        return jnp.take(chunks, me, axis=0)
+    if collective == "all_gather":
+        chunks = jnp.zeros((n,) + x.shape, x.dtype).at[me].set(x)
+        chunks = execute_schedule_reference(chunks, schedule, axis_name)
+        return chunks.reshape((n * x.shape[0],) + x.shape[1:])
+    if collective == "all_reduce":
+        chunks = _split_chunks(x, n)
+        chunks = execute_schedule_reference(chunks, schedule, axis_name)
+        return chunks.reshape(x.shape)
+    if collective == "all_to_all":
+        blocks = _split_chunks(x, n)
+        state = jnp.zeros((n, n) + blocks.shape[1:], blocks.dtype)
+        state = state.at[me].set(blocks)
+        flat = state.reshape((n * n,) + blocks.shape[1:])
+        flat = execute_schedule_reference(flat, schedule, axis_name)
+        state = flat.reshape((n, n) + blocks.shape[1:])
+        return jnp.take(state, me, axis=1).reshape(x.shape)
+    raise ScheduleExecutionError(f"unknown collective {collective!r}")
+
+
+def all_to_all_dense(x: jax.Array, schedule: Schedule, axis_name: str) -> jax.Array:
+    """Dense-state all-to-all: the pre-engine fallback and cross-check path.
+
+    Keeps a full n×n-addressable buffer indexed by origin — O(n²·blk)
+    memory, but exact for *any* schedule semantics (arbitrarily many blocks
+    in flight from different origins can coexist at one rank)."""
     n = schedule.n
     blocks = _split_chunks(x, n)                       # (n, blk, …) dest-major
     me = lax.axis_index(axis_name)

@@ -40,6 +40,7 @@ rank ``dst``.
 
 from __future__ import annotations
 
+import hashlib
 import math
 from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -95,6 +96,32 @@ class Schedule:
     @property
     def num_rounds(self) -> int:
         return len(self.rounds)
+
+    def fingerprint(self) -> str:
+        """Stable content hash of everything *execution* depends on.
+
+        Covers ``(collective, algorithm, n)`` and every round's transfer
+        tuples ``(src, dst, chunks, reduce)`` — i.e. the per-round
+        permutations and chunk tables.  Byte sizes (``buffer_bytes``,
+        ``Round.size``) are deliberately excluded: they price the schedule
+        but do not change what the executor does, so a buffer-size sweep
+        over one rescaled template shares a single compiled executable.
+
+        Memoized on first use (cheap blake2b over a canonical encoding;
+        the frozen dataclass stores it via ``object.__setattr__``).
+        """
+        fp = self.__dict__.get("_fingerprint")
+        if fp is None:
+            h = hashlib.blake2b(digest_size=16)
+            h.update(f"{self.collective}|{self.algorithm}|{self.n}".encode())
+            for rnd in self.rounds:
+                h.update(b"#R")
+                for t in rnd.transfers:
+                    chunks = ",".join(map(str, t.chunks))
+                    h.update(f"|{t.src}>{t.dst}:{int(t.reduce)}:{chunks}".encode())
+            fp = h.hexdigest()
+            object.__setattr__(self, "_fingerprint", fp)
+        return fp
 
     def total_bytes_per_rank(self) -> float:
         """Max bytes any single rank sends across the schedule (β proxy)."""

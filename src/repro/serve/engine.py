@@ -86,7 +86,11 @@ class ServeEngine:
             self.comm.all_reduce(act)
 
     def comm_report(self) -> Dict[str, Any]:
-        """Planned TP communication accounting for this engine's lifetime."""
+        """Planned TP communication accounting for this engine's lifetime.
+
+        ``exec`` carries the execution-engine counters (executable-cache
+        hits/misses, traces); zeros under the ``sim`` backend, live numbers
+        when an engine is wired to an ``interp`` communicator."""
         if self.comm is None:
             return {"tp": 1, "sim_comm_s": 0.0, "algorithm": "none", "events": 0}
         return {
@@ -96,6 +100,7 @@ class ServeEngine:
                 "all_reduce", self._act.size * 4
             ),
             "events": len(self.comm.backend.events),
+            "exec": self.pccl.exec_stats(),
         }
 
     def _extra_inputs(self, B: int) -> Dict[str, jax.Array]:

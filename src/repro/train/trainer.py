@@ -178,6 +178,7 @@ class Trainer:
                 "grad_allreduce_algorithm": self.grad_allreduce_algorithm,
                 "grad_allreduce_cost_s": self.grad_allreduce_cost_s,
                 "pccl_cache": self.pccl.stats,
+                "pccl_exec": self.pccl.exec_stats(),
                 "stragglers": self.straggler.stragglers(),
             }
 

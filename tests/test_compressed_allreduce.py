@@ -1,0 +1,57 @@
+"""Int8-compressed all-reduce: quantizer unit tests + device subprocess.
+
+The collective itself needs >1 device, so the psum-agreement and
+error-feedback checks run in compressed_allreduce_check.py under 4 host
+devices.  The quantizer's per-hop bound — the quantity the documented
+error model is built from — is testable on one device here.
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_quantize_roundtrip_within_per_hop_bound():
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.comm.pccl_collectives import _dequantize, _quantize
+
+    rng = np.random.default_rng(0)
+    for scale_mag in (1e-3, 1.0, 1e3):
+        x = jnp.asarray(rng.normal(size=(256,)).astype(np.float32) * scale_mag)
+        q, s = _quantize(x)
+        assert q.dtype == jnp.int8
+        back = _dequantize(q, s)
+        # documented per-hop bound: |round-trip error| <= scale/2,
+        # scale = max|x|/127
+        bound = float(jnp.max(jnp.abs(x))) / 127.0 / 2.0 + 1e-12
+        assert float(jnp.max(jnp.abs(back - x))) <= bound * 1.0001
+
+
+def test_quantize_handles_zero_buffer():
+    jnp = pytest.importorskip("jax.numpy")
+    from repro.comm.pccl_collectives import _dequantize, _quantize
+
+    q, s = _quantize(jnp.zeros((8,), jnp.float32))
+    assert float(jnp.max(jnp.abs(_dequantize(q, s)))) == 0.0
+
+
+@pytest.mark.slow
+@pytest.mark.multidevice
+def test_compressed_allreduce_device_checks():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "tests" / "compressed_allreduce_check.py")],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "ALL-COMPRESSED-OK" in proc.stdout
