@@ -1,0 +1,157 @@
+"""Concurrent-group planning benchmark: joint fabric arbitration vs
+sequential independent plans on 2-D meshes.
+
+The workload is the paper's end-to-end scenario: a TP×DP mesh where the TP
+all-reduce (rows) and the DP reduce-scatter (columns) are in flight at the
+same time on one photonic fabric.  For each swept point the bench plans the
+pair two ways:
+
+* **sequential** — each collective planned alone (Algorithm 1, the fabric to
+  itself) and executed back-to-back: the sum of solo plan costs, i.e. what a
+  per-collective planner charges a real training step;
+* **joint** — ``plan_concurrent``: rounds aligned, link-disjoint circuit
+  allocations where feasible, per-link priced contention where not.
+
+Both are *planned* costs from the same cost model, so the ratio is exactly
+the step-cost improvement the arbiter buys.  Joint plans are verified
+bit-reproducible (two fresh runs must agree on totals and state sequences)
+and never worse than sequential (the arbiter's serialized fallback bounds
+them by construction — the bench asserts the bound held).
+
+Writes ``BENCH_concurrent.json``::
+
+    {"points": [{n, tp, dp, tp_collective, dp_collective, tp_mb, dp_mb,
+                 algorithms, sequential_s, joint_s, speedup, serialized,
+                 joint_rounds, plan_s}, ...],
+     "smoke": bool}
+
+``--smoke`` (used by scripts/ci.sh) restricts to n = 16 and asserts the
+acceptance bar (≥ 1.2X at some point) plus the never-worse guard; by default
+it skips the JSON write so a CI run never clobbers the full numbers, but
+``--json-out PATH`` writes the (possibly reduced) points anywhere — the CI
+bench gate diffs such a fresh file against the committed baseline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+from repro.core import cost_model as cm
+from repro.core import topology as T
+from repro.core.pccl import ConcurrentCollectiveRequest, plan_concurrent_collectives
+from repro.core.planner import clear_planner_caches
+from repro.core.schedules import mesh_groups
+
+MB = 1024.0 ** 2
+SIZE_PAIRS_MB = ((4, 64), (64, 64), (64, 256))  # (TP act, DP grad) per point
+HW = cm.H100_DGX
+
+
+def _fingerprint(cp) -> Tuple:
+    """Everything a re-run must reproduce bit-for-bit."""
+    return (
+        cp.algorithms,
+        cp.joint_cost,
+        cp.sequential_cost,
+        cp.serialized,
+        tuple(g.states for g in cp.plan.groups),
+    )
+
+
+def bench_point(n: int, tp_mb: float, dp_mb: float) -> Dict:
+    tp, dp = T.square_dims2(n)
+    tp_groups, dp_groups = mesh_groups(tp, dp)
+    reqs = [
+        ConcurrentCollectiveRequest("all_reduce", tp_mb * MB, groups=tp_groups),
+        ConcurrentCollectiveRequest("reduce_scatter", dp_mb * MB, groups=dp_groups),
+    ]
+    g0 = T.ring(n)
+
+    clear_planner_caches()
+    t0 = time.perf_counter()
+    cp = plan_concurrent_collectives(reqs, n, g0, HW)
+    plan_s = time.perf_counter() - t0
+
+    # bit-reproducibility: a fresh cold run must return the identical plan
+    clear_planner_caches()
+    cp2 = plan_concurrent_collectives(reqs, n, g0, HW)
+    assert _fingerprint(cp) == _fingerprint(cp2), (
+        f"concurrent plan not reproducible at n={n} "
+        f"({tp_mb:g}/{dp_mb:g} MB)"
+    )
+    # never-worse guard: the serialized fallback bounds the joint plan
+    assert cp.cost <= cp.sequential_cost * (1 + 1e-12), (
+        f"joint plan worse than sequential at n={n}: "
+        f"{cp.cost} vs {cp.sequential_cost}"
+    )
+    return {
+        "n": n,
+        "tp": tp,
+        "dp": dp,
+        "tp_collective": "all_reduce",
+        "dp_collective": "reduce_scatter",
+        "tp_mb": tp_mb,
+        "dp_mb": dp_mb,
+        "algorithms": list(cp.algorithms),
+        "sequential_s": cp.sequential_cost,
+        "joint_s": cp.cost,
+        "speedup": cp.speedup,
+        "serialized": cp.serialized,
+        "joint_rounds": cp.plan.n_rounds,
+        "plan_s": plan_s,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="n=16 only, assert guards, no default JSON write (CI)")
+    ap.add_argument("--out", default="BENCH_concurrent.json")
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="also write the JSON here (even under --smoke); "
+                    "used by the CI bench gate")
+    args = ap.parse_args()
+
+    ns = (16,) if args.smoke else (16, 64)
+    points: List[Dict] = []
+    for n in ns:
+        for tp_mb, dp_mb in SIZE_PAIRS_MB:
+            p = bench_point(n, tp_mb, dp_mb)
+            points.append(p)
+            print(
+                f"n={p['n']:<4} {p['tp']}x{p['dp']} "
+                f"TP {p['tp_mb']:>4g} MB + DP {p['dp_mb']:>4g} MB  "
+                f"seq {p['sequential_s']*1e6:9.1f} us  "
+                f"joint {p['joint_s']*1e6:9.1f} us  "
+                f"{p['speedup']:5.2f}x"
+                f"{'  (serialized)' if p['serialized'] else ''}"
+            )
+
+    result = {"points": points, "smoke": args.smoke}
+
+    # acceptance: the arbiter must beat sequential planning by >= 1.2x at
+    # one swept point per n (planned cost: deterministic, no noise excuse)
+    for n in ns:
+        best = max(p["speedup"] for p in points if p["n"] == n)
+        assert best >= 1.2, (
+            f"acceptance: joint planning only {best:.2f}x over sequential "
+            f"at n={n} (need >= 1.2x at some point)"
+        )
+
+    if args.json_out:
+        Path(args.json_out).write_text(json.dumps(result, indent=2) + "\n")
+        print(f"wrote {args.json_out}")
+    if args.smoke:
+        print("smoke OK: joint plans reproducible, never worse than "
+              "sequential, and >= 1.2x at some point")
+        return
+    Path(args.out).write_text(json.dumps(result, indent=2) + "\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

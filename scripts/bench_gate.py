@@ -1,0 +1,127 @@
+#!/usr/bin/env python
+"""Benchmark regression gate: compare fresh bench JSONs against committed
+baselines.
+
+Usage (one or more ``FRESH:BASELINE[:TOLERANCE]`` pairs)::
+
+    python scripts/bench_gate.py \
+        .ci-bench/BENCH_planner.json:BENCH_planner.json \
+        .ci-bench/BENCH_exec.json:BENCH_exec.json:0.1 \
+        .ci-bench/BENCH_concurrent.json:BENCH_concurrent.json
+
+Each file is one of the repo's bench formats — a top-level ``points`` /
+``sweep_points`` list of dicts carrying a ``speedup`` metric plus
+identifying fields (``n``, ``collective``, ``tp_mb``, ...).  Points are
+matched on the identifying fields that appear in both files, so a CI run
+may produce a reduced (``--smoke``) point set and still gate against the
+full committed baseline: only the intersection is compared, and at least
+one shared point is required per pair.
+
+Tolerance
+---------
+``--tolerance R`` (default 0.3, overridable per pair with a third ``:R``
+component) passes a point when::
+
+    fresh_speedup >= R * baseline_speedup
+
+The committed baselines were measured on a warm dev box; CI runners are
+slower, noisier, and differently provisioned, so the gate is deliberately a
+*regression* gate, not a performance test: it catches a speedup collapsing
+by more than ~3x (an algorithmic regression — e.g. a cache key that stopped
+hitting, a fast path that stopped firing), while single-digit-percent noise
+never flakes it.  The exec bench gets a looser 0.1 in CI: its warm leg is a
+best-of-3 of millisecond-scale timings whose denominator legitimately
+swings several-fold under co-tenant load, and its hard failure modes
+(retrace regressions collapse the speedup to ~1x) are still far below the
+floor.  The benches' own ``--smoke`` assertions carry the absolute floors
+(planner >= 1.3x, exec >= 3x, concurrent >= 1.2x), so a fresh file that
+exists at all has already cleared those.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+# fields that identify a point (the metric fields are everything else)
+ID_KEYS = (
+    "n", "collective", "algorithm", "tp", "dp",
+    "tp_collective", "dp_collective", "tp_mb", "dp_mb", "sizes_mb",
+)
+METRIC = "speedup"
+
+
+def load_points(path: Path) -> List[Dict]:
+    doc = json.loads(path.read_text())
+    for key in ("points", "sweep_points"):
+        if key in doc:
+            return doc[key]
+    raise SystemExit(f"{path}: no 'points'/'sweep_points' list")
+
+
+def point_id(p: Dict) -> Tuple:
+    return tuple((k, json.dumps(p[k])) for k in ID_KEYS if k in p)
+
+
+def gate_pair(fresh_path: Path, base_path: Path, tolerance: float) -> List[str]:
+    fresh = {point_id(p): p for p in load_points(fresh_path)}
+    base = {point_id(p): p for p in load_points(base_path)}
+    shared = [k for k in fresh if k in base]
+    if not shared:
+        return [
+            f"{fresh_path} vs {base_path}: no shared points "
+            f"({len(fresh)} fresh, {len(base)} baseline)"
+        ]
+    failures: List[str] = []
+    for k in shared:
+        f, b = fresh[k][METRIC], base[k][METRIC]
+        ok = f >= tolerance * b
+        label = " ".join(f"{key}={json.loads(v)}" for key, v in k)
+        print(
+            f"  {'ok  ' if ok else 'FAIL'} {label}: "
+            f"fresh {f:.2f}x vs baseline {b:.2f}x "
+            f"(floor {tolerance * b:.2f}x)"
+        )
+        if not ok:
+            failures.append(
+                f"{fresh_path}: {label} regressed to {f:.2f}x "
+                f"(baseline {b:.2f}x, tolerance {tolerance:g})"
+            )
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("pairs", nargs="+", metavar="FRESH:BASELINE[:TOLERANCE]",
+                    help="fresh-vs-committed JSON pairs to gate, each with "
+                    "an optional per-pair tolerance override")
+    ap.add_argument("--tolerance", type=float, default=0.3,
+                    help="fresh speedup must be >= TOLERANCE * baseline "
+                    "(default 0.3; see module docstring)")
+    args = ap.parse_args()
+
+    failures: List[str] = []
+    for pair in args.pairs:
+        parts = pair.split(":")
+        if len(parts) not in (2, 3):
+            raise SystemExit(
+                f"malformed pair {pair!r} (want FRESH:BASELINE[:TOLERANCE])"
+            )
+        fresh_s, base_s = parts[0], parts[1]
+        tol = float(parts[2]) if len(parts) == 3 else args.tolerance
+        print(f"gate {fresh_s} vs {base_s} (tolerance {tol:g}):")
+        failures += gate_pair(Path(fresh_s), Path(base_s), tol)
+
+    if failures:
+        print("\nbench gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+    print("bench gate OK")
+
+
+if __name__ == "__main__":
+    main()

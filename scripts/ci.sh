@@ -1,23 +1,100 @@
 #!/usr/bin/env bash
-# Tier-1 verification in one reproducible step (see ROADMAP.md).
+# Tier-1 verification in named stages (see ROADMAP.md).
 #
-#   scripts/ci.sh             # full tier-1 suite
-#   scripts/ci.sh -k session  # extra args forwarded to pytest
+#   scripts/ci.sh                    # all stages: lint smoke tests bench
+#   scripts/ci.sh lint smoke         # just these stages, in order
+#   scripts/ci.sh tests -- -k session  # stage args after -- go to pytest
+#   scripts/ci.sh -k session         # back-compat: bare pytest args run all
+#                                    # stages with those args forwarded
 #
-# Property suites (hypothesis) auto-skip unless `pip install -r
-# requirements-dev.txt` has been run; multidevice checks run in their own
-# subprocesses and need no flags here.
+# Stages (the GitHub Actions workflow runs them as separate steps so a
+# compileall or smoke failure fails fast before paying for the full suite):
+#   lint   - byte-compile everything + refuse tracked bytecode
+#   smoke  - planner/exec/concurrent bench smoke guards (deterministic
+#            regression checks + loose wall-clock bars); writes fresh
+#            point JSONs into .ci-bench/ for the bench stage
+#   tests  - the full pytest suite (hypothesis property suites run when
+#            requirements-dev.txt is installed; they auto-skip otherwise)
+#   bench  - scripts/bench_gate.py: fresh .ci-bench/ speedups vs the
+#            committed BENCH_*.json baselines (documented tolerance)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-# fast lint: every module must at least byte-compile
-python -m compileall -q src
-# planner perf smoke (n=16): plan_sweep must stay bit-identical to the
-# per-size plan() loop and meaningfully faster; fails fast on regression
-python -m benchmarks.planner_bench --smoke
-# execution-engine smoke (n=8): warm engine calls must be 0-retrace
-# (deterministic guard) and beat the cold per-round interpreter by the
-# loose wall-clock bar; outputs are checked bit-identical inside
-python -m benchmarks.exec_bench --smoke
-# --durations keeps slow planner tests visible as the suite grows
-exec python -m pytest -x -q --durations=10 "$@"
+
+BENCH_DIR=".ci-bench"
+
+stage_lint() {
+  # fast lint: every module must at least byte-compile
+  python -m compileall -q src benchmarks scripts tests
+  # committed bytecode must never reappear (purged in PR 5; see .gitignore)
+  if git ls-files | grep -E '(^|/)__pycache__/|\.pyc$'; then
+    echo "lint: tracked bytecode detected — purge it and rely on .gitignore" >&2
+    return 1
+  fi
+}
+
+stage_smoke() {
+  mkdir -p "$BENCH_DIR"
+  # planner perf smoke (n=16): plan_sweep must stay bit-identical to the
+  # per-size plan() loop and meaningfully faster; fails fast on regression
+  python -m benchmarks.planner_bench --smoke --json-out "$BENCH_DIR/BENCH_planner.json"
+  # execution-engine smoke (n=8): warm engine calls must be 0-retrace
+  # (deterministic guard) and beat the cold per-round interpreter
+  python -m benchmarks.exec_bench --smoke --json-out "$BENCH_DIR/BENCH_exec.json"
+  # concurrent-group smoke (n=16): joint plans reproducible, never worse
+  # than sequential, >= 1.2x at some swept point
+  python -m benchmarks.concurrent_bench --smoke --json-out "$BENCH_DIR/BENCH_concurrent.json"
+}
+
+stage_tests() {
+  # --durations keeps slow planner tests visible as the suite grows
+  # ${arr[@]+...} keeps `set -u` happy on bash < 4.4 when no args were given
+  python -m pytest -x -q --durations=10 ${PYTEST_ARGS[@]+"${PYTEST_ARGS[@]}"}
+}
+
+stage_bench() {
+  # regenerate any fresh file the smoke stage did not leave behind
+  mkdir -p "$BENCH_DIR"
+  [ -f "$BENCH_DIR/BENCH_planner.json" ] || \
+    python -m benchmarks.planner_bench --smoke --json-out "$BENCH_DIR/BENCH_planner.json"
+  [ -f "$BENCH_DIR/BENCH_exec.json" ] || \
+    python -m benchmarks.exec_bench --smoke --json-out "$BENCH_DIR/BENCH_exec.json"
+  [ -f "$BENCH_DIR/BENCH_concurrent.json" ] || \
+    python -m benchmarks.concurrent_bench --smoke --json-out "$BENCH_DIR/BENCH_concurrent.json"
+  # exec gets a looser tolerance: its warm-leg denominator is milliseconds
+  # and legitimately swings under co-tenant load (see bench_gate docstring)
+  python scripts/bench_gate.py \
+    "$BENCH_DIR/BENCH_planner.json:BENCH_planner.json" \
+    "$BENCH_DIR/BENCH_exec.json:BENCH_exec.json:0.1" \
+    "$BENCH_DIR/BENCH_concurrent.json:BENCH_concurrent.json"
+}
+
+# ---- argument parsing: stage names, then optional -- pytest args ----------
+STAGES=()
+PYTEST_ARGS=()
+seen_sep=0
+for arg in "$@"; do
+  if [ "$seen_sep" = 1 ] || [ "$arg" = "--" ]; then
+    [ "$arg" = "--" ] && [ "$seen_sep" = 0 ] && { seen_sep=1; continue; }
+    PYTEST_ARGS+=("$arg")
+  else
+    case "$arg" in
+      lint|smoke|tests|bench) STAGES+=("$arg") ;;
+      *)
+        # back-compat with the pre-stage interface: the first word that is
+        # not a stage name (a pytest flag, test path, -k expression, ...)
+        # and everything after it forwards to pytest
+        seen_sep=1
+        PYTEST_ARGS+=("$arg")
+        ;;
+    esac
+  fi
+done
+if [ "${#STAGES[@]}" -eq 0 ]; then
+  STAGES=(lint smoke tests bench)
+fi
+
+for stage in "${STAGES[@]}"; do
+  echo "==> ci stage: $stage"
+  "stage_$stage"
+done

@@ -10,6 +10,8 @@ from .api import (
     Backend,
     CacheStats,
     Communicator,
+    ConcurrentCollectiveRequest,
+    ConcurrentPcclPlan,
     PcclSession,
     PlanCache,
     get_backend,
@@ -19,6 +21,8 @@ __all__ = [
     "Backend",
     "CacheStats",
     "Communicator",
+    "ConcurrentCollectiveRequest",
+    "ConcurrentPcclPlan",
     "PcclSession",
     "PlanCache",
     "get_backend",

@@ -16,6 +16,8 @@ Legacy entry points (``repro.core.pccl.plan_collective`` and
 ``repro.comm.PcclComm``) remain as deprecation shims over this package.
 """
 
+from repro.core.pccl import ConcurrentCollectiveRequest, ConcurrentPcclPlan
+
 from .backends import (
     Backend,
     InterpBackend,
@@ -31,6 +33,8 @@ __all__ = [
     "Backend",
     "CacheStats",
     "Communicator",
+    "ConcurrentCollectiveRequest",
+    "ConcurrentPcclPlan",
     "InterpBackend",
     "PcclSession",
     "PlanCache",

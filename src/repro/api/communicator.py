@@ -19,40 +19,19 @@ not the full axis.
 
 from __future__ import annotations
 
-from dataclasses import replace
 from typing import TYPE_CHECKING, Any, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.comm.exec_engine import _LruCache  # jax-free
 
-from repro.core.schedules import Round, Schedule
+from repro.core.schedules import Groups, Schedule
+from repro.core.schedules import replicate_groups as subgroup_schedule  # noqa: F401 back-compat re-export
 
 from .backends import Backend, get_backend
 
 if TYPE_CHECKING:  # pragma: no cover
     from .session import PcclSession
-
-Groups = Tuple[Tuple[int, ...], ...]
-
-
-def subgroup_schedule(sched: Schedule, groups: Groups, n_axis: int) -> Schedule:
-    """Replicate a group-local schedule across all groups of the axis.
-
-    The input schedule is over ``m = len(group)`` local ranks; the output is
-    over the full ``n_axis`` ranks with every group's transfers composed into
-    each round.  Chunk ids stay group-local (every rank holds ``m`` chunks),
-    which is exactly what the ppermute interpreter indexes with.
-    """
-    rounds = []
-    for rnd in sched.rounds:
-        transfers = tuple(
-            replace(t, src=g[t.src], dst=g[t.dst])
-            for g in groups
-            for t in rnd.transfers
-        )
-        rounds.append(Round(transfers, rnd.size))
-    return Schedule(sched.collective, sched.algorithm, n_axis, sched.buffer_bytes, tuple(rounds))
 
 
 class Communicator:
@@ -123,6 +102,24 @@ class Communicator:
 
     def chosen_algorithm(self, collective: str, nbytes: float) -> str:
         return self._schedule(collective, nbytes).algorithm
+
+    def concurrent_request(
+        self, collective: str, nbytes: float, *, algorithm: Optional[str] = None
+    ):
+        """A :class:`~repro.core.pccl.ConcurrentCollectiveRequest` for this
+        communicator's process groups, for
+        :meth:`~repro.api.session.PcclSession.plan_concurrent` — a split
+        communicator contributes its groups (every group runs the collective
+        simultaneously), a full-axis one a single domain-spanning group.
+        ``nbytes`` is the per-rank buffer size within a group."""
+        from repro.core.pccl import ConcurrentCollectiveRequest
+
+        return ConcurrentCollectiveRequest(
+            collective,
+            float(nbytes),
+            groups=self.groups,
+            algorithm=algorithm or self.algorithm,
+        )
 
     def estimate(self, collective: str, nbytes: float) -> float:
         """Planned time (seconds) of one collective from the current fabric."""

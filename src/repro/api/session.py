@@ -36,9 +36,12 @@ from typing import TYPE_CHECKING, Dict, FrozenSet, List, Optional, Sequence, Tup
 from repro.core.cost_model import HardwareParams, ScheduleCost, schedule_cost_fixed
 from repro.core.pccl import (
     CollectiveRequest,
+    ConcurrentCollectiveRequest,
+    ConcurrentPcclPlan,
     PcclPlan,
     default_standard_set,
     plan_collective_sweep,
+    plan_concurrent_collectives,
 )
 from repro.core.planner import PlanStructure
 from repro.core import schedules as S
@@ -329,6 +332,68 @@ class PcclSession:
                     self.cache.store(keys[k], p)
                     plans[k] = p
             return [plans[k] for k in range(len(sizes_f))]
+
+    def plan_concurrent(
+        self,
+        requests: Sequence[ConcurrentCollectiveRequest],
+        *,
+        n: Optional[int] = None,
+    ) -> ConcurrentPcclPlan:
+        """Jointly plan several concurrently-active collectives (cached).
+
+        ``requests`` are :class:`repro.core.pccl.ConcurrentCollectiveRequest`
+        specs — most conveniently built with
+        :meth:`Communicator.concurrent_request`, so a TP×DP job plans both
+        mesh axes in one call::
+
+            comm = session.communicator("x", 16)
+            tp = comm.split([r // 4 for r in range(16)])   # rows
+            dp = comm.split([r % 4 for r in range(16)])    # columns
+            cp = session.plan_concurrent([
+                tp.concurrent_request("all_reduce", act_bytes),
+                dp.concurrent_request("reduce_scatter", grad_bytes),
+            ])
+
+        The joint plan starts from the *current* fabric state, and the
+        combined final topology (every group's last allocation) is threaded
+        back as the next plan's ``G0``.  Results are memoized in the plan
+        cache keyed by the full request tuple plus the fabric fingerprint;
+        concurrent plans bypass the structure cache (their structures are
+        built against the composed full-domain schedules).
+
+        ``n`` (the shared fabric domain size) is inferred from any request
+        that carries process groups; pass it explicitly when every request
+        spans the whole domain.
+        """
+        with self._plan_lock:
+            requests = tuple(requests)
+            if not requests:
+                raise ValueError("plan_concurrent needs at least one request")
+            if n is None:
+                for req in requests:
+                    if req.groups is not None:
+                        n = sum(len(g) for g in req.groups)
+                        break
+            n = self._resolve_n(n)
+            g0 = self.fabric(n)
+            key = (
+                "__concurrent__",
+                n,
+                tuple(
+                    (r.collective, float(r.nbytes), r.algorithm, r.groups)
+                    for r in requests
+                ),
+                g0.edges,
+            )
+            plan = self.cache.lookup(key)
+            if plan is None:
+                plan = plan_concurrent_collectives(
+                    requests, n, g0, self.hw, standard=self.standard_set(n)
+                )
+                self.cache.store(key, plan)
+            if self.thread_fabric and plan.final_topology is not None:
+                self._fabric[n] = plan.final_topology
+            return plan
 
     def choose_algorithm(
         self, collective: str, nbytes: float, *, n: Optional[int] = None

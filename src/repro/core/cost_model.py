@@ -386,6 +386,76 @@ def pairs_of(rnd: Round) -> List[Tuple[int, int]]:
     return [(t.src, t.dst) for t in rnd.transfers if t.src != t.dst]
 
 
+# Bounded LRU over (n, edges, pair-multiset) → per-directed-edge loads.
+# The concurrent-group arbiter (planner.plan_concurrent) prices cross-group
+# contention per *link*, which needs the full load vector rather than the
+# max that STRUCTURE_TABLE keeps.
+_EDGE_LOAD_CACHE: "OrderedDict[Tuple, Optional[Tuple]]" = OrderedDict()
+_EDGE_LOAD_CACHE_MAX = 65536
+_EDGE_LOAD_CACHE_LOCK = threading.Lock()
+
+
+def edge_loads(
+    topo: Topology,
+    pairs: Sequence[Tuple[int, int]],
+    key: Optional[PairKey] = None,
+) -> Optional[Tuple[int, Tuple[Tuple[Tuple[int, int], int], ...]]]:
+    """``(dilation, ((edge, count), ...))`` for routing ``pairs`` on ``topo``,
+    or ``None`` when some pair has no path.
+
+    Routes follow the same deterministic shortest paths as
+    :func:`_route_pairs`' general path (the ``_scipy_paths`` predecessor
+    walk).  Every fast path in ``_route_pairs`` routes along *unique*
+    shortest paths (linear graphs, direct circuits, functional graphs), so
+    ``max(count)`` here always equals the congestion factor
+    ``STRUCTURE_TABLE`` reports and ``dilation`` matches exactly — the
+    concurrent arbiter's per-link pricing degenerates to Alg. 2's
+    ``(D, C)`` whenever a group has the fabric to itself.
+    """
+    import numpy as np
+
+    if not pairs:
+        return (0, ())
+    if key is None:
+        key = round_structure_key(pairs)
+    full_key = (topo.n, topo.edges, key)
+    with _EDGE_LOAD_CACHE_LOCK:
+        if full_key in _EDGE_LOAD_CACHE:
+            _EDGE_LOAD_CACHE.move_to_end(full_key)
+            return _EDGE_LOAD_CACHE[full_key]
+
+    srcs = np.asarray([p[0] for p in pairs])
+    dsts = np.asarray([p[1] for p in pairs])
+    dist, pred = _scipy_paths(topo)
+    d = dist[srcs, dsts]
+    result: Optional[Tuple] = None
+    if np.all(np.isfinite(d)):
+        dilation = int(d.max())
+        cur = dsts.copy()
+        codes: List = []
+        active = cur != srcs
+        while active.any():
+            prev = pred[srcs[active], cur[active]]
+            codes.append(prev.astype(np.int64) * topo.n + cur[active])
+            nxt = cur.copy()
+            nxt[active] = prev
+            cur = nxt
+            active = cur != srcs
+        uniq, counts = np.unique(np.concatenate(codes), return_counts=True)
+        loads = tuple(
+            ((int(c) // topo.n, int(c) % topo.n), int(k))
+            for c, k in zip(uniq.tolist(), counts.tolist())
+        )
+        result = (dilation, loads)
+
+    with _EDGE_LOAD_CACHE_LOCK:
+        _EDGE_LOAD_CACHE[full_key] = result
+        _EDGE_LOAD_CACHE.move_to_end(full_key)
+        while len(_EDGE_LOAD_CACHE) > _EDGE_LOAD_CACHE_MAX:
+            _EDGE_LOAD_CACHE.popitem(last=False)
+    return result
+
+
 def round_structure_key(pairs: Sequence[Tuple[int, int]]) -> PairKey:
     """Canonical pair-*multiset* key of a round's structure.
 
@@ -619,6 +689,8 @@ def clear_structure_caches(keep_shortest_paths: bool = False) -> None:
             _SP_CACHE.clear()
     with _LINEAR_CACHE_LOCK:
         _LINEAR_CACHE.clear()
+    with _EDGE_LOAD_CACHE_LOCK:
+        _EDGE_LOAD_CACHE.clear()
 
 
 def round_cost_from_factors(

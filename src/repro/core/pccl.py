@@ -26,8 +26,16 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from . import schedules as S
 from .cost_model import HardwareParams, ScheduleCost, ideal_cost, schedule_cost_fixed
-from .planner import Plan, PlanStructure, build_structure, plan_sweep
-from .schedules import Schedule
+from .planner import (
+    ConcurrentPlan,
+    Plan,
+    PlanStructure,
+    _plans_from_structure,
+    build_structure,
+    plan_concurrent,
+    plan_sweep,
+)
+from .schedules import Groups, Schedule, replicate_groups
 from .topology import Topology, ring, standard_topologies
 
 
@@ -93,6 +101,21 @@ def candidate_algorithms(collective: str, n: int, mode: str) -> List[str]:
     if collective == "p2p":
         return ["p2p"]
     raise ValueError(f"unknown collective {collective!r}")
+
+
+def candidate_dims(
+    algo: str, n: int, dims: Optional[Sequence[int]]
+) -> Tuple[Optional[Sequence[int]], bool]:
+    """(dims, usable) for one candidate algorithm: bucket algorithms over an
+    ``n`` with only a degenerate (min dim 1) factorization are unusable and
+    must be skipped by every arbitration path the same way."""
+    if dims is None and algo.startswith("bucket"):
+        from .topology import square_dims2, square_dims3
+
+        dims = square_dims2(n) if algo == "bucket2d" else square_dims3(n)
+        if min(dims) == 1:
+            return None, False
+    return dims, True
 
 
 def default_standard_set(n: int) -> List[Topology]:
@@ -167,15 +190,9 @@ def plan_collective_sweep(
     best: List[Optional[PcclPlan]] = [None] * len(sizes)
     cands: List[List[Tuple[str, float]]] = [[] for _ in sizes]
     for algo in candidate_algorithms(request.collective, request.n, request.algorithm):
-        algo_dims = dims
-        if algo_dims is None and algo.startswith("bucket"):
-            from .topology import square_dims2, square_dims3
-
-            algo_dims = (
-                square_dims2(request.n) if algo == "bucket2d" else square_dims3(request.n)
-            )
-            if min(algo_dims) == 1:
-                continue  # degenerate factorization
+        algo_dims, usable = candidate_dims(algo, request.n, dims)
+        if not usable:
+            continue
         template = S.get_schedule(
             request.collective, algo, request.n, sizes[0], dims=algo_dims
         )
@@ -201,6 +218,172 @@ def plan_collective_sweep(
         assert b is not None
         out.append(PcclPlan(b.request, b.schedule, b.plan, tuple(c)))
     return out
+
+
+# --------------------------------------------------------- concurrent groups
+
+
+@dataclass(frozen=True)
+class ConcurrentCollectiveRequest:
+    """One member of a concurrent plan: a collective over one process-group
+    set of a shared ``n``-rank fabric domain.
+
+    ``groups`` partitions the domain into equal-size groups that each run
+    the collective simultaneously (the ``Communicator.split`` pattern — TP
+    rows / DP columns of a 2-D mesh); ``None`` means a single group spanning
+    the whole domain.  ``nbytes`` is the per-rank buffer size *within* a
+    group, and ``algorithm`` follows :func:`candidate_algorithms` semantics
+    (``auto`` arbitrates over the zoo via each candidate's solo plan).
+    """
+
+    collective: str
+    nbytes: float
+    groups: Optional[Groups] = None
+    algorithm: str = "paper_default"
+
+    def __post_init__(self) -> None:
+        # normalize list-of-lists literals: group sets are part of hashable
+        # plan-cache keys, so they must be tuples all the way down
+        if self.groups is not None:
+            object.__setattr__(
+                self, "groups", tuple(tuple(g) for g in self.groups)
+            )
+
+    def group_size(self, n: int) -> int:
+        return len(self.groups[0]) if self.groups else n
+
+
+@dataclass(frozen=True)
+class ConcurrentPcclPlan:
+    """Joint plan for several concurrent collective requests (the facade
+    wrapper around :class:`repro.core.planner.ConcurrentPlan`)."""
+
+    requests: Tuple[ConcurrentCollectiveRequest, ...]
+    n: int
+    algorithms: Tuple[str, ...]       # chosen algorithm per request
+    plan: ConcurrentPlan
+
+    @property
+    def cost(self) -> float:
+        return self.plan.total_cost
+
+    @property
+    def joint_cost(self) -> float:
+        return self.plan.joint_cost
+
+    @property
+    def sequential_cost(self) -> float:
+        return self.plan.sequential_cost
+
+    @property
+    def speedup(self) -> float:
+        return self.plan.speedup
+
+    @property
+    def serialized(self) -> bool:
+        return self.plan.serialized
+
+    @property
+    def final_topology(self) -> Optional[Topology]:
+        return self.plan.final_topology
+
+    def solo_costs(self) -> Tuple[float, ...]:
+        """Per-request fabric-to-itself planned costs (the sequential parts)."""
+        return tuple(g.solo.total_cost for g in self.plan.groups)
+
+
+def _validate_concurrent_groups(
+    requests: Sequence[ConcurrentCollectiveRequest], n: int
+) -> None:
+    for req in requests:
+        if req.groups is None:
+            continue
+        sizes = {len(g) for g in req.groups}
+        if len(sizes) != 1:
+            raise ValueError(
+                f"request {req.collective}: unequal group sizes {sizes}"
+            )
+        flat = sorted(r for g in req.groups for r in g)
+        if flat != list(range(n)):
+            raise ValueError(
+                f"request {req.collective}: groups must partition the "
+                f"{n}-rank domain exactly once"
+            )
+
+
+def plan_concurrent_collectives(
+    requests: Sequence[ConcurrentCollectiveRequest],
+    n: int,
+    g0: Topology,
+    hw: HardwareParams,
+    standard: Optional[Sequence[Topology]] = None,
+) -> ConcurrentPcclPlan:
+    """Jointly plan several concurrently-active collectives on one fabric.
+
+    Per request, each candidate algorithm's group-local schedule is built at
+    the requested size, composed across its process groups
+    (:func:`repro.core.schedules.replicate_groups`) and solo-planned; the
+    cheapest candidate is that request's input schedule — the same per-size
+    arbitration as :func:`plan_collective`, applied per group.  The chosen
+    schedules (structures reused from arbitration) then go through the
+    multi-group arbiter :func:`repro.core.planner.plan_concurrent`, which
+    overlaps the groups' rounds with per-link contention pricing and never
+    prices worse than running the solo plans sequentially.
+    """
+    requests = tuple(requests)
+    if not requests:
+        raise ValueError("plan_concurrent_collectives needs at least one request")
+    if standard is None:
+        standard = default_standard_set(n)
+    _validate_concurrent_groups(requests, n)
+
+    chosen_scheds: List[Schedule] = []
+    chosen_structs: List[PlanStructure] = []
+    chosen_solos: List[Plan] = []
+    algorithms: List[str] = []
+    for req in requests:
+        m = req.group_size(n)
+        best_plan: Optional[Plan] = None
+        best_sched: Optional[Schedule] = None
+        best_struct: Optional[PlanStructure] = None
+        for algo in candidate_algorithms(req.collective, m, req.algorithm):
+            algo_dims, usable = candidate_dims(algo, m, None)
+            if not usable:
+                continue
+            local = S.get_schedule(
+                req.collective, algo, m, req.nbytes, dims=algo_dims
+            )
+            sched = (
+                replicate_groups(local, req.groups, n)
+                if req.groups is not None
+                else local
+            )
+            struct = build_structure(g0, standard, sched, hw)
+            solo = _plans_from_structure(struct, [sched], hw)[0]
+            if best_plan is None or solo.total_cost < best_plan.total_cost:
+                best_plan, best_sched, best_struct = solo, sched, struct
+        if best_sched is None or best_struct is None:
+            raise ValueError(
+                f"request {req.collective} (group size {m}, algorithm "
+                f"{req.algorithm!r}) has no usable candidate schedule — "
+                "e.g. a bucket algorithm over a group size with a "
+                "degenerate factorization"
+            )
+        chosen_scheds.append(best_sched)
+        chosen_structs.append(best_struct)
+        chosen_solos.append(best_plan)
+        algorithms.append(best_sched.algorithm)
+
+    joint = plan_concurrent(
+        g0, standard, chosen_scheds, hw,
+        structures=chosen_structs, solo_plans=chosen_solos,
+    )
+    return ConcurrentPcclPlan(
+        requests=requests,
+        n=n,
+        algorithms=tuple(algorithms),
+        plan=joint,
+    )
 
 
 def baseline_cost(

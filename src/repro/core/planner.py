@@ -79,6 +79,7 @@ from .cost_model import (
     RoundCost,
     clear_structure_caches,
     comm_cost_round,
+    edge_loads,
     pairs_of,
     reconfig_cost,
     round_cost_from_factors,
@@ -541,6 +542,50 @@ def _rescale_schedule(schedule: Schedule, nbytes: float) -> Schedule:
     )
 
 
+def _check_structure(
+    structure: PlanStructure,
+    g0: Topology,
+    standard: Sequence[Topology],
+    schedule: Schedule,
+    hw: HardwareParams,
+) -> None:
+    """Validate a caller-supplied structure against the planning inputs.
+
+    A structure may have been built from a different schedule, fabric, or
+    hardware model — its (D, C) matrices, transition table, and start state
+    are only valid for its own."""
+    if structure.g0_edges != g0.edges:
+        raise ValueError(
+            "supplied structure was built for a different G0 edge set"
+        )
+    if structure.reconfig_params != (
+        hw.reconfig_delay, hw.reconfig_delay_per_link
+    ):
+        raise ValueError(
+            "supplied structure was built under different reconfiguration "
+            f"parameters {structure.reconfig_params}; its transition table "
+            "does not price this hardware model"
+        )
+    std_edges = {s.topo.edges for s in structure.states if s.standard}
+    for topo in standard:
+        if topo.edges not in std_edges:
+            raise ValueError(
+                f"standard topology {topo.name} is not a state of the "
+                "supplied structure"
+            )
+    if len(schedule.rounds) != structure.n_rounds:
+        raise ValueError(
+            f"template has {len(schedule.rounds)} rounds; supplied "
+            f"structure has {structure.n_rounds}"
+        )
+    for i, rnd in enumerate(schedule.rounds):
+        if round_structure_key(pairs_of(rnd)) != structure.round_keys[i]:
+            raise ValueError(
+                f"template round {i} does not match the supplied "
+                "structure's pair multiset"
+            )
+
+
 def plan_sweep(
     g0: Topology,
     standard: Sequence[Topology],
@@ -579,39 +624,7 @@ def plan_sweep(
     if structure is None:
         structure = build_structure(g0, standard, schedule, hw)
     else:
-        # a caller-supplied structure may have been built from a different
-        # schedule, fabric, or hardware model — its (D, C) matrices,
-        # transition table, and start state are only valid for its own
-        if structure.g0_edges != g0.edges:
-            raise ValueError(
-                "supplied structure was built for a different G0 edge set"
-            )
-        if structure.reconfig_params != (
-            hw.reconfig_delay, hw.reconfig_delay_per_link
-        ):
-            raise ValueError(
-                "supplied structure was built under different reconfiguration "
-                f"parameters {structure.reconfig_params}; its transition table "
-                "does not price this hardware model"
-            )
-        std_edges = {s.topo.edges for s in structure.states if s.standard}
-        for topo in standard:
-            if topo.edges not in std_edges:
-                raise ValueError(
-                    f"standard topology {topo.name} is not a state of the "
-                    "supplied structure"
-                )
-        if len(schedule.rounds) != structure.n_rounds:
-            raise ValueError(
-                f"template has {len(schedule.rounds)} rounds; supplied "
-                f"structure has {structure.n_rounds}"
-            )
-        for i, rnd in enumerate(schedule.rounds):
-            if round_structure_key(pairs_of(rnd)) != structure.round_keys[i]:
-                raise ValueError(
-                    f"template round {i} does not match the supplied "
-                    "structure's pair multiset"
-                )
+        _check_structure(structure, g0, standard, schedule, hw)
     if schedules is None:
         # rescaled schedules share the template's transfers, so they match
         # the (now template-validated) structure by construction
@@ -807,3 +820,588 @@ def plan_milp(
     if not res.success:
         raise RuntimeError(f"MILP failed: {res.message}")
     return float(res.fun)
+
+
+# ------------------------------------------------------- concurrent groups
+#
+# Real training steps keep several collectives in flight at once — TP
+# all-reduce, DP reduce-scatter, PP sends — all sharing one photonic fabric,
+# while Algorithm 1 prices each as if it owned every link.  The arbiter below
+# plans them *jointly*: each group keeps its own Algorithm-1 state machine
+# (its PlanStructure), but a joint round's circuits are the union of the
+# per-group allocations, and traffic is priced per *link*:
+#
+#   comm_i = max_g [ α·D_g(i, s_g) + β·max_{e ∈ routes_g} Σ_h w_h·load_h(e) ]
+#
+# i.e. every group's round runs at the speed of its most-contended link,
+# counting every group's bytes on that link, and the joint round finishes
+# when the slowest group does.  With link-disjoint allocations this
+# degenerates to max_g (α·D_g + β·C_g·w_g) — the groups genuinely overlap —
+# and shared links surface as priced congestion, the same
+# α·dilation + β·congestion·w arithmetic as Algorithm 2.  Reconfiguration is
+# charged on changes of the *union* edge set (a circuit some group already
+# holds is free for a group that needs it next round); finished groups'
+# circuits persist, so they never bill later transitions.
+#
+# Solvers, same discipline as the single-group planner:
+#   * `plan_concurrent`  — greedy + refinement: seed every group with its
+#     independent (solo) plan, then iterate exact per-group best-response
+#     DPs (others fixed) until the joint cost stops improving; several
+#     deterministic seeds, best taken.
+#   * `plan_concurrent_exact` — exact DP over the product state space
+#     (oracle for n ≤ 8 tests).
+# The sequential-independent baseline (each group solo-planned cold from
+# G0, costs summed — exactly what a per-collective planner bills a step)
+# bounds the result: `total_cost = min(joint, sequential)`, so joint
+# planning never prices worse than sequential independent planning.
+
+_EMPTY_LOADS = (np.zeros(0, dtype=np.int64), np.zeros(0))
+_MISS = object()
+
+
+@dataclass(frozen=True)
+class ConcurrentGroupPlan:
+    """One group's slice of a :class:`ConcurrentPlan`."""
+
+    schedule: Schedule
+    solo: Plan                      # planned as if the group owned the fabric
+    states: Tuple[int, ...]         # chosen state per joint round (carried
+                                    # unchanged past the group's last round)
+    state_names: Tuple[str, ...]
+
+
+@dataclass(frozen=True)
+class ConcurrentPlan:
+    """Joint plan for several collectives sharing one fabric."""
+
+    hw: HardwareParams
+    groups: Tuple[ConcurrentGroupPlan, ...]
+    n_rounds: int                   # joint horizon = max group round count
+    joint_cost: float               # converged aligned-overlap cost
+    sequential_cost: float          # Σ solo costs (time-multiplexed fabric)
+    serialized: bool                # joint overlap did not pay; run back-to-back
+    comm_cost: float                # joint decomposition (aligned candidate)
+    reconfig_cost: float
+    final_topology: Optional[Topology] = None
+
+    @property
+    def total_cost(self) -> float:
+        """What the arbiter charges, bounded by the sequential baseline —
+        the sum of cold fabric-to-itself solo plans, i.e. what today's
+        per-collective planner bills a step.  (A real back-to-back run
+        would start each group from its predecessor's final topology; the
+        baseline deliberately prices the *independent-planning* model the
+        arbiter is competing against, not that threaded execution.)"""
+        return self.sequential_cost if self.serialized else self.joint_cost
+
+    @property
+    def speedup(self) -> float:
+        """Planned-cost improvement over sequential independent planning."""
+        return self.sequential_cost / self.total_cost if self.total_cost > 0 else 1.0
+
+
+class _JointState:
+    """Shared arrays for joint evaluation and best-response over one
+    concurrent instance: the directed-edge universe of every group's states,
+    per-group incidence/dilation/feasibility matrices padded to the joint
+    horizon, and a memo of per-(group, round, state) link loads."""
+
+    def __init__(
+        self,
+        g0: Topology,
+        structures: Sequence[PlanStructure],
+        schedules: Sequence[Schedule],
+        hw: HardwareParams,
+    ) -> None:
+        self.hw = hw
+        self.structures = list(structures)
+        self.schedules = list(schedules)
+        self.G = len(structures)
+        self.rounds_g = [len(sch.rounds) for sch in schedules]
+        self.R = max(self.rounds_g)
+        universe = set(g0.edges)
+        for st in self.structures:
+            for s in st.states:
+                universe |= s.topo.edges
+        self.edges = sorted(universe)
+        self.E = max(len(self.edges), 1)
+        self._eidx = {e: k for k, e in enumerate(self.edges)}
+        self.g0_vec = np.zeros(self.E, dtype=bool)
+        for e in g0.edges:
+            self.g0_vec[self._eidx[e]] = True
+
+        self.inc: List[np.ndarray] = []      # (ns, E) bool
+        self.dil: List[np.ndarray] = []      # (R, ns), padded 0
+        self.feas: List[np.ndarray] = []     # (R, ns) bool, padded True
+        self.enter: List[np.ndarray] = []    # (R, ns) bool, padded False
+        self.sizes: List[np.ndarray] = []    # (R,) bytes/transfer, padded 0
+        self.pairs: List[List[List[Tuple[int, int]]]] = []
+        self.pair_keys: List[List] = []
+        for st, sch, rg in zip(self.structures, self.schedules, self.rounds_g):
+            ns = len(st.states)
+            inc = np.zeros((ns, self.E), dtype=bool)
+            for s in st.states:
+                for e in s.topo.edges:
+                    inc[s.idx, self._eidx[e]] = True
+            self.inc.append(inc)
+            dil = np.zeros((self.R, ns))
+            dil[:rg] = st.dilation
+            feas = np.ones((self.R, ns), dtype=bool)
+            feas[:rg] = st.feasible
+            ent = np.zeros((self.R, ns), dtype=bool)
+            ent[:rg] = st.enterable
+            self.dil.append(dil)
+            self.feas.append(feas)
+            self.enter.append(ent)
+            sz = np.zeros(self.R)
+            prs: List[List[Tuple[int, int]]] = []
+            keys: List = []
+            for i in range(self.R):
+                if i < rg:
+                    prs.append(pairs_of(sch.rounds[i]))
+                    keys.append(st.round_keys[i])
+                    sz[i] = sch.rounds[i].size
+                else:
+                    prs.append([])
+                    keys.append(None)
+            self.sizes.append(sz)
+            self.pairs.append(prs)
+            self.pair_keys.append(keys)
+        self._loads: Dict[Tuple, Optional[Tuple[np.ndarray, np.ndarray]]] = {}
+        self._scratch = np.zeros(self.E)
+
+    # ---------------------------------------------------------- link loads
+    def loads(self, g: int, i: int, s: int):
+        """(edge-index array, count array) of group ``g``'s round-``i``
+        transfers routed on state ``s``'s topology — each group's traffic is
+        confined to its own allocation.  ``None`` when unroutable; empty
+        arrays for empty rounds and rounds past the group's schedule."""
+        if i >= self.rounds_g[g] or not self.pairs[g][i]:
+            return _EMPTY_LOADS
+        key = (g, self.pair_keys[g][i], s)
+        hit = self._loads.get(key, _MISS)
+        if hit is not _MISS:
+            return hit
+        res = edge_loads(
+            self.structures[g].states[s].topo,
+            self.pairs[g][i],
+            key=self.pair_keys[g][i],
+        )
+        out: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        if res is not None:
+            _, pairs_counts = res
+            idx = np.asarray([self._eidx[e] for e, _ in pairs_counts], dtype=np.int64)
+            cnt = np.asarray([c for _, c in pairs_counts], dtype=np.float64)
+            out = (idx, cnt)
+        self._loads[key] = out
+        return out
+
+    # --------------------------------------------------------- joint costs
+    def comm_of(self, states_at_i: Sequence[int], i: int) -> float:
+        """Joint communication time of round ``i`` with each group ``g`` on
+        state ``states_at_i[g]`` (see the model comment above)."""
+        hw = self.hw
+        scratch = self._scratch
+        active: List[Tuple[int, np.ndarray]] = []
+        try:
+            for g in range(self.G):
+                ld = self.loads(g, i, states_at_i[g])
+                if ld is None:
+                    return LARGE_PENALTY
+                idx, cnt = ld
+                if idx.shape[0] == 0:
+                    continue
+                scratch[idx] += self.sizes[g][i] * cnt
+                active.append((g, idx))
+            worst = 0.0
+            for g, idx in active:
+                rc = hw.alpha * float(self.dil[g][i, states_at_i[g]]) + \
+                    hw.beta * float(scratch[idx].max())
+                if rc > worst:
+                    worst = rc
+            return worst
+        finally:
+            for _, idx in active:
+                scratch[idx] = 0.0
+
+    def union_vec(self, states_at_i: Sequence[int]) -> np.ndarray:
+        u = np.zeros(self.E, dtype=bool)
+        for g in range(self.G):
+            u |= self.inc[g][states_at_i[g]]
+        return u
+
+    def _price_scalar(self, changed: int) -> float:
+        if changed == 0:
+            return 0.0
+        if self.hw.reconfig_delay_per_link is None:
+            return self.hw.reconfig_delay
+        return min(self.hw.reconfig_delay,
+                   self.hw.reconfig_delay_per_link * changed)
+
+    def _price_vec(self, changed: np.ndarray) -> np.ndarray:
+        if self.hw.reconfig_delay_per_link is None:
+            return np.where(changed > 0.5, self.hw.reconfig_delay, 0.0)
+        return np.minimum(self.hw.reconfig_delay,
+                          self.hw.reconfig_delay_per_link * changed)
+
+    def evaluate(self, seqs: Sequence[Sequence[int]]):
+        """(total, per-round comm, per-round reconfig, final union vector)
+        of a full assignment — the single source of joint-cost arithmetic
+        (solvers re-evaluate through here, so candidates compare exactly)."""
+        comm = [
+            self.comm_of([seqs[g][i] for g in range(self.G)], i)
+            for i in range(self.R)
+        ]
+        prev = self.g0_vec
+        reconf: List[float] = []
+        for i in range(self.R):
+            u = self.union_vec([seqs[g][i] for g in range(self.G)])
+            t = self._price_scalar(int(np.count_nonzero(prev ^ u)))
+            if self.hw.overlap and i > 0:
+                t = max(0.0, t - comm[i - 1])
+            reconf.append(t)
+            prev = u
+        return float(sum(comm) + sum(reconf)), comm, reconf, prev
+
+    # ------------------------------------------------------- best response
+    def best_response(
+        self, seqs: Sequence[Sequence[int]], g: int, others: Sequence[int]
+    ) -> Tuple[int, ...]:
+        """Exact DP for group ``g`` with the groups in ``others`` frozen at
+        their ``seqs`` assignments (groups outside ``others`` are absent).
+
+        Per-round costs are the *joint* comm times (g's state slows other
+        groups whose links it shares, and vice versa), and transitions price
+        changes of the union edge set — so the DP minimizes exactly the
+        quantity :meth:`evaluate` reports, restricted to ``g``'s coordinate.
+        """
+        hw = self.hw
+        st = self.structures[g]
+        ns = len(st.states)
+        R, E = self.R, self.E
+
+        o_vec = np.zeros((R, E), dtype=bool)
+        o_bytes = np.zeros((R, E))
+        o_terms: List[List[Tuple[float, np.ndarray]]] = []
+        for i in range(R):
+            terms: List[Tuple[float, np.ndarray]] = []
+            for h in others:
+                s_h = seqs[h][i]
+                o_vec[i] |= self.inc[h][s_h]
+                ld = self.loads(h, i, s_h)
+                if ld is None or ld[0].shape[0] == 0:
+                    continue
+                idx, cnt = ld
+                o_bytes[i, idx] += self.sizes[h][i] * cnt
+                terms.append((hw.alpha * float(self.dil[h][i, s_h]), idx))
+            o_terms.append(terms)
+
+        # joint comm cost of round i per candidate state of g, others fixed
+        cost = np.full((R, ns), LARGE_PENALTY)
+        for i in range(R):
+            if not self.pairs[g][i]:
+                base = 0.0
+                for a_dh, idx_h in o_terms[i]:
+                    rc = a_dh + hw.beta * float(o_bytes[i, idx_h].max())
+                    if rc > base:
+                        base = rc
+                cost[i, :] = base
+                continue
+            w = self.sizes[g][i]
+            for s in range(ns):
+                if not self.feas[g][i, s]:
+                    continue
+                ld = self.loads(g, i, s)
+                if ld is None:
+                    continue
+                idx, cnt = ld
+                scratch = o_bytes[i].copy()
+                scratch[idx] += w * cnt
+                rc = hw.alpha * float(self.dil[g][i, s]) + \
+                    hw.beta * float(scratch[idx].max())
+                for a_dh, idx_h in o_terms[i]:
+                    rc_h = a_dh + hw.beta * float(scratch[idx_h].max())
+                    if rc_h > rc:
+                        rc = rc_h
+                cost[i, s] = rc
+
+        # DP with per-round transition tables (the union edge set seen from
+        # g's side changes with the others' rounds); same vectorization and
+        # tie-breaking as _plans_from_structure
+        idxs = np.arange(ns)
+        INF = float("inf")
+        f = np.full((R, ns), INF)
+        parent = np.full((R, ns), -1, dtype=np.int64)
+        B_prev: Optional[np.ndarray] = None
+        for i in range(R):
+            B = self.inc[g] | o_vec[i][None, :]
+            Bf = B.astype(np.float64)
+            Bsz = Bf.sum(axis=1)
+            if i == 0:
+                g0f = self.g0_vec.astype(np.float64)
+                changed = g0f.sum() + Bsz - 2.0 * (Bf @ g0f)
+                T = self._price_vec(changed)
+                enter0 = self.enter[g][0] | (idxs == st.g0_idx)
+                f[0, enter0] = cost[0, enter0] + T[enter0]
+                parent[0, enter0] = st.g0_idx
+            else:
+                Af = B_prev.astype(np.float64)
+                Asz = Af.sum(axis=1)
+                changed = Asz[:, None] + Bsz[None, :] - 2.0 * (Af @ Bf.T)
+                T = self._price_vec(changed)
+                if hw.overlap:
+                    eff = np.maximum(0.0, T - cost[i - 1][:, None])
+                else:
+                    eff = T
+                cand = f[i - 1][:, None] + eff
+                best_p = cand.argmin(axis=0)
+                best = cand[best_p, idxs]
+                stay = cand[idxs, idxs]
+                prefer_stay = stay <= best
+                best = np.where(prefer_stay, stay, best)
+                best_p = np.where(prefer_stay, idxs, best_p)
+                ent = self.enter[g][i]
+                f[i, ent] = best[ent] + cost[i, ent]
+                parent[i, ent] = best_p[ent]
+                carry = ~ent
+                if carry.any():
+                    # staying put is not free here: the union still changes
+                    # when *other* groups reconfigure around g's held edges,
+                    # so the carried state pays the diagonal transition —
+                    # exactly what evaluate() charges
+                    diag = np.diagonal(eff)
+                    fin = np.isfinite(f[i - 1, carry])
+                    f[i, carry] = np.where(
+                        fin,
+                        f[i - 1, carry] + diag[carry] + cost[i, carry],
+                        INF,
+                    )
+                    parent[i, carry] = np.where(fin, idxs[carry], -1)
+            B_prev = B
+        last = int(f[R - 1].argmin())
+        seq = [last]
+        for i in range(R - 1, 0, -1):
+            seq.append(int(parent[i, seq[-1]]))
+        seq.reverse()
+        return tuple(seq)
+
+
+def _concurrent_structures(
+    g0: Topology,
+    standard: Sequence[Topology],
+    schedules: Sequence[Schedule],
+    hw: HardwareParams,
+    structures: Optional[Sequence[PlanStructure]],
+) -> List[PlanStructure]:
+    for sch in schedules:
+        if sch.n != g0.n:
+            raise ValueError(
+                f"schedule {sch.algorithm} spans n={sch.n} ranks but the "
+                f"fabric has n={g0.n}"
+            )
+        if not sch.rounds:
+            raise ValueError("plan_concurrent needs non-empty schedules")
+    if structures is None:
+        return [build_structure(g0, standard, sch, hw) for sch in schedules]
+    structures = list(structures)
+    if len(structures) != len(schedules):
+        raise ValueError(
+            f"got {len(structures)} structures for {len(schedules)} schedules"
+        )
+    for st, sch in zip(structures, schedules):
+        _check_structure(st, g0, standard, sch, hw)
+    return structures
+
+
+def plan_concurrent(
+    g0: Topology,
+    standard: Sequence[Topology],
+    schedules: Sequence[Schedule],
+    hw: HardwareParams,
+    *,
+    structures: Optional[Sequence[PlanStructure]] = None,
+    solo_plans: Optional[Sequence[Plan]] = None,
+    refine_passes: int = 6,
+) -> ConcurrentPlan:
+    """Jointly plan several concurrently-active collectives on one fabric.
+
+    Each schedule is a full-domain composition of one process-group set's
+    collective (``schedules.replicate_groups``); rounds are aligned by index
+    (bulk-synchronous steps) and groups that finish early leave their
+    circuits in place.  See the module comment above for the cost model.
+
+    The solver seeds every group with its independent Algorithm-1 plan,
+    adds greedy staggered seeds (each group best-responding to the groups
+    placed before it, in both orders), refines each seed by round-robin
+    exact best-response DPs until the joint cost stops improving, and keeps
+    the cheapest.  Everything is deterministic — same inputs, same plan,
+    bit-for-bit.  ``total_cost`` is bounded by the sequential-independent
+    baseline (``sequential_cost``: each group solo-planned cold from ``G0``,
+    costs summed — the independent-planning model, not a threaded
+    back-to-back execution), so the arbiter never prices worse than
+    sequential independent planning; ``serialized`` says the bound was the
+    better choice (it can be, e.g., under overlapped reconfiguration, where
+    serial execution hides reprogramming better than sharing does).
+    """
+    schedules = list(schedules)
+    if not schedules:
+        raise ValueError("plan_concurrent needs at least one schedule")
+    structures = _concurrent_structures(g0, standard, schedules, hw, structures)
+    if solo_plans is not None:
+        # a caller that already solo-planned each group during algorithm
+        # arbitration (pccl.plan_concurrent_collectives) passes the plans in
+        # so the O(rounds·ns²) numeric phase is not re-run per group
+        solo = list(solo_plans)
+        if len(solo) != len(schedules):
+            raise ValueError(
+                f"got {len(solo)} solo plans for {len(schedules)} schedules"
+            )
+    else:
+        solo = [
+            _plans_from_structure(st, [sch], hw)[0]
+            for st, sch in zip(structures, schedules)
+        ]
+    sequential_cost = float(sum(p.total_cost for p in solo))
+
+    ev = _JointState(g0, structures, schedules, hw)
+    R, G = ev.R, ev.G
+
+    def padded(plan: Plan) -> Tuple[int, ...]:
+        seq = [s.state_idx for s in plan.steps]
+        seq += [seq[-1]] * (R - len(seq))
+        return tuple(seq)
+
+    def refine(seqs: List[Tuple[int, ...]]):
+        total = ev.evaluate(seqs)[0]
+        for _ in range(max(refine_passes, 0)):
+            improved = False
+            for g in range(G):
+                trial = list(seqs)
+                trial[g] = ev.best_response(
+                    seqs, g, [h for h in range(G) if h != g]
+                )
+                t = ev.evaluate(trial)[0]
+                if t < total:
+                    seqs, total = trial, t
+                    improved = True
+            if not improved:
+                break
+        return seqs, total
+
+    base = [padded(p) for p in solo]
+    candidates = [refine(list(base))]
+    if G > 1:
+        # staggered greedy seeds: grant the fabric in priority order, each
+        # group best-responding to those already placed
+        for order in (list(range(G)), list(reversed(range(G)))):
+            seqs = list(base)
+            placed: List[int] = []
+            for g in order:
+                seqs[g] = ev.best_response(seqs, g, placed)
+                placed.append(g)
+            candidates.append(refine(seqs))
+    best_seqs, _ = min(candidates, key=lambda c: c[1])
+    joint_cost, comm, reconf, final_vec = ev.evaluate(best_seqs)
+    serialized = joint_cost > sequential_cost
+    if serialized:
+        final_topo = solo[-1].final_topology
+    else:
+        final_edges = frozenset(
+            e for e, on in zip(ev.edges, final_vec.tolist()) if on
+        )
+        final_topo = Topology(g0.n, final_edges, name="concurrent_final")
+    groups = tuple(
+        ConcurrentGroupPlan(
+            schedule=sch,
+            solo=sp,
+            states=tuple(best_seqs[g]),
+            state_names=tuple(
+                structures[g].states[s].topo.name for s in best_seqs[g]
+            ),
+        )
+        for g, (sch, sp) in enumerate(zip(schedules, solo))
+    )
+    return ConcurrentPlan(
+        hw=hw,
+        groups=groups,
+        n_rounds=R,
+        joint_cost=float(joint_cost),
+        sequential_cost=sequential_cost,
+        serialized=serialized,
+        comm_cost=float(sum(comm)),
+        reconfig_cost=float(sum(reconf)),
+        final_topology=final_topo,
+    )
+
+
+def plan_concurrent_exact(
+    g0: Topology,
+    standard: Sequence[Topology],
+    schedules: Sequence[Schedule],
+    hw: HardwareParams,
+    *,
+    structures: Optional[Sequence[PlanStructure]] = None,
+    max_product_states: int = 4096,
+) -> float:
+    """Exact joint DP over the product state space (oracle for n ≤ 8 tests).
+
+    Returns the optimal *aligned* joint cost — the quantity
+    ``plan_concurrent(...).joint_cost`` approximates; the serialized
+    fallback is deliberately outside its search space."""
+    import itertools
+
+    schedules = list(schedules)
+    if not schedules:
+        raise ValueError("plan_concurrent_exact needs at least one schedule")
+    structures = _concurrent_structures(g0, standard, schedules, hw, structures)
+    ev = _JointState(g0, structures, schedules, hw)
+    G, R = ev.G, ev.R
+    ns_list = [len(st.states) for st in structures]
+    n_prod = 1
+    for k in ns_list:
+        n_prod *= k
+    if n_prod > max_product_states:
+        raise ValueError(
+            f"product state space {n_prod} exceeds {max_product_states}; "
+            "the exact solver is an oracle for small instances"
+        )
+    prod = list(itertools.product(*[range(k) for k in ns_list]))
+    unions = {tup: ev.union_vec(tup) for tup in prod}
+    comm_memo: Dict[Tuple[int, Tuple[int, ...]], float] = {}
+
+    def comm(tup: Tuple[int, ...], i: int) -> float:
+        key = (i, tup)
+        v = comm_memo.get(key)
+        if v is None:
+            v = ev.comm_of(tup, i)
+            comm_memo[key] = v
+        return v
+
+    f: Dict[Tuple[int, ...], float] = {}
+    for tup in prod:
+        if all(
+            ev.enter[g][0][s] or s == structures[g].g0_idx
+            for g, s in enumerate(tup)
+        ):
+            changed = int(np.count_nonzero(ev.g0_vec ^ unions[tup]))
+            f[tup] = ev._price_scalar(changed) + comm(tup, 0)
+    for i in range(1, R):
+        nf: Dict[Tuple[int, ...], float] = {}
+        for ptup, pv in f.items():
+            pc = comm(ptup, i - 1)
+            pu = unions[ptup]
+            for stup in prod:
+                if not all(
+                    ev.enter[g][i][s] or s == ptup[g]
+                    for g, s in enumerate(stup)
+                ):
+                    continue
+                t = ev._price_scalar(int(np.count_nonzero(pu ^ unions[stup])))
+                if hw.overlap:
+                    t = max(0.0, t - pc)
+                v = pv + t + comm(stup, i)
+                old = nf.get(stup)
+                if old is None or v < old:
+                    nf[stup] = v
+        f = nf
+    return float(min(f.values()))

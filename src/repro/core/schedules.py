@@ -138,6 +138,41 @@ class Schedule:
 # --------------------------------------------------------------------- helpers
 
 
+Groups = Tuple[Tuple[int, ...], ...]
+
+
+def mesh_groups(tp: int, dp: int) -> Tuple[Groups, Groups]:
+    """(TP groups, DP groups) of a row-major ``tp×dp`` 2-D mesh placement:
+    rank = d·tp + t, TP groups are the rows, DP groups the columns.  The
+    canonical process-group layout for concurrent TP∥DP planning."""
+    tp_groups = tuple(tuple(range(d * tp, (d + 1) * tp)) for d in range(dp))
+    dp_groups = tuple(tuple(d * tp + t for d in range(dp)) for t in range(tp))
+    return tp_groups, dp_groups
+
+
+def replicate_groups(sched: Schedule, groups: Groups, n_axis: int) -> Schedule:
+    """Replicate a group-local schedule across all groups of an axis.
+
+    The input schedule is over ``m = len(group)`` local ranks; the output is
+    over the full ``n_axis`` ranks with every group's transfers composed into
+    each round — the process-group pattern (TP rows / DP columns of a 2-D
+    mesh) used by ``Communicator.split`` and the concurrent-group arbiter.
+    Chunk ids stay group-local (every rank holds ``m`` chunks), which is
+    exactly what the ppermute interpreter indexes with.
+    """
+    rounds = []
+    for rnd in sched.rounds:
+        transfers = tuple(
+            replace(t, src=g[t.src], dst=g[t.dst])
+            for g in groups
+            for t in rnd.transfers
+        )
+        rounds.append(Round(transfers, rnd.size))
+    return Schedule(
+        sched.collective, sched.algorithm, n_axis, sched.buffer_bytes, tuple(rounds)
+    )
+
+
 def _require_pow2(n: int, algo: str) -> int:
     if n < 2 or n & (n - 1):
         raise ValueError(f"{algo} requires power-of-two ranks, got {n}")

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import PcclSession
+from repro.api import ConcurrentCollectiveRequest, PcclSession
 from repro.configs.base import ModelConfig
 from repro.core import cost_model as cm
 from repro.models import build_model
@@ -44,6 +44,7 @@ class EngineConfig:
     max_len: int = 256
     greedy: bool = True
     tp: int = 1                     # tensor-parallel degree priced via PCCL
+    dp: int = 1                     # data-parallel replicas sharing the fabric
 
 
 class ServeEngine:
@@ -93,7 +94,7 @@ class ServeEngine:
         when an engine is wired to an ``interp`` communicator."""
         if self.comm is None:
             return {"tp": 1, "sim_comm_s": 0.0, "algorithm": "none", "events": 0}
-        return {
+        report = {
             "tp": self.ecfg.tp,
             "sim_comm_s": self.comm.sim_elapsed_s,
             "algorithm": self.comm.chosen_algorithm(
@@ -101,6 +102,51 @@ class ServeEngine:
             ),
             "events": len(self.comm.backend.events),
             "exec": self.pccl.exec_stats(),
+        }
+        if self.ecfg.dp > 1:
+            report["concurrent"] = self.concurrent_report()
+        return report
+
+    def concurrent_report(self) -> Dict[str, Any]:
+        """Joint fabric pricing for a continuous-batching step with ``dp``
+        replicas on one photonic fabric: the prefill TP all-reduces (full
+        ``(batch, max_len, d_model)`` prompt activation, within each
+        replica's TP group) run *concurrently* with the decode-side DP
+        all-gather (per-token activations exchanged across replicas).  The
+        arbiter overlaps the two axes with per-link contention pricing;
+        ``speedup`` is the planned gain over pricing each collective as if
+        it owned the fabric (sequential baseline).
+        """
+        tp, dp = self.ecfg.tp, self.ecfg.dp
+        if tp < 2 or dp < 2:
+            return {"tp": tp, "dp": dp, "speedup": 1.0, "serialized": False}
+        from repro.core.schedules import mesh_groups
+
+        n = tp * dp
+        # replica r owns ranks [r·tp, (r+1)·tp) (TP rows); the DP groups are
+        # the columns — one rank per replica at the same TP index.
+        tp_groups, dp_groups = mesh_groups(tp, dp)
+        prefill_bytes = 4.0 * self.ecfg.batch_size * self.ecfg.max_len * self.cfg.d_model
+        decode_bytes = 4.0 * self.ecfg.batch_size * self.cfg.d_model
+        cp = self.pccl.plan_concurrent(
+            [
+                ConcurrentCollectiveRequest(
+                    "all_reduce", prefill_bytes, groups=tp_groups, algorithm="auto"
+                ),
+                ConcurrentCollectiveRequest(
+                    "all_gather", decode_bytes, groups=dp_groups, algorithm="auto"
+                ),
+            ],
+            n=n,
+        )
+        return {
+            "tp": tp,
+            "dp": dp,
+            "joint_s": cp.cost,
+            "sequential_s": cp.sequential_cost,
+            "speedup": cp.speedup,
+            "serialized": cp.serialized,
+            "algorithms": cp.algorithms,
         }
 
     def _extra_inputs(self, B: int) -> Dict[str, jax.Array]:

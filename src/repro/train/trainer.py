@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import PcclSession
+from repro.api import ConcurrentCollectiveRequest, PcclSession
 from repro.ckpt.checkpoint import CheckpointConfig, CheckpointManager
 from repro.configs.base import ModelConfig
 from repro.core import cost_model as cm
@@ -84,6 +84,7 @@ class Trainer:
         # one session per trainer; warm-plan (cold + threaded re-plan) gives
         # the steady-state per-step cost the job will actually pay.
         n_dp = data_cfg.n_hosts if mesh is None else int(mesh.shape.get("data", 1))
+        n_tp = 1 if mesh is None else int(mesh.shape.get("model", 1))
         grad_bytes = 4.0 * param_count(jax.eval_shape(self.model.init, jax.random.PRNGKey(0)))
         self.pccl = PcclSession(cm.TPU_V5E_PHOTONIC)
         if n_dp >= 2:
@@ -94,6 +95,43 @@ class Trainer:
         else:
             self.grad_allreduce_algorithm = "none"
             self.grad_allreduce_cost_s = {"cold": 0.0, "steady": 0.0}
+
+        # DP×TP step pricing: on a 2-D mesh the TP activation all-reduces and
+        # the DP gradient all-reduce are in flight *together*, so the step
+        # cost is the fabric arbiter's joint plan (TP rows ∥ DP columns), not
+        # the sum of two fabric-to-itself plans.
+        self.concurrent_step_cost = None
+        if n_dp >= 2 and n_tp >= 2:
+            from repro.core.schedules import mesh_groups
+
+            n_mesh = n_dp * n_tp
+            tp_groups, dp_groups = mesh_groups(n_tp, n_dp)
+            # per-group buffer sizes as the mesh actually shards them: each
+            # TP group all-reduces its own DP shard of the batch activation,
+            # and each DP rank reduces its 1/n_tp TP slice of the gradients
+            act_bytes = (
+                4.0 * (data_cfg.global_batch / n_dp)
+                * data_cfg.seq_len * model_cfg.d_model
+            )
+            dp_grad_bytes = grad_bytes / n_tp
+            cp = self.pccl.plan_concurrent(
+                [
+                    ConcurrentCollectiveRequest(
+                        "all_reduce", act_bytes, groups=tp_groups, algorithm="auto"
+                    ),
+                    ConcurrentCollectiveRequest(
+                        "all_reduce", dp_grad_bytes, groups=dp_groups, algorithm="auto"
+                    ),
+                ],
+                n=n_mesh,
+            )
+            self.concurrent_step_cost = {
+                "joint": cp.cost,
+                "sequential": cp.sequential_cost,
+                "speedup": cp.speedup,
+                "serialized": cp.serialized,
+                "algorithms": cp.algorithms,
+            }
 
         self._step_fn = None
         self._shardings = None
@@ -177,6 +215,7 @@ class Trainer:
                 "history": self.metrics_log,
                 "grad_allreduce_algorithm": self.grad_allreduce_algorithm,
                 "grad_allreduce_cost_s": self.grad_allreduce_cost_s,
+                "pccl_concurrent": self.concurrent_step_cost,
                 "pccl_cache": self.pccl.stats,
                 "pccl_exec": self.pccl.exec_stats(),
                 "stragglers": self.straggler.stragglers(),

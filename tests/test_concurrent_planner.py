@@ -1,0 +1,360 @@
+"""Concurrent-group fabric arbitration (planner.plan_concurrent).
+
+The discipline mirrors the single-group planner tests: the greedy+refinement
+solver must agree with the exact product-state DP on n ≤ 8 in every
+reconfiguration mode, be bit-reproducible, and never price worse than
+sequential independent planning.  On top sit the facade/session/communicator
+surfaces and the edge-load primitive the joint cost model is built on.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+from repro.core import schedules as S
+from repro.core import topology as T
+from repro.core.cost_model import STRUCTURE_TABLE, edge_loads, pairs_of
+from repro.core.pccl import (
+    ConcurrentCollectiveRequest,
+    default_standard_set,
+    plan_concurrent_collectives,
+)
+from repro.core.planner import (
+    plan,
+    plan_concurrent,
+    plan_concurrent_exact,
+)
+from repro.core.schedules import mesh_groups, replicate_groups
+
+MB = 1024.0 ** 2
+
+HW_MODES = {
+    "serial": cm.H100_DGX,
+    "serial_slow": cm.H100_DGX.with_reconfig(1e-3),
+    "partial": cm.H100_DGX.with_link_reconfig(1e-6),
+    "overlap": cm.H100_DGX.with_link_reconfig(1e-6, overlap=True),
+}
+
+
+def two_axis_schedules(n, tp, dp, c1="all_reduce", a1="rhd",
+                       c2="reduce_scatter", a2="rhd", s1=64 * MB, s2=64 * MB):
+    tpg, dpg = mesh_groups(tp, dp)
+    sch1 = replicate_groups(S.get_schedule(c1, a1, tp, s1), tpg, n)
+    sch2 = replicate_groups(S.get_schedule(c2, a2, dp, s2), dpg, n)
+    return [sch1, sch2]
+
+
+# ------------------------------------------------------------ exact oracle
+
+EXACT_CASES = [
+    (4, 2, 2, "all_reduce", "rhd", "reduce_scatter", "rhd", 1 * MB, 64 * MB),
+    (4, 2, 2, "all_reduce", "ring", "reduce_scatter", "ring", 64 * MB, 64 * MB),
+    (8, 2, 4, "all_reduce", "rhd", "reduce_scatter", "rhd", 64 * MB, 64 * MB),
+    (8, 4, 2, "all_to_all", "dex", "all_gather", "rhd", 1 * MB, 64 * MB),
+    (8, 4, 2, "all_reduce", "ring", "all_gather", "ring", 64 * MB, 4 * MB),
+]
+
+
+@pytest.mark.parametrize("mode", sorted(HW_MODES))
+@pytest.mark.parametrize("case", EXACT_CASES, ids=lambda c: f"n{c[0]}_{c[4]}+{c[6]}")
+def test_heuristic_matches_exact_product_dp(mode, case):
+    """Greedy+refinement == exact product-state DP on n ≤ 8 (all modes)."""
+    n, tp, dp, c1, a1, c2, a2, s1, s2 = case
+    hw = HW_MODES[mode]
+    scheds = two_axis_schedules(n, tp, dp, c1, a1, c2, a2, s1, s2)
+    std = default_standard_set(n)
+    cp = plan_concurrent(T.ring(n), std, scheds, hw)
+    exact = plan_concurrent_exact(T.ring(n), std, scheds, hw)
+    assert cp.joint_cost == pytest.approx(exact, rel=1e-12)
+
+
+def test_exact_solver_guards_state_space():
+    scheds = two_axis_schedules(16, 4, 4)
+    with pytest.raises(ValueError, match="product state space"):
+        plan_concurrent_exact(
+            T.ring(16), default_standard_set(16), scheds, cm.H100_DGX,
+            max_product_states=4,
+        )
+
+
+# --------------------------------------------------------- reproducibility
+
+
+def test_bit_reproducible():
+    """Two fresh solver runs return the identical plan, state for state."""
+    scheds = two_axis_schedules(16, 4, 4)
+    std = default_standard_set(16)
+    a = plan_concurrent(T.ring(16), std, scheds, cm.H100_DGX)
+    b = plan_concurrent(T.ring(16), std, scheds, cm.H100_DGX)
+    assert a.joint_cost == b.joint_cost
+    assert a.sequential_cost == b.sequential_cost
+    assert a.serialized == b.serialized
+    assert tuple(g.states for g in a.groups) == tuple(g.states for g in b.groups)
+    assert a.final_topology.edges == b.final_topology.edges
+
+
+# ---------------------------------------------------- never-worse guarantee
+
+
+@pytest.mark.parametrize("mode", sorted(HW_MODES))
+@pytest.mark.parametrize("n,tp,dp", [(4, 2, 2), (8, 2, 4), (16, 4, 4)])
+def test_never_worse_than_sequential(mode, n, tp, dp):
+    hw = HW_MODES[mode]
+    scheds = two_axis_schedules(n, tp, dp)
+    cp = plan_concurrent(T.ring(n), default_standard_set(n), scheds, hw)
+    assert cp.total_cost <= cp.sequential_cost * (1 + 1e-12)
+    # consistency of the serialized fallback bookkeeping
+    assert cp.serialized == (cp.joint_cost > cp.sequential_cost)
+    expected = cp.sequential_cost if cp.serialized else cp.joint_cost
+    assert cp.total_cost == expected
+    assert cp.speedup == pytest.approx(cp.sequential_cost / cp.total_cost)
+
+
+def test_link_disjoint_axes_genuinely_overlap():
+    """TP row-rings and DP column-rings allocate disjoint circuits, so the
+    joint plan must beat running the two collectives back-to-back."""
+    n, tp, dp = 16, 4, 4
+    scheds = two_axis_schedules(
+        n, tp, dp, "all_reduce", "ring", "reduce_scatter", "ring"
+    )
+    cp = plan_concurrent(T.ring(n), default_standard_set(n), scheds, cm.H100_DGX)
+    assert not cp.serialized
+    assert cp.joint_cost < cp.sequential_cost
+    assert cp.speedup > 1.2
+    # per-group solo plans are the sequential baseline's parts
+    assert cp.sequential_cost == pytest.approx(
+        sum(g.solo.total_cost for g in cp.groups)
+    )
+
+
+def test_single_group_degenerates_to_solo_plan():
+    """With one group the joint cost model collapses to Algorithm 1/2
+    arithmetic exactly, so plan_concurrent must reproduce plan()."""
+    n = 8
+    sched = S.get_schedule("all_reduce", "rhd", n, 64 * MB)
+    std = default_standard_set(n)
+    for hw in HW_MODES.values():
+        solo = plan(T.ring(n), std, sched, hw)
+        cp = plan_concurrent(T.ring(n), std, [sched], hw)
+        assert cp.joint_cost == pytest.approx(solo.total_cost, rel=1e-12)
+        assert not cp.serialized
+
+
+def test_final_topology_is_union_of_last_allocations():
+    n, tp, dp = 8, 2, 4
+    scheds = two_axis_schedules(n, tp, dp)
+    cp = plan_concurrent(T.ring(n), default_standard_set(n), scheds, cm.H100_DGX)
+    if not cp.serialized:
+        expect = frozenset()
+        for g, grp in enumerate(cp.groups):
+            # rebuild each group's last state topology from its plan view
+            last = grp.states[-1]
+            # states index into the per-group structure; recover via solver
+            from repro.core.planner import build_structure
+
+            st = build_structure(
+                T.ring(n), default_standard_set(n), grp.schedule, cm.H100_DGX
+            )
+            expect |= st.states[last].topo.edges
+        assert cp.final_topology.edges == expect
+    assert cp.final_topology.n == n
+
+
+# ------------------------------------------------------------- validation
+
+
+def test_rejects_empty_and_mismatched_inputs():
+    n = 8
+    std = default_standard_set(n)
+    with pytest.raises(ValueError, match="at least one"):
+        plan_concurrent(T.ring(n), std, [], cm.H100_DGX)
+    wrong_n = S.get_schedule("all_reduce", "ring", 4, MB)
+    with pytest.raises(ValueError, match="spans n="):
+        plan_concurrent(T.ring(n), std, [wrong_n], cm.H100_DGX)
+
+
+def test_facade_rejects_bad_groups():
+    n = 8
+    g0 = T.ring(n)
+    uneq = ConcurrentCollectiveRequest(
+        "all_reduce", MB, groups=((0, 1, 2), (3, 4), (5, 6, 7))
+    )
+    with pytest.raises(ValueError, match="unequal group sizes"):
+        plan_concurrent_collectives([uneq], n, g0, cm.H100_DGX)
+    overlap = ConcurrentCollectiveRequest(
+        "all_reduce", MB, groups=((0, 1, 2, 3), (3, 4, 5, 6))
+    )
+    with pytest.raises(ValueError, match="partition"):
+        plan_concurrent_collectives([overlap], n, g0, cm.H100_DGX)
+
+
+# ------------------------------------------------------------ facade level
+
+
+def test_facade_arbitrates_algorithms_per_request():
+    """`auto` requests pick their input schedule by solo planned cost, the
+    same arbitration as plan_collective applied per group."""
+    n, tp, dp = 16, 4, 4
+    tpg, dpg = mesh_groups(tp, dp)
+    cp = plan_concurrent_collectives(
+        [
+            ConcurrentCollectiveRequest("all_reduce", 64 * MB, groups=tpg,
+                                        algorithm="auto"),
+            ConcurrentCollectiveRequest("reduce_scatter", 64 * MB, groups=dpg,
+                                        algorithm="auto"),
+        ],
+        n, T.ring(n), cm.H100_DGX,
+    )
+    assert len(cp.algorithms) == 2
+    assert all(isinstance(a, str) for a in cp.algorithms)
+    assert len(cp.solo_costs()) == 2
+    assert cp.cost <= cp.sequential_cost * (1 + 1e-12)
+    # explicit algorithm pins the input schedule
+    pinned = plan_concurrent_collectives(
+        [
+            ConcurrentCollectiveRequest("all_reduce", 64 * MB, groups=tpg,
+                                        algorithm="ring"),
+            ConcurrentCollectiveRequest("reduce_scatter", 64 * MB, groups=dpg,
+                                        algorithm="ring"),
+        ],
+        n, T.ring(n), cm.H100_DGX,
+    )
+    assert pinned.algorithms == ("ring", "ring")
+
+
+# ------------------------------------------------------------ edge loads
+
+
+@pytest.mark.parametrize("topo_name", ["ring", "torus2d", "grid2d", "hypercube"])
+@pytest.mark.parametrize("algo,collective", [
+    ("ring", "reduce_scatter"), ("rhd", "all_reduce"), ("dex", "all_to_all"),
+])
+def test_edge_loads_agree_with_structure_factors(topo_name, algo, collective):
+    """max(per-link load) == Algorithm 2's congestion and the dilations
+    match — the concurrent per-link pricing degenerates to (D, C) exactly
+    when a group has the fabric to itself."""
+    n = 8
+    topo = T.standard_topologies(n)[topo_name]
+    sched = S.get_schedule(collective, algo, n, MB)
+    for rnd in sched.rounds:
+        pairs = pairs_of(rnd)
+        if not pairs:
+            continue
+        d, c, feas = STRUCTURE_TABLE.factors(topo, pairs)
+        loads = edge_loads(topo, pairs)
+        if not feas:
+            assert loads is None
+            continue
+        dil, per_edge = loads
+        assert dil == d
+        assert max(cnt for _, cnt in per_edge) == c
+        # conservation: every transfer contributes exactly its hop count
+        total_hops = sum(cnt for _, cnt in per_edge)
+        assert total_hops >= len(pairs)  # >= 1 hop per transfer
+        # loads only on actual circuits of the topology
+        assert all(e in topo.edges for e, _ in per_edge)
+
+
+def test_edge_loads_empty_and_disconnected():
+    assert edge_loads(T.ring(4), []) == (0, ())
+    two_islands = T.Topology(4, frozenset({(0, 1), (1, 0), (2, 3), (3, 2)}))
+    assert edge_loads(two_islands, [(0, 3)]) is None
+
+
+# ---------------------------------------------------------- session level
+
+
+def test_session_plan_concurrent_caches_and_threads():
+    from repro.api import PcclSession
+
+    n, tp, dp = 16, 4, 4
+    tpg, dpg = mesh_groups(tp, dp)
+    reqs = [
+        ConcurrentCollectiveRequest("all_reduce", 64 * MB, groups=tpg),
+        ConcurrentCollectiveRequest("reduce_scatter", 64 * MB, groups=dpg),
+    ]
+    sess = PcclSession(cm.H100_DGX)
+    cp1 = sess.plan_concurrent(reqs)  # n inferred from the groups
+    assert sess.stats.misses == 1
+    # fabric threaded: the next plan starts from the combined allocation
+    assert sess.fabric(n).edges == cp1.final_topology.edges
+    # same request over the *threaded* fabric is a different key (warm plan)
+    sess.plan_concurrent(reqs)
+    # once the fabric reaches a fixed point, lookups hit
+    before = sess.stats.hits
+    sess.plan_concurrent(reqs)
+    sess.plan_concurrent(reqs)
+    assert sess.stats.hits >= before + 1
+
+    cold = PcclSession(cm.H100_DGX, thread_fabric=False)
+    cp_cold = cold.plan_concurrent(reqs)
+    assert cold.fabric(n).edges == T.ring(n).edges  # not threaded
+    assert cp_cold.cost == pytest.approx(cp1.cost)  # same cold G0
+
+
+def test_session_plan_concurrent_requires_domain_size():
+    from repro.api import PcclSession
+
+    sess = PcclSession(cm.H100_DGX)
+    with pytest.raises(ValueError, match="at least one request"):
+        sess.plan_concurrent([])
+    # no groups anywhere and no default n → must be told the domain
+    with pytest.raises(ValueError, match="no default rank count"):
+        sess.plan_concurrent(
+            [ConcurrentCollectiveRequest("all_reduce", MB)]
+        )
+    got = sess.plan_concurrent(
+        [ConcurrentCollectiveRequest("all_reduce", MB)], n=8
+    )
+    assert got.n == 8
+
+
+def test_communicator_concurrent_request_plumbing():
+    from repro.api import PcclSession
+
+    n, tp, dp = 16, 4, 4
+    sess = PcclSession(cm.H100_DGX)
+    comm = sess.communicator("x", n, backend="sim")
+    tp_comm = comm.split([r // tp for r in range(n)])   # rows
+    dp_comm = comm.split([r % tp for r in range(n)])    # columns
+    r_tp = tp_comm.concurrent_request("all_reduce", 64 * MB)
+    r_dp = dp_comm.concurrent_request("reduce_scatter", 64 * MB)
+    assert r_tp.groups == mesh_groups(tp, dp)[0]
+    assert r_dp.groups == mesh_groups(tp, dp)[1]
+    assert r_tp.algorithm == "auto"  # communicator default
+    cp = sess.plan_concurrent([r_tp, r_dp])
+    assert cp.n == n
+    assert cp.cost <= cp.sequential_cost * (1 + 1e-12)
+    # full-axis communicator contributes a single domain-spanning group
+    full = comm.concurrent_request("all_to_all", MB, algorithm="direct")
+    assert full.groups is None and full.algorithm == "direct"
+
+
+def test_facade_rejects_request_with_no_usable_candidate():
+    """A pinned bucket algorithm over a prime group size has only degenerate
+    factorizations — the facade must say so, not crash downstream."""
+    req = ConcurrentCollectiveRequest(
+        "all_reduce", MB, groups=None, algorithm="bucket2d"
+    )
+    with pytest.raises(ValueError, match="no usable candidate"):
+        plan_concurrent_collectives([req], 5, T.ring(5), cm.H100_DGX)
+
+
+def test_request_groups_normalized_for_cache_keys():
+    """List-of-lists group literals must hash (they end up in the session's
+    plan-cache key) and compare equal to the tuple form."""
+    from repro.api import PcclSession
+
+    as_lists = ConcurrentCollectiveRequest(
+        "all_reduce", MB, groups=[[0, 1], [2, 3]]
+    )
+    as_tuples = ConcurrentCollectiveRequest(
+        "all_reduce", MB, groups=((0, 1), (2, 3))
+    )
+    assert as_lists.groups == as_tuples.groups
+    assert hash(as_lists) == hash(as_tuples)
+    sess = PcclSession(cm.H100_DGX, thread_fabric=False)
+    cp = sess.plan_concurrent([as_lists])
+    assert cp.n == 4
+    sess.plan_concurrent([as_tuples])
+    assert sess.stats.hits == 1  # same key, cache hit

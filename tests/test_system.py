@@ -81,3 +81,24 @@ def test_serve_engine_batches_are_isolated():
     ]
     out_batched = eng.generate(b)[0].generated
     assert out_single == out_batched
+
+
+def test_serve_engine_concurrent_prefill_tp_decode_dp():
+    """With dp > 1 replicas on one fabric, comm_report carries the arbiter's
+    joint pricing of prefill-TP ∥ decode-DP — never worse than pricing the
+    two collectives as if each owned the fabric."""
+    cfg = dataclasses.replace(get_config("chatglm3-6b").reduced(), n_layers=2)
+    eng = ServeEngine(cfg, EngineConfig(batch_size=2, max_len=32, tp=4, dp=4))
+    reqs = [Request(prompt=np.full(8, 3, np.int32), max_new_tokens=2)]
+    eng.generate(reqs)
+    rep = eng.comm_report()
+    assert rep["tp"] == 4
+    c = rep["concurrent"]
+    assert c["dp"] == 4
+    assert c["joint_s"] <= c["sequential_s"] * (1 + 1e-12)
+    assert c["speedup"] >= 1.0
+    assert len(c["algorithms"]) == 2
+    # dp == 1 engines stay on the single-axis report
+    eng1 = ServeEngine(cfg, EngineConfig(batch_size=2, max_len=32, tp=4))
+    eng1.generate([Request(prompt=np.full(8, 3, np.int32), max_new_tokens=2)])
+    assert "concurrent" not in eng1.comm_report()
