@@ -15,9 +15,8 @@ the per-layer AllReduces like a real job would.
 
 from __future__ import annotations
 
-import math
 import time
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 

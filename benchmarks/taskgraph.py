@@ -25,9 +25,8 @@ overlappable AllReduce) is applied by edge priority.
 from __future__ import annotations
 
 import dataclasses
-import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
 
 from repro.api import PcclSession
 from repro.core import cost_model as cm

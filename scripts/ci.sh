@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Tier-1 verification in named stages (see ROADMAP.md).
 #
-#   scripts/ci.sh                    # all stages: lint smoke tests bench
+#   scripts/ci.sh                    # all stages: lint verify smoke tests bench
 #   scripts/ci.sh lint smoke         # just these stages, in order
 #   scripts/ci.sh tests -- -k session  # stage args after -- go to pytest
 #   scripts/ci.sh -k session         # back-compat: bare pytest args run all
@@ -9,7 +9,12 @@
 #
 # Stages (the GitHub Actions workflow runs them as separate steps so a
 # compileall or smoke failure fails fast before paying for the full suite):
-#   lint   - byte-compile everything + refuse tracked bytecode
+#   lint   - byte-compile everything + refuse tracked bytecode +
+#            concurrency lint (repro.analysis.lint_concurrency) + ruff
+#            (style/import order; skipped gracefully where not installed)
+#   verify - static analysis gate (python -m repro.analysis): chunk-dataflow
+#            verification of every generator, round feasibility, circuit
+#            realizability, plan/concurrent-plan accounting invariants
 #   smoke  - planner/exec/concurrent bench smoke guards (deterministic
 #            regression checks + loose wall-clock bars); writes fresh
 #            point JSONs into .ci-bench/ for the bench stage
@@ -31,6 +36,22 @@ stage_lint() {
     echo "lint: tracked bytecode detected — purge it and rely on .gitignore" >&2
     return 1
   fi
+  # concurrency lint: shared caches mutated outside their owning lock,
+  # function-attribute state, mutable defaults (see src/repro/analysis/)
+  python -m repro.analysis.lint_concurrency src/repro
+  # style/import-order lint; requirements-dev installs ruff in CI, but the
+  # dev image may not have it — degrade to a notice rather than fail
+  if command -v ruff >/dev/null 2>&1; then
+    ruff check src benchmarks scripts tests
+  else
+    echo "lint: ruff not installed; skipping style checks (CI runs them)"
+  fi
+}
+
+stage_verify() {
+  # static analysis gate: dataflow-verify every generator, check round
+  # feasibility + circuit realizability, replay plan accounting
+  python -m repro.analysis
 }
 
 stage_smoke() {
@@ -79,7 +100,7 @@ for arg in "$@"; do
     PYTEST_ARGS+=("$arg")
   else
     case "$arg" in
-      lint|smoke|tests|bench) STAGES+=("$arg") ;;
+      lint|verify|smoke|tests|bench) STAGES+=("$arg") ;;
       *)
         # back-compat with the pre-stage interface: the first word that is
         # not a stage name (a pytest flag, test path, -k expression, ...)
@@ -91,7 +112,7 @@ for arg in "$@"; do
   fi
 done
 if [ "${#STAGES[@]}" -eq 0 ]; then
-  STAGES=(lint smoke tests bench)
+  STAGES=(lint verify smoke tests bench)
 fi
 
 for stage in "${STAGES[@]}"; do

@@ -1,0 +1,50 @@
+"""Static analysis for schedules, plans, and the codebase itself.
+
+Three passes, no device execution:
+
+* :mod:`repro.analysis.verify` — chunk-dataflow verifier: abstract
+  interpretation proving a schedule's collective postcondition.
+* :mod:`repro.analysis.invariants` — plan/circuit invariant checker: round
+  feasibility, Alg. 3/4 realizability, Alg. 1 plan accounting, reconfig-mode
+  monotonicity, concurrent joint-plan accounting.
+* :mod:`repro.analysis.lint_concurrency` — AST lint for the shared-state
+  bug classes (unguarded cache mutation, function-attribute state, mutable
+  defaults).
+
+``python -m repro.analysis`` runs the schedule/plan passes over the built-in
+generator zoo (the CI ``verify`` stage); ``python -m
+repro.analysis.lint_concurrency`` runs the lint (the CI ``lint`` stage).
+Set ``PCCL_VERIFY=1`` to also verify every schedule at exec-engine compile
+time (``comm/exec_engine.py``).
+"""
+
+from .verify import (  # noqa: F401
+    ScheduleVerificationError,
+    UnverifiableScheduleError,
+    VerificationResult,
+    Violation,
+    assert_verified,
+    verify_schedule,
+)
+from .invariants import (  # noqa: F401
+    InvariantViolation,
+    PlanInvariantError,
+    assert_invariants,
+    check_circuit_realizability,
+    check_concurrent_plan,
+    check_mode_monotonicity,
+    check_plan,
+    check_round_feasibility,
+    check_schedule,
+)
+_LINT_EXPORTS = ("Finding", "lint_module", "lint_paths")
+
+
+def __getattr__(name):
+    # lazy (PEP 562): an eager import here makes ``python -m
+    # repro.analysis.lint_concurrency`` warn about double execution
+    if name in _LINT_EXPORTS:
+        from . import lint_concurrency
+
+        return getattr(lint_concurrency, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -192,7 +192,8 @@ class PcclSession:
     # ------------------------------------------------------------- fabric
     def initial_fabric(self, n: Optional[int] = None) -> Topology:
         n = self._resolve_n(n)
-        return self._initial.setdefault(n, ring(n))
+        with self._plan_lock:  # re-entrant: plan() calls this lock held
+            return self._initial.setdefault(n, ring(n))
 
     def fabric(self, n: Optional[int] = None) -> Topology:
         """Current fabric state for ``n``-rank collectives."""
@@ -201,16 +202,18 @@ class PcclSession:
 
     def reset_fabric(self, n: Optional[int] = None) -> None:
         """Forget threaded state; next plan starts from the initial ``G0``."""
-        if n is None:
-            self._fabric.clear()
-        else:
-            self._fabric.pop(n, None)
+        with self._plan_lock:
+            if n is None:
+                self._fabric.clear()
+            else:
+                self._fabric.pop(n, None)
 
     def standard_set(self, n: Optional[int] = None) -> List[Topology]:
         n = self._resolve_n(n)
-        if n not in self._standard:
-            self._standard[n] = list(default_standard_set(n))
-        return self._standard[n]
+        with self._plan_lock:
+            if n not in self._standard:
+                self._standard[n] = list(default_standard_set(n))
+            return self._standard[n]
 
     def _resolve_n(self, n: Optional[int]) -> int:
         if n is not None:

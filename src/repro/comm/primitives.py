@@ -28,8 +28,7 @@ them; asserted at trace time):
 
 from __future__ import annotations
 
-import functools
-from typing import List, Sequence, Tuple
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp

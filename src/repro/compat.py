@@ -16,7 +16,7 @@ Everything that touches those APIs goes through here:
 from __future__ import annotations
 
 import inspect
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Optional, Sequence
 
 import jax
 

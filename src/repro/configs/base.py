@@ -13,8 +13,8 @@ The four assigned input shapes live in ``SHAPES``; applicability per arch
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 

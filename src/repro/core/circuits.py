@@ -15,7 +15,7 @@ well under the paper's 2.5 s budget — Fig. 19a).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np

@@ -20,7 +20,6 @@ exposes to distributed-ML programmers.
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, replace
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 

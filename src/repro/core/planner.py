@@ -86,7 +86,7 @@ from .cost_model import (
     round_structure_key,
 )
 from .schedules import Round, Schedule
-from .topology import Edge, Topology, from_transfers
+from .topology import Edge, Topology
 
 
 @dataclass(frozen=True)

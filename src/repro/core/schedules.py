@@ -102,10 +102,17 @@ class Schedule:
 
         Covers ``(collective, algorithm, n)`` and every round's transfer
         tuples ``(src, dst, chunks, reduce)`` — i.e. the per-round
-        permutations and chunk tables.  Byte sizes (``buffer_bytes``,
-        ``Round.size``) are deliberately excluded: they price the schedule
+        permutations and chunk tables.  The encoding is injective: rounds
+        are delimited by ``#R``, transfers by ``|``, fields by ``>``/``:``/
+        ``,``, none of which can occur inside the integer fields — so
+        distinct permutation or chunk tables collide only if blake2b
+        itself does (regression-tested in ``tests/test_exec_engine.py``).
+
+        Byte sizes (``buffer_bytes``, ``Round.size``) are **deliberately
+        excluded**: they price the schedule (planner/cost-model inputs)
         but do not change what the executor does, so a buffer-size sweep
         over one rescaled template shares a single compiled executable.
+        Never key size-dependent data (costs, plans) by fingerprint alone.
 
         Memoized on first use (cheap blake2b over a canonical encoding;
         the frozen dataclass stores it via ``object.__setattr__``).

@@ -24,7 +24,7 @@ Post-conditions verified
 
 from __future__ import annotations
 
-from typing import Dict, List, Set, Tuple
+from typing import Dict, List, Tuple
 
 from .schedules import Schedule
 

@@ -21,7 +21,6 @@ selected.  Validated against ``ref.ssd_reference`` in interpret mode.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

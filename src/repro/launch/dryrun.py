@@ -25,12 +25,10 @@ Usage:
 """
 
 import argparse
-import dataclasses
 import json
 import pathlib
 import time
 import traceback
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -27,7 +27,6 @@ import json
 import pathlib
 
 from repro.api import PcclSession
-from repro.configs.base import MoEConfig
 from repro.core import cost_model as cm
 from repro.launch.roofline import roofline_cell
 

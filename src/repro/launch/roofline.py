@@ -34,11 +34,10 @@ import traceback
 from typing import Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
-from repro.configs.base import EncDecConfig, ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig, ShapeConfig
 from repro.launch import hlo_analysis as H
 from repro.launch.dryrun import _opt_state_specs
 from repro.launch.mesh import make_production_mesh

@@ -8,7 +8,7 @@ allocated (assignment MULTI-POD DRY-RUN step 2).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ names on every parameter drive the sharding rules (DESIGN.md §3.3).
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -22,10 +22,7 @@ Modality frontends are stubs per the assignment: batches carry precomputed
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-import math
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +43,7 @@ from .layers import (
     logits_projection,
     sinusoidal_positions,
 )
-from .module import Box, KeyGen, normal_init, stack_init, unbox
+from .module import Box, KeyGen, normal_init, stack_init
 
 Batch = Dict[str, jax.Array]
 

@@ -15,7 +15,7 @@ output.  The load-balancing auxiliary loss follows Switch/OLMoE:
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +24,7 @@ from repro.configs.base import ModelConfig
 from repro.sharding import shard
 
 from .layers import apply_mlp, init_mlp
-from .module import Box, KeyGen, normal_init
+from .module import KeyGen, normal_init
 
 
 def init_moe(key, cfg: ModelConfig) -> Dict:

@@ -23,7 +23,6 @@ from repro.configs.base import ModelConfig
 from repro.kernels.ssd import ops as ssd_ops
 from repro.sharding import shard
 
-from .layers import apply_norm
 from .module import Box, KeyGen, const_init, normal_init, ones_init, zeros_init
 
 # =============================================================== Mamba-2

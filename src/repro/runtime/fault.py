@@ -13,7 +13,7 @@ import collections
 import statistics
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -117,7 +117,6 @@ def shrink_mesh(mesh: Mesh, failed_device_ids: Sequence[int], axes: Tuple[str, .
 def reshard_tree(tree: Any, old_shardings: Any, new_mesh: Mesh) -> Any:
     """Re-shard a live tree onto a shrunk mesh, preserving PartitionSpecs
     where they still divide (fit-or-drop via the sharding layer)."""
-    from repro.sharding import partition
 
     def move(x, sh):
         spec = sh.spec if isinstance(sh, NamedSharding) else PartitionSpec()

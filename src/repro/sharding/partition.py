@@ -18,8 +18,8 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np

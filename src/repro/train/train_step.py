@@ -8,15 +8,14 @@ donates params+opt_state so the update is in-place at the XLA level.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.lm import Model
 
-from .optimizer import OptimizerConfig, OptState, adamw_update, init_opt_state
+from .optimizer import OptimizerConfig, OptState, adamw_update
 
 
 def make_train_step(

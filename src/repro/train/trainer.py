@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +41,7 @@ from repro.runtime.fault import (
 )
 from repro.sharding import partition
 
-from .optimizer import OptimizerConfig, OptState, init_opt_state
+from .optimizer import OptimizerConfig, init_opt_state
 from .train_step import make_train_step
 
 

@@ -31,6 +31,22 @@ def hypothesis_or_stubs():
         return given, settings, _AnyStrategy()
 
 
+@pytest.fixture
+def dataflow_verifier():
+    """The static chunk-dataflow verifier, raise-on-failure form.
+
+    Every new schedule generator must pass this fixture (see
+    CONTRIBUTING.md): ``dataflow_verifier(schedule)`` proves the
+    collective's postcondition statically and raises
+    ``ScheduleVerificationError`` with an attributable failure
+    (round/rank/chunk, expected vs. abstract state) otherwise.  Pass
+    ``groups=`` for ``replicate_groups`` compositions.
+    """
+    from repro.analysis.verify import assert_verified
+
+    return assert_verified
+
+
 def pytest_configure(config):
     config.addinivalue_line(
         "markers",

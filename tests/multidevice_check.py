@@ -14,13 +14,10 @@ os.environ["XLA_FLAGS"] = (
     + os.environ.get("XLA_FLAGS", "")
 )
 
-import functools
 import warnings
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro import compat

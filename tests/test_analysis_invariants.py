@@ -1,0 +1,180 @@
+"""Plan/circuit invariant checker: positive cases on real planner output,
+negative cases on deliberately corrupted plans.
+
+The checker re-derives every number in a ``Plan`` / ``ConcurrentPlan``
+from the planner's own structure tables, so a clean result means the
+accounting is internally consistent — and a corrupted field must be
+attributed to the exact step/kind that disagrees.
+"""
+
+from dataclasses import replace
+
+import pytest
+
+from repro.analysis.invariants import (
+    PlanInvariantError,
+    assert_invariants,
+    check_circuit_realizability,
+    check_concurrent_plan,
+    check_mode_monotonicity,
+    check_plan,
+    check_round_feasibility,
+    check_schedule,
+)
+from repro.core import planner as P
+from repro.core import schedules as S
+from repro.core.cost_model import H100_DGX
+from repro.core.schedules import Round, Schedule, Transfer
+from repro.core.topology import ring, standard_topologies
+
+D = float(1 << 20)
+N = 8
+
+
+@pytest.fixture(scope="module")
+def env():
+    g0 = ring(N)
+    std = list(standard_topologies(N).values())
+    return g0, std
+
+
+# ---------------------------------------------------------- feasibility
+
+
+def test_round_feasibility_clean_on_generators():
+    for sched in (S.ring_reduce_scatter(8, D), S.rhd_all_reduce(8, D),
+                  S.dex_all_to_all(8, D), S.bucket_all_reduce((2, 4), D)):
+        assert check_round_feasibility(sched, H100_DGX) == []
+
+
+def test_round_feasibility_flags_fanout_and_bad_ranks():
+    base = S.direct_all_to_all(4, D)
+    merged = Schedule(base.collective, base.algorithm, base.n,
+                      base.buffer_bytes,
+                      (Round(base.rounds[0].transfers + base.rounds[1].transfers,
+                             base.rounds[0].size),) + base.rounds[2:])
+    kinds = {v.kind for v in check_round_feasibility(merged, tx_limit=1)}
+    assert "tx-limit" in kinds or "not-permutation" in kinds
+
+    bad = Schedule("p2p", "direct", 4, D,
+                   (Round((Transfer(0, 7, (0,), False),), D),))
+    kinds = {v.kind for v in check_round_feasibility(bad)}
+    assert "bad-rank" in kinds
+
+    loop = Schedule("p2p", "direct", 4, D,
+                    (Round((Transfer(2, 2, (0,), False),), D),))
+    assert {v.kind for v in check_round_feasibility(loop)} == {"self-transfer"}
+
+
+def test_circuit_realizability_on_representative_schedules():
+    for sched in (S.rhd_reduce_scatter(8, D), S.direct_all_to_all(8, D),
+                  S.ring_all_reduce(8, D)):
+        assert check_circuit_realizability(sched) == []
+
+
+def test_check_schedule_composes_passes():
+    assert check_schedule(S.rhd_all_reduce(8, D), H100_DGX) == []
+    vs = check_schedule(S.rhd_reduce_scatter(8, D), H100_DGX,
+                        realizability=True)
+    assert vs == []
+
+
+# ----------------------------------------------------------- single plan
+
+
+@pytest.mark.parametrize(
+    "hw",
+    [H100_DGX,
+     H100_DGX.with_link_reconfig(H100_DGX.reconfig_delay / 8),
+     H100_DGX.with_link_reconfig(H100_DGX.reconfig_delay / 8, overlap=True)],
+    ids=["full", "partial", "overlap"],
+)
+def test_check_plan_clean_on_planner_output(env, hw):
+    g0, std = env
+    for sched in (S.rhd_reduce_scatter(N, D), S.dex_all_to_all(N, D)):
+        p = P.plan(g0, std, sched, hw)
+        assert check_plan(p, g0, std) == []
+
+
+def test_check_plan_flags_corrupted_total(env):
+    g0, std = env
+    p = P.plan(g0, std, S.rhd_reduce_scatter(N, D), H100_DGX)
+    bad = replace(p, total_cost=p.total_cost * 1.5)
+    kinds = [v.kind for v in check_plan(bad, g0, std)]
+    assert "total-cost" in kinds
+
+
+def test_check_plan_flags_corrupted_step(env):
+    g0, std = env
+    p = P.plan(g0, std, S.rhd_reduce_scatter(N, D), H100_DGX)
+    # find a reconfiguring step and inflate its reconfig charge
+    idx = next(i for i, s in enumerate(p.steps) if s.reconfigured)
+    steps = list(p.steps)
+    steps[idx] = replace(steps[idx],
+                         reconfig_cost=steps[idx].reconfig_cost + 1.0)
+    bad = replace(p, steps=tuple(steps))
+    vs = check_plan(bad, g0, std)
+    assert any(v.kind == "reconfig-cost" and f"step {idx}" in v.where
+               for v in vs)
+
+
+def test_check_plan_flags_infeasible_state_swap(env):
+    g0, std = env
+    p = P.plan(g0, std, S.rhd_reduce_scatter(N, D), H100_DGX)
+    steps = list(p.steps)
+    # claim a different state index for a step without recosting it
+    steps[0] = replace(steps[0], state_idx=(steps[0].state_idx + 1))
+    bad = replace(p, steps=tuple(steps))
+    assert check_plan(bad, g0, std) != []
+
+
+def test_mode_monotonicity_holds(env):
+    g0, std = env
+    for sched in (S.rhd_reduce_scatter(N, D), S.ring_all_reduce(N, D)):
+        assert check_mode_monotonicity(g0, std, sched, H100_DGX) == []
+
+
+# ------------------------------------------------------- concurrent plan
+
+
+@pytest.fixture(scope="module")
+def concurrent(env):
+    g0, std = env
+    tp_groups, dp_groups = S.mesh_groups(4, 2)
+    s_tp = S.replicate_groups(S.ring_all_reduce(4, D), tp_groups, N)
+    s_dp = S.replicate_groups(S.ring_all_reduce(2, D), dp_groups, N)
+    return P.plan_concurrent(g0, std, [s_tp, s_dp], H100_DGX)
+
+
+def test_concurrent_plan_clean(env, concurrent):
+    g0, std = env
+    assert check_concurrent_plan(concurrent, g0, std) == []
+
+
+def test_concurrent_plan_flags_corrupted_joint_cost(env, concurrent):
+    g0, std = env
+    bad = replace(concurrent, joint_cost=concurrent.joint_cost * 2.0)
+    kinds = {v.kind for v in check_concurrent_plan(bad, g0, std)}
+    # doubling the joint cost breaks the replayed decomposition and can
+    # also flip the serialization decision — either attribution is exact
+    assert kinds & {"joint-cost", "serialized-flag"}
+
+
+def test_concurrent_plan_flags_corrupted_sequential(env, concurrent):
+    g0, std = env
+    bad = replace(concurrent, sequential_cost=concurrent.sequential_cost + 5.0)
+    kinds = {v.kind for v in check_concurrent_plan(bad, g0, std)}
+    assert "sequential-cost" in kinds
+
+
+# ------------------------------------------------------------- raise form
+
+
+def test_assert_invariants_raises_with_attribution(env):
+    g0, std = env
+    p = P.plan(g0, std, S.rhd_reduce_scatter(N, D), H100_DGX)
+    bad = replace(p, total_cost=p.total_cost + 1.0)
+    with pytest.raises(PlanInvariantError) as exc:
+        assert_invariants(check_plan(bad, g0, std))
+    assert "total-cost" in str(exc.value)
+    assert_invariants([])  # empty list is a no-op

@@ -55,6 +55,86 @@ def test_fingerprint_distinguishes_structure():
     assert len(fps) == 6
 
 
+def test_fingerprint_collision_regression():
+    """Fingerprints are injective on schedule structure (the docstring of
+    Schedule.fingerprint points here).  Sweep the generator zoo plus a
+    batch of structurally-adjacent hand variants — every distinct
+    (perm, chunk, reduce, round-boundary) table must hash distinctly."""
+    zoo = []
+    for n in (2, 3, 4, 6, 8, 16):
+        zoo += [S.ring_reduce_scatter(n, 1.0), S.ring_all_gather(n, 1.0),
+                S.ring_all_reduce(n, 1.0), S.direct_all_to_all(n, 1.0),
+                S.ring_all_to_all(n, 1.0)]
+    for n in (2, 4, 8, 16):
+        zoo += [S.rhd_reduce_scatter(n, 1.0), S.rhd_all_gather(n, 1.0),
+                S.rhd_all_reduce(n, 1.0), S.dex_all_to_all(n, 1.0)]
+    for dims in ((2, 2), (2, 4), (3, 3), (2, 2, 2)):
+        zoo += [S.bucket_reduce_scatter(dims, 1.0),
+                S.bucket_all_gather(dims, 1.0)]
+
+    # adjacent variants that a sloppy (non-delimited) encoding would merge:
+    base = S.ring_reduce_scatter(4, 1.0)
+    flat = Schedule(base.collective, base.algorithm, base.n, 1.0,
+                    (Round(tuple(t for r in base.rounds
+                                 for t in r.transfers), 1.0),))
+    zoo.append(flat)  # same transfers, different round boundaries
+    t = base.rounds[0].transfers[0]
+    one = Schedule("p2p", "direct", 4, 1.0,
+                   (Round((Transfer(t.src, t.dst, t.chunks, t.reduce),), 1.0),))
+    two = Schedule("p2p", "direct", 4, 1.0,
+                   (Round((Transfer(t.src, t.dst, (1, 2), t.reduce),), 1.0),))
+    twelve = Schedule("p2p", "direct", 4, 1.0,
+                      (Round((Transfer(t.src, t.dst, (12,), t.reduce),), 1.0),))
+    zoo += [one, two, twelve]  # chunks (1,2) vs (12) must not collide
+
+    fps = [s.fingerprint() for s in zoo]
+    assert len(set(fps)) == len(fps), "fingerprint collision in sweep"
+
+
+# ------------------------------------------------------------ PCCL_VERIFY
+def _corrupt(sched):
+    """Relabel one chunk: the rounds stay valid permutations (so the
+    executable compiles), but the dataflow postcondition fails — exactly
+    the class of bug only the static verifier catches."""
+    rounds = list(sched.rounds)
+    tf = list(rounds[0].transfers)
+    t = tf[0]
+    bad_chunk = (t.chunks[0] + 1) % sched.n
+    tf[0] = Transfer(t.src, t.dst, (bad_chunk,) + t.chunks[1:], t.reduce)
+    rounds[0] = Round(tuple(tf), rounds[0].size)
+    return Schedule(sched.collective, sched.algorithm, sched.n,
+                    sched.buffer_bytes, tuple(rounds))
+
+
+def test_pccl_verify_disabled_compiles_corrupt(monkeypatch):
+    monkeypatch.delenv("PCCL_VERIFY", raising=False)
+    exec_engine.clear_exec_caches()
+    compiled = exec_engine.compile_schedule(_corrupt(S.ring_reduce_scatter(8, 64.0)))
+    assert compiled is not None  # off by default: zero-overhead path
+
+
+def test_pccl_verify_enabled_rejects_corrupt(monkeypatch):
+    from repro.analysis.verify import ScheduleVerificationError
+
+    monkeypatch.setenv("PCCL_VERIFY", "1")
+    exec_engine.clear_exec_caches()
+    with pytest.raises(ScheduleVerificationError):
+        exec_engine.compile_schedule(_corrupt(S.ring_reduce_scatter(8, 64.0)))
+    # correct schedules still compile with verification on
+    assert exec_engine.compile_schedule(S.ring_reduce_scatter(8, 64.0))
+
+
+def test_pccl_verify_cache_hits_skip_verification(monkeypatch):
+    monkeypatch.delenv("PCCL_VERIFY", raising=False)
+    exec_engine.clear_exec_caches()
+    bad = _corrupt(S.ring_reduce_scatter(8, 64.0))
+    exec_engine.compile_schedule(bad)  # populate cache while disabled
+    monkeypatch.setenv("PCCL_VERIFY", "1")
+    # hit: env is only consulted on compile-cache miss
+    assert exec_engine.compile_schedule(bad) is not None
+    exec_engine.clear_exec_caches()
+
+
 # -------------------------------------------------------- compiled tables
 def _flat_tables(compiled):
     """(perm, send_row, recv_row, reduce) per round, unstacked."""

@@ -1,0 +1,212 @@
+"""Concurrency lint: rule-by-rule synthetic sources + a tree-wide clean run.
+
+Each case feeds ``lint_module`` an in-memory module exercising exactly one
+rule, so a regression is attributable to the rule that broke.  The final
+test pins ``src/repro`` itself at zero findings — the lint gate CI runs.
+"""
+
+import textwrap
+
+from repro.analysis.lint_concurrency import (
+    INTERNALLY_LOCKED,
+    SHARED_CACHE_REGISTRY,
+    lint_module,
+    lint_paths,
+)
+
+
+def _lint(src):
+    return lint_module("<test>", source=textwrap.dedent(src))
+
+
+def _rules(findings):
+    return [f.rule for f in findings]
+
+
+# ----------------------------------------------------------------- UG01
+
+
+def test_ug01_unguarded_mutation_of_guarded_global():
+    findings = _lint("""
+        import threading
+        _CACHE = {}
+        _LOCK = threading.Lock()
+
+        def guarded(k, v):
+            with _LOCK:
+                _CACHE[k] = v
+
+        def unguarded(k):
+            return _CACHE.setdefault(k, [])
+    """)
+    assert _rules(findings) == ["UG01"]
+    assert findings[0].name == "_CACHE"
+    assert findings[0].line  # attributable to the setdefault line
+
+
+def test_ug01_registry_globals_always_need_guards():
+    # names in SHARED_CACHE_REGISTRY must be guarded even if the module
+    # never guards them anywhere (no "guarded-somewhere" evidence needed)
+    name = sorted(SHARED_CACHE_REGISTRY)[0]
+    findings = _lint(f"""
+        {name} = {{}}
+
+        def touch(k):
+            {name}[k] = 1
+    """)
+    assert _rules(findings) == ["UG01"]
+
+
+def test_ug01_clean_when_all_sites_guarded():
+    findings = _lint("""
+        import threading
+        _CACHE = {}
+        _LOCK = threading.Lock()
+
+        def a(k, v):
+            with _LOCK:
+                _CACHE[k] = v
+
+        def b(k):
+            with _LOCK:
+                return _CACHE.pop(k, None)
+    """)
+    assert findings == []
+
+
+def test_ug01_internally_locked_method_calls_ok_rebind_not():
+    name = sorted(INTERNALLY_LOCKED)[0]
+    clean = _lint(f"""
+        def use():
+            return {name}.get("k")
+    """)
+    assert clean == []
+    rebind = _lint(f"""
+        def reset():
+            global {name}
+            {name} = {{}}
+    """)
+    assert _rules(rebind) == ["UG01"]
+
+
+# ----------------------------------------------------------------- CG01
+
+
+def test_cg01_unguarded_self_attr_mutation():
+    findings = _lint("""
+        import threading
+
+        class Sess:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._cache = {}
+
+            def put(self, k, v):
+                self._cache[k] = v
+    """)
+    assert _rules(findings) == ["CG01"]
+    assert findings[0].name == "self._cache"
+
+
+def test_cg01_init_exempt_and_guarded_clean():
+    findings = _lint("""
+        import threading
+
+        class Sess:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._cache = {}
+
+            def put(self, k, v):
+                with self._lock:
+                    self._cache[k] = v
+    """)
+    assert findings == []
+
+
+def test_cg01_annassign_attrs_detected():
+    # ``self._cache: Dict = {}`` is an AnnAssign, not an Assign — the
+    # original session.py findings depended on this path
+    findings = _lint("""
+        import threading
+        from typing import Dict
+
+        class Sess:
+            def __init__(self):
+                self._lock: threading.Lock = threading.Lock()
+                self._cache: Dict = {}
+
+            def put(self, k, v):
+                self._cache[k] = v
+    """)
+    assert _rules(findings) == ["CG01"]
+
+
+def test_cg01_silent_when_class_owns_no_lock():
+    # classes with no locking intent are out of scope (single-threaded types)
+    findings = _lint("""
+        class Plain:
+            def __init__(self):
+                self._items = []
+
+            def add(self, x):
+                self._items.append(x)
+    """)
+    assert findings == []
+
+
+# ------------------------------------------------------------ FA01/MD01
+
+
+def test_fa01_function_attribute_state():
+    findings = _lint("""
+        def counter():
+            counter.n = getattr(counter, "n", 0) + 1
+            return counter.n
+    """)
+    assert _rules(findings) == ["FA01"]
+
+
+def test_md01_mutable_default():
+    findings = _lint("""
+        def collect(x, acc=[]):
+            acc.append(x)
+            return acc
+    """)
+    assert _rules(findings) == ["MD01"]
+
+
+def test_md01_none_default_clean():
+    assert _lint("""
+        def collect(x, acc=None):
+            acc = acc or []
+            acc.append(x)
+            return acc
+    """) == []
+
+
+# ------------------------------------------------------------ suppression
+
+
+def test_lint_ok_suppresses_single_line():
+    findings = _lint("""
+        import threading
+        _CACHE = {}
+        _LOCK = threading.Lock()
+
+        def guarded(k, v):
+            with _LOCK:
+                _CACHE[k] = v
+
+        def unguarded(k):
+            return _CACHE.setdefault(k, [])  # lint-ok: benign race, idempotent
+    """)
+    assert findings == []
+
+
+# -------------------------------------------------------------- the tree
+
+
+def test_src_tree_is_lint_clean():
+    """The gate CI enforces: zero findings across src/repro."""
+    assert lint_paths(["src/repro"]) == []

@@ -1,6 +1,5 @@
 """Hypothesis property tests on system-level invariants (deliverable c)."""
 
-import math
 
 import pytest
 from conftest import hypothesis_or_stubs
@@ -95,7 +94,7 @@ def test_congestion_dilation_never_negative(n, buf):
 @settings(max_examples=8, deadline=None)
 @given(seed=st.integers(min_value=0, max_value=10))
 def test_fiber_routing_load_counts_consistent(seed):
-    from repro.core.fibers import FiberRouting, random_demands, route_fibers, server_grid
+    from repro.core.fibers import random_demands, route_fibers, server_grid
 
     topo = server_grid(16)
     demands = random_demands(topo, 24, seed=seed)

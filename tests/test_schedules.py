@@ -7,7 +7,7 @@ from conftest import hypothesis_or_stubs
 given, settings, st = hypothesis_or_stubs()
 
 from repro.core import schedules as S
-from repro.core.simulate import SimulationError, verify
+from repro.core.simulate import verify
 
 POW2 = [2, 4, 8, 16]
 ANY_N = [2, 3, 4, 5, 6, 8, 12, 16]

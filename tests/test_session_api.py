@@ -5,7 +5,6 @@ Device-level backend parity (interp vs xla) lives in multidevice_check.py,
 which runs under 8 host devices in a subprocess.
 """
 
-import warnings
 
 import numpy as np
 import pytest

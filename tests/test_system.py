@@ -3,9 +3,7 @@ train → checkpoint → restore → serve, with PCCL planning in the loop."""
 
 import dataclasses
 
-import jax
 import numpy as np
-import pytest
 
 from repro.ckpt.checkpoint import CheckpointConfig, CheckpointManager
 from repro.configs import ARCH_IDS, get_config

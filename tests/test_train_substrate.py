@@ -11,12 +11,7 @@ import pytest
 from repro.ckpt.checkpoint import CheckpointConfig, CheckpointManager
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, SyntheticLMData
-from repro.runtime.fault import (
-    FailureInjector,
-    InjectedFailure,
-    StragglerConfig,
-    StragglerDetector,
-)
+from repro.runtime.fault import FailureInjector, StragglerConfig, StragglerDetector
 from repro.train.optimizer import (
     OptimizerConfig,
     adamw_update,
