@@ -14,7 +14,9 @@
 #            (style/import order; skipped gracefully where not installed)
 #   verify - static analysis gate (python -m repro.analysis): chunk-dataflow
 #            verification of every generator, round feasibility, circuit
-#            realizability, plan/concurrent-plan accounting invariants
+#            realizability, plan/concurrent-plan accounting invariants,
+#            plus the Pallas kernel analyzer (--kernels): coverage,
+#            write-race, bounds and scratch-carry proofs per pallas_call
 #   smoke  - planner/exec/concurrent bench smoke guards (deterministic
 #            regression checks + loose wall-clock bars); writes fresh
 #            point JSONs into .ci-bench/ for the bench stage
@@ -52,6 +54,9 @@ stage_verify() {
   # static analysis gate: dataflow-verify every generator, check round
   # feasibility + circuit realizability, replay plan accounting
   python -m repro.analysis
+  # kernel analyzer over the shipped Pallas kernels (separate invocation:
+  # it needs JAX for capture, the schedule passes above stay jax-free)
+  python -m repro.analysis --kernels
 }
 
 stage_smoke() {

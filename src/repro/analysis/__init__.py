@@ -1,21 +1,28 @@
-"""Static analysis for schedules, plans, and the codebase itself.
+"""Static analysis for schedules, plans, kernels, and the codebase itself.
 
-Three passes, no device execution:
+Four passes, no device execution:
 
 * :mod:`repro.analysis.verify` — chunk-dataflow verifier: abstract
   interpretation proving a schedule's collective postcondition.
 * :mod:`repro.analysis.invariants` — plan/circuit invariant checker: round
   feasibility, Alg. 3/4 realizability, Alg. 1 plan accounting, reconfig-mode
   monotonicity, concurrent joint-plan accounting.
+* :mod:`repro.analysis.kernel_lint` (+ :mod:`repro.analysis.pallas_model`) —
+  Pallas kernel static analyzer: captures each ``pl.pallas_call``'s
+  grid/BlockSpecs abstractly and proves output coverage, write-race
+  freedom, bounds, and scratch-carry discipline, plus an AST
+  precision/hygiene lint.
 * :mod:`repro.analysis.lint_concurrency` — AST lint for the shared-state
   bug classes (unguarded cache mutation, function-attribute state, mutable
   defaults).
 
 ``python -m repro.analysis`` runs the schedule/plan passes over the built-in
-generator zoo (the CI ``verify`` stage); ``python -m
+generator zoo and ``python -m repro.analysis --kernels`` the kernel analyzer
+over the shipped kernels (both in the CI ``verify`` stage); ``python -m
 repro.analysis.lint_concurrency`` runs the lint (the CI ``lint`` stage).
 Set ``PCCL_VERIFY=1`` to also verify every schedule at exec-engine compile
-time (``comm/exec_engine.py``).
+time (``comm/exec_engine.py``) and every Pallas kernel entry point at
+dispatch time (``kernels/*/ops.py``).
 """
 
 from .verify import (  # noqa: F401
@@ -38,13 +45,36 @@ from .invariants import (  # noqa: F401
     check_schedule,
 )
 _LINT_EXPORTS = ("Finding", "lint_module", "lint_paths")
+_KERNEL_EXPORTS = (
+    "KernelLintError",
+    "KernelReport",
+    "KernelSummary",
+    "KernelViolation",
+    "analyze_call_site",
+    "analyze_callable",
+    "assert_kernel_clean",
+    "shipped_kernel_cases",
+    "summarize_kernel",
+    "verify_entry_point",
+)
+_MODEL_EXPORTS = ("BlockModel", "Box", "CallSite", "CaptureError",
+                  "capture_call_sites", "whole_array_box")
 
 
 def __getattr__(name):
     # lazy (PEP 562): an eager import here makes ``python -m
-    # repro.analysis.lint_concurrency`` warn about double execution
+    # repro.analysis.lint_concurrency`` warn about double execution, and
+    # kernel_lint/pallas_model stay out of the jax-free schedule passes
     if name in _LINT_EXPORTS:
         from . import lint_concurrency
 
         return getattr(lint_concurrency, name)
+    if name in _KERNEL_EXPORTS:
+        from . import kernel_lint
+
+        return getattr(kernel_lint, name)
+    if name in _MODEL_EXPORTS:
+        from . import pallas_model
+
+        return getattr(pallas_model, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,4 +1,4 @@
-"""CI ``verify`` stage driver: ``python -m repro.analysis [--quick]``.
+"""CI ``verify`` stage driver: ``python -m repro.analysis [--quick|--kernels]``.
 
 Runs the static passes over the built-in generator zoo and the planner:
 
@@ -11,6 +11,11 @@ Runs the static passes over the built-in generator zoo and the planner:
 
 Prints one line per section and exits non-zero on any violation.
 ``--quick`` caps the realizability sweep at n=8 (it dominates runtime).
+
+``--kernels`` instead runs *only* the Pallas kernel static analyzer
+(:mod:`repro.analysis.kernel_lint`) over the shipped kernel zoo — a
+separate mode because it needs JAX for capture while the schedule passes
+stay jax-free.
 """
 
 from __future__ import annotations
@@ -71,6 +76,18 @@ def _section(name: str, failures: List[str], t0: float) -> bool:
     for f in failures:
         print(f"  {f}")
     return not failures
+
+
+def run_kernels() -> int:
+    """Kernel-lint section: analyze every shipped Pallas kernel case."""
+    from .kernel_lint import run_shipped  # lazy: needs JAX
+
+    t0 = time.perf_counter()
+    failures = run_shipped(verbose=True)
+    ok = _section("kernel lint (shipped Pallas kernels)",
+                  [f"{failures} failing case(s)"] if failures else [], t0)
+    print(f"[verify] {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
 
 
 def run(quick: bool = False) -> int:
@@ -148,7 +165,11 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.analysis")
     ap.add_argument("--quick", action="store_true",
                     help="skip the n=16 realizability cases")
+    ap.add_argument("--kernels", action="store_true",
+                    help="run only the Pallas kernel static analyzer")
     args = ap.parse_args(argv)
+    if args.kernels:
+        return run_kernels()
     return run(quick=args.quick)
 
 

@@ -1,0 +1,966 @@
+"""Static analyzer for the Pallas kernels — grid/BlockSpec dataflow proofs
+plus an AST precision/hygiene lint.
+
+The schedule verifier (PR 6) gave collectives a device-free proof
+substrate; this module gives the kernels layer the same, ahead of the
+ROADMAP's comm/compute-fusion work (fused epilogues are only worth building
+on kernels that are provably race-free).  Per captured
+:class:`~repro.analysis.pallas_model.CallSite` it proves:
+
+* **coverage** — every element of every output is written by *exactly one*
+  writer class.  Programs whose index map ignores some grid axes form one
+  class (a TPU grid iterates sequentially, so revisiting a block along an
+  ignored axis — ssd's carried ``fin`` output — is a serialization, not a
+  race); gaps and overlaps are reported with the offending program ids and
+  block coordinates.
+* **write-race freedom** — two programs that differ in a *depended-on* grid
+  axis must never map to overlapping output footprints; outputs aliasing an
+  input (``input_output_aliases``) must read and write the identical
+  footprint at every grid point.
+* **bounds** — every in/out block footprint stays inside the (padded)
+  operand shape at every grid point (rmsnorm's pad-then-slice path, flash's
+  causal streaming: the *spec-level* footprints; in-kernel dynamic slices
+  like flash's ``last_kb`` skip are the kernel body's job and are covered
+  by the interpret-mode parity tests, not this pass).
+* **scratch-carry discipline** — a VMEM scratch that is both read and
+  written (ssd's ``state_ref``) carries state across grid steps, which is
+  only legal when (a) a ``pl.when(program_id(k) == 0)``-guarded reset
+  exists, (b) its axis ``k`` is the innermost grid dimension (the only one
+  Pallas TPU iterates fastest, so the carry sequence is contiguous), and
+  (c) that axis is not declared ``parallel`` in ``dimension_semantics``.
+  Both structure checks are AST-level (:func:`summarize_kernel`).
+* **precision/hygiene (AST)** — sub-fp32 operand reads must upcast to fp32
+  before arithmetic (``.astype(jnp.float32)`` on the ref read), sub-fp32
+  output stores must cast on store (``.astype(o_ref.dtype)``), kernel
+  parameters that are unused or only ever multiplied by a literal zero are
+  dead (the rule that caught flash's ``q_offset_blocks``), and the VMEM
+  working set (double-buffered in/out blocks + scratch) must fit a budget.
+
+Entry points: :func:`analyze_call_site` (one captured model),
+:func:`analyze_callable` (capture a wrapper, analyze every site),
+:func:`verify_entry_point` (memoized, used by the ``kernels/*/ops.py``
+dispatchers under ``PCCL_VERIFY=1``), and :func:`run_shipped` /
+``python -m repro.analysis --kernels`` (the CI gate over the three shipped
+kernels).  A seeded mutation corpus (``tests/test_kernel_lint.py``)
+measures the kill rate on corrupted index maps, off-by-one grids, swapped
+block dims and dropped resets.
+
+No device execution anywhere; JAX is only imported for capture.
+"""
+
+from __future__ import annotations
+
+import ast
+import inspect
+import itertools
+import textwrap
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .pallas_model import Box, CallSite, CaptureError, capture_call_sites
+
+__all__ = [
+    "KernelLintError",
+    "KernelReport",
+    "KernelSummary",
+    "KernelViolation",
+    "KINDS",
+    "analyze_call_site",
+    "analyze_callable",
+    "assert_kernel_clean",
+    "run_shipped",
+    "shipped_kernel_cases",
+    "summarize_kernel",
+    "verify_entry_point",
+]
+
+#: Violation kinds emitted by the analyzer (stable identifiers for tests).
+KINDS = (
+    "grid-empty",          # a grid dimension is <= 0
+    "grid-unenumerable",   # too many programs to enumerate exactly
+    "oob-read",            # an input footprint leaves the operand shape
+    "oob-write",           # an output footprint leaves the output shape
+    "write-race",          # two writer classes touch overlapping footprints
+    "coverage-gap",        # some output elements are never written
+    "coverage-misaligned", # unaligned writer set too large to check exactly
+    "alias-mismatch",      # input_output_aliases with unequal footprints
+    "scratch-no-reset",    # carried scratch without a pl.when(id==0) reset
+    "scratch-carry-axis",  # reset axis is not the innermost grid dimension
+    "scratch-carry-parallel",  # carry axis declared parallel
+    "missing-store-cast",  # sub-fp32 output stored without .astype(ref.dtype)
+    "low-precision-read",  # sub-fp32 operand read without fp32 upcast
+    "dead-param",          # kernel param unused or only multiplied by zero
+    "vmem-budget",         # estimated VMEM working set exceeds the budget
+)
+
+#: Default VMEM working-set budget (one TPU core's VMEM).
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024
+
+#: Exact-enumeration cap: grids beyond this report grid-unenumerable
+#: instead of silently sampling.
+MAX_PROGRAMS = 1 << 17
+
+_SUB_FP32 = ("bfloat16", "float16")
+
+
+class KernelLintError(AssertionError):
+    """Raised by :func:`assert_kernel_clean` / :func:`verify_entry_point`."""
+
+    def __init__(self, reports: Sequence["KernelReport"]):
+        self.reports = tuple(reports)
+        super().__init__("\n".join(str(r) for r in reports))
+
+
+@dataclass(frozen=True)
+class KernelViolation:
+    """One attributable kernel-lint failure."""
+
+    kind: str
+    site: str                              # call-site (kernel) name
+    operand: Optional[str] = None          # "out[0]" / "in[2]" / "scratch[0]" / param
+    program: Optional[Tuple[int, ...]] = None  # offending program id(s)
+    box: Optional[Tuple[int, ...]] = None  # block coords or element offset
+    detail: str = ""
+
+    def __str__(self) -> str:
+        loc = self.site
+        if self.operand is not None:
+            loc += f" {self.operand}"
+        msg = f"{loc} [{self.kind}]"
+        if self.program is not None:
+            msg += f" program {self.program}"
+        if self.box is not None:
+            msg += f" block {self.box}"
+        if self.detail:
+            msg += f": {self.detail}"
+        return msg
+
+
+@dataclass(frozen=True)
+class KernelReport:
+    """Outcome of analyzing one call site."""
+
+    site: str
+    grid: Tuple[int, ...]
+    programs_checked: int
+    violations: Tuple[KernelViolation, ...] = ()
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def __str__(self) -> str:
+        head = f"{self.site} grid={self.grid}"
+        if self.ok:
+            return f"{head}: clean over {self.programs_checked} programs"
+        lines = [f"{head}: {len(self.violations)} violation(s)"]
+        lines += [f"  {v}" for v in self.violations]
+        return "\n".join(lines)
+
+
+# ------------------------------------------------------------ AST summary
+
+
+@dataclass
+class KernelSummary:
+    """Structural facts about one kernel body, extracted from its AST."""
+
+    fn_name: str
+    in_params: Tuple[str, ...] = ()
+    out_params: Tuple[str, ...] = ()
+    scratch_params: Tuple[str, ...] = ()
+    config_params: Tuple[str, ...] = ()
+    reads: Set[str] = field(default_factory=set)       # subscript loads
+    writes: Set[str] = field(default_factory=set)      # subscript stores
+    carried_reads: Set[str] = field(default_factory=set)  # loads outside resets
+    resets: Dict[str, Set[int]] = field(default_factory=dict)  # scratch → axes
+    raw_reads: Dict[str, List[int]] = field(default_factory=dict)  # no fp32 upcast
+    uncast_stores: Dict[str, List[int]] = field(default_factory=dict)
+    uses: Dict[str, int] = field(default_factory=dict)      # Name loads per param
+    zero_uses: Dict[str, int] = field(default_factory=dict)  # uses inside *0
+    parsed: bool = True  # False when the source was unavailable
+
+
+def _unwrap(fn: Callable) -> Callable:
+    while hasattr(fn, "func") and callable(getattr(fn, "func")):
+        fn = fn.func
+    return fn
+
+
+def _is_float32(node: ast.expr) -> bool:
+    if isinstance(node, ast.Attribute):
+        return node.attr == "float32"
+    if isinstance(node, ast.Name):
+        return node.id == "float32"
+    return isinstance(node, ast.Constant) and node.value == "float32"
+
+
+def _is_dtype_of(node: ast.expr, params: Sequence[str]) -> bool:
+    """``<ref>.dtype`` where ``<ref>`` is an out/in/scratch param."""
+    return (isinstance(node, ast.Attribute) and node.attr == "dtype"
+            and isinstance(node.value, ast.Name) and node.value.id in params)
+
+
+def _program_id_axis(node: ast.expr, aliases: Dict[str, int]) -> Optional[int]:
+    """Resolve an expression to a grid axis: ``pl.program_id(k)`` inline or
+    a local alias previously assigned from one."""
+    if isinstance(node, ast.Name):
+        return aliases.get(node.id)
+    if (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "program_id" and node.args
+            and isinstance(node.args[0], ast.Constant)):
+        return int(node.args[0].value)
+    return None
+
+
+def _reset_axis(dec: ast.expr, aliases: Dict[str, int]) -> Optional[int]:
+    """Axis ``k`` of a ``pl.when(<program_id(k)> == 0)`` decorator."""
+    if not (isinstance(dec, ast.Call) and isinstance(dec.func, ast.Attribute)
+            and dec.func.attr == "when" and dec.args):
+        return None
+    cond = dec.args[0]
+    if not (isinstance(cond, ast.Compare) and len(cond.ops) == 1
+            and isinstance(cond.ops[0], ast.Eq)):
+        return None
+    left, right = cond.left, cond.comparators[0]
+    for a, b in ((left, right), (right, left)):
+        if isinstance(b, ast.Constant) and b.value == 0:
+            axis = _program_id_axis(a, aliases)
+            if axis is not None:
+                return axis
+    return None
+
+
+class _KernelVisitor(ast.NodeVisitor):
+    def __init__(self, summary: KernelSummary, all_params: Sequence[str]):
+        self.s = summary
+        self.all_params = tuple(all_params)
+        self.aliases: Dict[str, int] = {}
+        self._in_reset: List[str] = []  # scratch names the current pl.when resets
+        self._mult_zero_depth = 0
+
+    # -- helpers
+
+    def _subscript_base(self, node: ast.Subscript) -> Optional[str]:
+        base = node.value
+        if isinstance(base, ast.Name) and base.id in self.all_params:
+            return base.id
+        return None
+
+    def _product_has_zero(self, node: ast.BinOp) -> bool:
+        """True when a (possibly nested) multiplication chain has a literal
+        zero factor — the whole product is statically zero."""
+        factors: List[ast.expr] = []
+
+        def flatten(n: ast.expr) -> None:
+            if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mult):
+                flatten(n.left)
+                flatten(n.right)
+            else:
+                factors.append(n)
+
+        flatten(node)
+        return any(isinstance(f, ast.Constant) and f.value == 0 for f in factors)
+
+    # -- visitors
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        # program-id aliases: `ci = pl.program_id(1)`
+        axis = _program_id_axis(node.value, self.aliases)
+        if axis is not None:
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    self.aliases[tgt.id] = axis
+        for tgt in node.targets:
+            if isinstance(tgt, ast.Subscript):
+                name = self._subscript_base(tgt)
+                if name is not None:
+                    self.s.writes.add(name)
+                    if name in self._in_reset and name in self.s.scratch_params:
+                        pass  # reset store, recorded via the decorator
+                    if (name in self.s.out_params
+                            and not self._is_cast_store(node.value)):
+                        self.s.uncast_stores.setdefault(name, []).append(
+                            node.lineno)
+        self.generic_visit(node)
+
+    def _is_cast_store(self, value: ast.expr) -> bool:
+        return (isinstance(value, ast.Call)
+                and isinstance(value.func, ast.Attribute)
+                and value.func.attr == "astype"
+                and len(value.args) == 1
+                and _is_dtype_of(value.args[0], self.all_params))
+
+    def visit_Subscript(self, node: ast.Subscript) -> None:
+        if isinstance(node.ctx, ast.Load):
+            name = self._subscript_base(node)
+            if name is not None:
+                self.s.reads.add(name)
+                if name in self.s.scratch_params and not self._in_reset:
+                    self.s.carried_reads.add(name)
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        # mark `<ref>[...].astype(jnp.float32)` reads as upcast
+        if (isinstance(node.func, ast.Attribute) and node.func.attr == "astype"
+                and isinstance(node.func.value, ast.Subscript)):
+            name = self._subscript_base(node.func.value)
+            if (name is not None and len(node.args) == 1
+                    and _is_float32(node.args[0])):
+                # visit children but skip the raw-read bookkeeping below
+                self.s.reads.add(name)
+                if name in self.s.scratch_params and not self._in_reset:
+                    self.s.carried_reads.add(name)
+                for a in node.args:
+                    self.visit(a)
+                self.visit(node.func.value.slice)
+                return
+        self.generic_visit(node)
+
+    def visit_Name(self, node: ast.Name) -> None:
+        if isinstance(node.ctx, ast.Load) and node.id in self.all_params:
+            self.s.uses[node.id] = self.s.uses.get(node.id, 0) + 1
+            if self._mult_zero_depth:
+                self.s.zero_uses[node.id] = self.s.zero_uses.get(node.id, 0) + 1
+
+    def visit_BinOp(self, node: ast.BinOp) -> None:
+        if isinstance(node.op, ast.Mult) and self._product_has_zero(node):
+            self._mult_zero_depth += 1
+            self.generic_visit(node)
+            self._mult_zero_depth -= 1
+        else:
+            self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        reset_axes = [
+            _reset_axis(dec, self.aliases) for dec in node.decorator_list
+        ]
+        reset_axes = [a for a in reset_axes if a is not None]
+        if reset_axes:
+            stored = {
+                self._subscript_base(t)
+                for stmt in ast.walk(node)
+                if isinstance(stmt, ast.Assign)
+                for t in stmt.targets
+                if isinstance(t, ast.Subscript)
+            }
+            stored_scratch = [
+                s for s in stored if s in self.s.scratch_params
+            ]
+            self._in_reset = stored_scratch
+            for s in stored_scratch:
+                self.s.resets.setdefault(s, set()).update(reset_axes)
+        for dec in node.decorator_list:
+            self.visit(dec)
+        for stmt in node.body:
+            self.visit(stmt)
+        self._in_reset = []
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+
+def _collect_raw_reads(tree: ast.AST, summary: KernelSummary) -> None:
+    """Second pass: subscript loads of in-params NOT wrapped in
+    ``.astype(jnp.float32)`` (checked via parent inspection)."""
+    parents: Dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Subscript)
+                and isinstance(node.ctx, ast.Load)):
+            continue
+        base = node.value
+        if not (isinstance(base, ast.Name) and base.id in summary.in_params):
+            continue
+        p = parents.get(node)
+        upcast = False
+        if (isinstance(p, ast.Attribute) and p.attr == "astype"):
+            call = parents.get(p)
+            if (isinstance(call, ast.Call) and len(call.args) == 1
+                    and _is_float32(call.args[0])):
+                upcast = True
+        if not upcast:
+            summary.raw_reads.setdefault(base.id, []).append(node.lineno)
+
+
+def summarize_kernel(
+    kernel: Callable, n_in: int, n_out: int, n_scratch: int
+) -> KernelSummary:
+    """AST-level structural summary of a kernel body.
+
+    ``kernel`` may be a ``functools.partial``; the positional parameters of
+    the unwrapped function are split ``[in refs | out refs | scratch refs]``
+    by the counts from the captured call site, and keyword-only parameters
+    are the config params.  When the source is unavailable (defined in a
+    REPL / exec), ``parsed=False`` and the AST rules are skipped — model
+    checks still run.
+    """
+    fn = _unwrap(kernel)
+    name = getattr(fn, "__name__", str(fn))
+    try:
+        src = textwrap.dedent(inspect.getsource(fn))
+        tree = ast.parse(src)
+        sig = inspect.signature(fn)
+    except (OSError, TypeError, SyntaxError):
+        return KernelSummary(fn_name=name, parsed=False)
+    positional = [
+        p.name for p in sig.parameters.values()
+        if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)
+    ]
+    config = [
+        p.name for p in sig.parameters.values() if p.kind == p.KEYWORD_ONLY
+    ]
+    if len(positional) != n_in + n_out + n_scratch:
+        # signature/spec mismatch: let the model checks speak; don't guess
+        return KernelSummary(fn_name=name, parsed=False)
+    summary = KernelSummary(
+        fn_name=name,
+        in_params=tuple(positional[:n_in]),
+        out_params=tuple(positional[n_in:n_in + n_out]),
+        scratch_params=tuple(positional[n_in + n_out:]),
+        config_params=tuple(config),
+    )
+    fndef = next(
+        (n for n in ast.walk(tree) if isinstance(n, ast.FunctionDef)
+         and n.name == name), None,
+    )
+    if fndef is None:
+        return KernelSummary(fn_name=name, parsed=False)
+    visitor = _KernelVisitor(summary, positional + config)
+    for stmt in fndef.body:
+        visitor.visit(stmt)
+    _collect_raw_reads(fndef, summary)
+    return summary
+
+
+# -------------------------------------------------------- model-side checks
+
+
+def _check_grid(site: CallSite, out: List[KernelViolation]) -> bool:
+    ok = True
+    for a, g in enumerate(site.grid):
+        if g <= 0:
+            out.append(KernelViolation(
+                "grid-empty", site.name, program=None,
+                detail=f"grid axis {a} has extent {g}"))
+            ok = False
+    if ok and site.num_programs > MAX_PROGRAMS:
+        out.append(KernelViolation(
+            "grid-unenumerable", site.name,
+            detail=f"{site.num_programs} programs > cap {MAX_PROGRAMS}; "
+                   "cannot prove coverage exactly"))
+        ok = False
+    return ok
+
+
+def _check_bounds(
+    site: CallSite, programs: Sequence[Tuple[int, ...]],
+    out: List[KernelViolation], max_per_spec: int = 3,
+) -> Dict[str, Dict[Tuple[int, ...], Tuple[int, ...]]]:
+    """Bounds for every spec at every program; returns out-spec offset maps
+    (program → element offset) for the coverage pass."""
+    offsets: Dict[str, Dict[Tuple[int, ...], Tuple[int, ...]]] = {}
+    for role, blocks, shapes in (
+        ("in", site.in_blocks, site.in_shapes),
+        ("out", site.out_blocks, site.out_shapes),
+    ):
+        kind = "oob-read" if role == "in" else "oob-write"
+        for i, (blk, shape) in enumerate(zip(blocks, shapes)):
+            label = f"{role}[{i}]"
+            per_prog: Dict[Tuple[int, ...], Tuple[int, ...]] = {}
+            reported = 0
+            for p in programs:
+                try:
+                    box = blk.footprint(p)
+                except Exception as e:  # index map crashed on this id
+                    out.append(KernelViolation(
+                        kind, site.name, label, p,
+                        detail=f"index map failed: {e}"))
+                    reported += 1
+                    if reported >= max_per_spec:
+                        break
+                    continue
+                per_prog[p] = box.offset
+                if not box.within(shape):
+                    if reported < max_per_spec:
+                        out.append(KernelViolation(
+                            kind, site.name, label, p, box.offset,
+                            detail=f"footprint {box.offset}+{box.size} "
+                                   f"outside operand shape {shape}"))
+                    reported += 1
+            if reported > max_per_spec:
+                out.append(KernelViolation(
+                    kind, site.name, label,
+                    detail=f"… {reported - max_per_spec} more programs "
+                           "out of bounds"))
+            if role == "out":
+                offsets[label] = per_prog
+    return offsets
+
+
+def _dependent_axes(
+    programs: Sequence[Tuple[int, ...]],
+    offset_of: Dict[Tuple[int, ...], Tuple[int, ...]],
+    n_axes: int,
+) -> Set[int]:
+    """Grid axes whose variation (others fixed) ever changes the footprint."""
+    dep: Set[int] = set()
+    for a in range(n_axes):
+        seen: Dict[Tuple[int, ...], Tuple[int, ...]] = {}
+        for p in programs:
+            key = p[:a] + p[a + 1:]
+            off = offset_of.get(p)
+            if off is None:
+                continue
+            prev = seen.get(key)
+            if prev is None:
+                seen[key] = off
+            elif prev != off:
+                dep.add(a)
+                break
+    return dep
+
+
+def _check_output_coverage(
+    site: CallSite, programs: Sequence[Tuple[int, ...]],
+    offsets: Dict[str, Dict[Tuple[int, ...], Tuple[int, ...]]],
+    out: List[KernelViolation],
+) -> None:
+    for oi, (blk, shape) in enumerate(zip(site.out_blocks, site.out_shapes)):
+        label = f"out[{oi}]"
+        per_prog = offsets.get(label, {})
+        if len(per_prog) != len(programs):
+            continue  # bounds pass already reported index-map failures
+        sizes = blk.sizes
+        dep = _dependent_axes(programs, per_prog, len(site.grid))
+        dep_sorted = sorted(dep)
+        # writer class = projection onto depended-on axes; single-axis
+        # invariance composes, so each class maps to exactly one box
+        class_rep: Dict[Tuple[int, ...], Tuple[int, ...]] = {}
+        class_off: Dict[Tuple[int, ...], Tuple[int, ...]] = {}
+        for p in programs:
+            cls = tuple(p[a] for a in dep_sorted)
+            if cls not in class_rep:
+                class_rep[cls] = p
+                class_off[cls] = per_prog[p]
+        # parallel revisit: an ignored axis with extent > 1 that is declared
+        # parallel means concurrent programs rewrite the same block
+        if site.dimension_semantics is not None:
+            for a, sem in enumerate(site.dimension_semantics):
+                if (sem == "parallel" and a not in dep
+                        and a < len(site.grid) and site.grid[a] > 1):
+                    out.append(KernelViolation(
+                        "write-race", site.name, label,
+                        detail=f"grid axis {a} is parallel but {label}'s "
+                               "index map ignores it: "
+                               f"{site.grid[a]} programs write each block"))
+        aligned = all(
+            s > 0 and all(off[d] % s == 0 for off in class_off.values())
+            for d, s in enumerate(sizes)
+        )
+        if aligned:
+            # boxes are cells of a regular lattice: identical or disjoint
+            cell_of: Dict[Tuple[int, ...], Tuple[int, ...]] = {}
+            race = 0
+            for cls, off in class_off.items():
+                cell = tuple(o // s for o, s in zip(off, sizes))
+                other = cell_of.get(cell)
+                if other is not None:
+                    if race < 3:
+                        out.append(KernelViolation(
+                            "write-race", site.name, label,
+                            program=class_rep[cls], box=cell,
+                            detail="also written by program "
+                                   f"{class_rep[other]}"))
+                    race += 1
+                else:
+                    cell_of[cell] = cls
+            if race > 3:
+                out.append(KernelViolation(
+                    "write-race", site.name, label,
+                    detail=f"… {race - 3} more colliding writer classes"))
+            # coverage: the lattice must tile the output exactly
+            ragged = [d for d, s in enumerate(sizes) if shape[d] % s]
+            if ragged:
+                out.append(KernelViolation(
+                    "coverage-gap", site.name, label,
+                    detail=f"block {sizes} does not divide output "
+                           f"shape {shape} on dims {ragged}"))
+                continue
+            expected = [shape[d] // s for d, s in enumerate(sizes)]
+            total = 1
+            for e in expected:
+                total *= e
+            if len(cell_of) < total:
+                missing = []
+                for cell in itertools.product(*(range(e) for e in expected)):
+                    if cell not in cell_of:
+                        missing.append(cell)
+                        if len(missing) == 3:
+                            break
+                out.append(KernelViolation(
+                    "coverage-gap", site.name, label, box=missing[0],
+                    detail=f"{total - len(cell_of)} of {total} blocks never "
+                           f"written; first missing block coords: {missing}"))
+        else:
+            classes = list(class_off.items())
+            if len(classes) > 2048:
+                out.append(KernelViolation(
+                    "coverage-misaligned", site.name, label,
+                    detail=f"{len(classes)} unaligned writer classes; "
+                           "exact overlap check refused"))
+                continue
+            overlap = False
+            for (c1, o1), (c2, o2) in itertools.combinations(classes, 2):
+                if Box(o1, sizes).overlaps(Box(o2, sizes)):
+                    out.append(KernelViolation(
+                        "write-race", site.name, label,
+                        program=class_rep[c1], box=o1,
+                        detail=f"overlaps program {class_rep[c2]} at {o2}"))
+                    overlap = True
+                    break
+            if not overlap:
+                vol = sum(Box(o, sizes).volume for _, o in classes)
+                want = 1
+                for d in shape:
+                    want *= d
+                if vol < want:
+                    out.append(KernelViolation(
+                        "coverage-gap", site.name, label,
+                        detail=f"disjoint writes cover {vol} of {want} "
+                               "elements"))
+
+
+def _check_aliases(
+    site: CallSite, programs: Sequence[Tuple[int, ...]],
+    out: List[KernelViolation],
+) -> None:
+    for i_in, i_out in site.input_output_aliases:
+        label = f"in[{i_in}]~out[{i_out}]"
+        if i_in >= len(site.in_blocks) or i_out >= len(site.out_blocks):
+            out.append(KernelViolation(
+                "alias-mismatch", site.name, label,
+                detail="alias index out of range"))
+            continue
+        if site.in_shapes[i_in] != site.out_shapes[i_out] or (
+                site.in_dtypes[i_in] != site.out_dtypes[i_out]):
+            out.append(KernelViolation(
+                "alias-mismatch", site.name, label,
+                detail=f"aliased buffers differ: "
+                       f"{site.in_shapes[i_in]}/{site.in_dtypes[i_in]} vs "
+                       f"{site.out_shapes[i_out]}/{site.out_dtypes[i_out]}"))
+            continue
+        bi, bo = site.in_blocks[i_in], site.out_blocks[i_out]
+        for p in programs:
+            if bi.footprint(p) != bo.footprint(p):
+                out.append(KernelViolation(
+                    "alias-mismatch", site.name, label, p,
+                    detail=f"read footprint {bi.footprint(p).offset} != "
+                           f"write footprint {bo.footprint(p).offset}; an "
+                           "aliased operand must be consumed exactly where "
+                           "it is overwritten"))
+                break
+
+
+def _check_scratch_carry(
+    site: CallSite, summary: KernelSummary, out: List[KernelViolation]
+) -> None:
+    if not summary.parsed:
+        return
+    innermost = len(site.grid) - 1
+    for si, name in enumerate(summary.scratch_params):
+        carried = name in summary.carried_reads and name in summary.writes
+        if not carried:
+            continue
+        label = f"scratch[{si}]({name})"
+        axes = summary.resets.get(name)
+        if not axes:
+            out.append(KernelViolation(
+                "scratch-no-reset", site.name, label,
+                detail="scratch is read and written across grid steps but "
+                       "has no pl.when(program_id == 0) reset: the first "
+                       "step of every outer program observes stale state"))
+            continue
+        for axis in sorted(axes):
+            if axis != innermost:
+                out.append(KernelViolation(
+                    "scratch-carry-axis", site.name, label,
+                    detail=f"carry reset keys on grid axis {axis}, but only "
+                           f"the innermost axis {innermost} iterates "
+                           "contiguously per outer program on TPU"))
+            if (site.dimension_semantics is not None
+                    and axis < len(site.dimension_semantics)
+                    and site.dimension_semantics[axis] == "parallel"):
+                out.append(KernelViolation(
+                    "scratch-carry-parallel", site.name, label,
+                    detail=f"carry axis {axis} is declared parallel; carried "
+                           "VMEM state requires sequential iteration"))
+
+
+def _check_precision(
+    site: CallSite, summary: KernelSummary, out: List[KernelViolation]
+) -> None:
+    if not summary.parsed:
+        return
+    for i, name in enumerate(summary.in_params):
+        if site.in_dtypes[i] in _SUB_FP32 and name in summary.raw_reads:
+            lines = summary.raw_reads[name]
+            out.append(KernelViolation(
+                "low-precision-read", site.name, f"in[{i}]({name})",
+                detail=f"{site.in_dtypes[i]} operand read without "
+                       f".astype(jnp.float32) at line(s) {lines}: "
+                       "accumulation must be fp32"))
+    for i, name in enumerate(summary.out_params):
+        if site.out_dtypes[i] in _SUB_FP32 and name in summary.uncast_stores:
+            lines = summary.uncast_stores[name]
+            out.append(KernelViolation(
+                "missing-store-cast", site.name, f"out[{i}]({name})",
+                detail=f"store to {site.out_dtypes[i]} output without "
+                       f".astype({name}.dtype) at line(s) {lines}"))
+
+
+def _check_dead_params(
+    site: CallSite, summary: KernelSummary, out: List[KernelViolation]
+) -> None:
+    if not summary.parsed:
+        return
+    ref_params = summary.in_params + summary.out_params + summary.scratch_params
+    for name in ref_params + summary.config_params:
+        uses = summary.uses.get(name, 0)
+        # ref params are used via subscripts, which count as Name loads too
+        if name in ref_params and (
+                name in summary.reads or name in summary.writes):
+            continue
+        if uses == 0:
+            out.append(KernelViolation(
+                "dead-param", site.name, name,
+                detail="kernel parameter is never used"))
+        elif summary.zero_uses.get(name, 0) >= uses:
+            out.append(KernelViolation(
+                "dead-param", site.name, name,
+                detail="every use is multiplied by a literal 0 — the "
+                       "parameter has no effect"))
+
+
+def _dtype_bytes(name: str) -> int:
+    return np.dtype(name).itemsize
+
+
+def _check_vmem(
+    site: CallSite, vmem_budget: Optional[int], out: List[KernelViolation]
+) -> None:
+    if vmem_budget is None:
+        return
+    # Pallas double-buffers pipelined in/out blocks; scratch is single
+    block_bytes = 0
+    for blocks, dtypes in ((site.in_blocks, site.in_dtypes),
+                           (site.out_blocks, site.out_dtypes)):
+        for blk, dt in zip(blocks, dtypes):
+            b = _dtype_bytes(dt)
+            for s in blk.sizes:
+                b *= s
+            block_bytes += b
+    scratch_bytes = 0
+    for shape, dt in zip(site.scratch_shapes, site.scratch_dtypes):
+        b = _dtype_bytes(dt)
+        for s in shape:
+            b *= s
+        scratch_bytes += b
+    est = 2 * block_bytes + scratch_bytes
+    if est > vmem_budget:
+        out.append(KernelViolation(
+            "vmem-budget", site.name,
+            detail=f"estimated VMEM working set {est} B (2×{block_bytes} B "
+                   f"double-buffered blocks + {scratch_bytes} B scratch) "
+                   f"exceeds budget {vmem_budget} B"))
+
+
+# ------------------------------------------------------------- entry points
+
+
+def analyze_call_site(
+    site: CallSite,
+    *,
+    summary: Optional[KernelSummary] = None,
+    vmem_budget: Optional[int] = DEFAULT_VMEM_BUDGET,
+) -> KernelReport:
+    """Run every rule over one captured call site.
+
+    ``summary`` overrides the AST extraction (the mutation corpus corrupts
+    summaries directly, e.g. to model a dropped reset); by default it is
+    derived from ``site.kernel``.
+    """
+    out: List[KernelViolation] = []
+    if not _check_grid(site, out):
+        return KernelReport(site.name, site.grid, 0, tuple(out))
+    programs = list(itertools.product(*(range(g) for g in site.grid)))
+    offsets = _check_bounds(site, programs, out)
+    _check_output_coverage(site, programs, offsets, out)
+    _check_aliases(site, programs, out)
+    if summary is None and site.kernel is not None:
+        summary = summarize_kernel(
+            site.kernel, len(site.in_blocks), len(site.out_blocks),
+            len(site.scratch_shapes),
+        )
+    if summary is not None:
+        _check_scratch_carry(site, summary, out)
+        _check_precision(site, summary, out)
+        _check_dead_params(site, summary, out)
+    _check_vmem(site, vmem_budget, out)
+    return KernelReport(site.name, site.grid, len(programs), tuple(out))
+
+
+def analyze_callable(
+    fn: Callable, *args: Any,
+    vmem_budget: Optional[int] = DEFAULT_VMEM_BUDGET,
+    **kwargs: Any,
+) -> List[KernelReport]:
+    """Capture ``fn(*args, **kwargs)`` and analyze every reached call site."""
+    sites = capture_call_sites(fn, *args, **kwargs)
+    return [analyze_call_site(s, vmem_budget=vmem_budget) for s in sites]
+
+
+def assert_kernel_clean(fn: Callable, *args: Any, **kwargs: Any) -> List[KernelReport]:
+    """Analyze and raise :class:`KernelLintError` on any violation."""
+    reports = analyze_callable(fn, *args, **kwargs)
+    bad = [r for r in reports if not r.ok]
+    if bad:
+        raise KernelLintError(bad)
+    return reports
+
+
+# ------------------------------------------- PCCL_VERIFY entry-point gating
+
+_VERIFY_LOCK = threading.Lock()
+_VERIFIED: "Dict[Any, bool]" = {}  # signature → clean (bounded)
+_VERIFIED_MAX = 256
+
+
+def _signature(label: str, args: Sequence[Any], kwargs: Dict[str, Any]) -> Any:
+    shapes = tuple(
+        (tuple(a.shape), str(a.dtype)) if hasattr(a, "shape") else repr(a)
+        for a in args
+    )
+    statics = tuple(sorted((k, repr(v)) for k, v in kwargs.items()))
+    return (label, shapes, statics)
+
+
+def verify_entry_point(
+    label: str, fn: Callable, args: Sequence[Any],
+    kwargs: Optional[Dict[str, Any]] = None,
+) -> None:
+    """``PCCL_VERIFY=1`` hook for the ``kernels/*/ops.py`` dispatchers.
+
+    Captures and analyzes the wrapper once per (label, shape/dtype
+    signature, static kwargs) — repeats are an O(1) cache hit under the
+    lock — and raises :class:`KernelLintError` on any violation, *before*
+    the real ``pallas_call`` runs.  Tracer arguments are fine: only shapes
+    and dtypes are read.
+    """
+    kwargs = dict(kwargs or {})
+    key = _signature(label, args, kwargs)
+    with _VERIFY_LOCK:
+        if key in _VERIFIED:
+            return
+    reports = analyze_callable(fn, *args, **kwargs)
+    bad = [r for r in reports if not r.ok]
+    if bad:
+        raise KernelLintError(bad)
+    with _VERIFY_LOCK:
+        if len(_VERIFIED) >= _VERIFIED_MAX:
+            _VERIFIED.clear()
+        _VERIFIED[key] = True
+
+
+def clear_verified_cache() -> None:
+    """Drop the entry-point verification memo (tests)."""
+    with _VERIFY_LOCK:
+        _VERIFIED.clear()
+
+
+# ------------------------------------------------------- shipped kernel zoo
+
+
+def shipped_kernel_cases() -> List[Tuple[str, Callable, Tuple[Any, ...], Dict[str, Any]]]:
+    """(label, wrapper, abstract args, kwargs) for every shipped Pallas
+    kernel, at shapes that exercise the interesting paths: GQA head
+    mapping + causal streaming (flash), row *and* lane padding (rmsnorm),
+    the chunk-carried scratch + sequence padding (ssd)."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels.flash.kernel import flash_attention_pallas
+    from ..kernels.rmsnorm.kernel import rmsnorm_pallas
+    from ..kernels.ssd.kernel import ssd_pallas
+
+    def sds(shape, dtype=jnp.float32):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    cases: List[Tuple[str, Callable, Tuple[Any, ...], Dict[str, Any]]] = []
+    # flash: GQA 2:1, bf16 (exercises the precision rules), causal
+    cases.append((
+        "flash causal gqa",
+        flash_attention_pallas,
+        (sds((2, 256, 4, 32), jnp.bfloat16), sds((2, 256, 2, 32), jnp.bfloat16),
+         sds((2, 256, 2, 32), jnp.bfloat16)),
+        dict(causal=True, block_q=128, block_k=128),
+    ))
+    cases.append((
+        "flash non-causal",
+        flash_attention_pallas,
+        (sds((1, 256, 2, 64)), sds((1, 256, 2, 64)), sds((1, 256, 2, 64))),
+        dict(causal=False, block_q=64, block_k=128),
+    ))
+    # rmsnorm: row padding (300 → 512) AND lane padding (100 → 128)
+    cases.append((
+        "rmsnorm padded rows+lanes",
+        rmsnorm_pallas,
+        (sds((300, 100), jnp.bfloat16), sds((100,))),
+        dict(block_rows=256),
+    ))
+    cases.append((
+        "rmsnorm aligned",
+        rmsnorm_pallas,
+        (sds((512, 128)), sds((128,))),
+        dict(block_rows=128),
+    ))
+    # ssd: carried state scratch; S=80 pads to 96 with chunk 32
+    cases.append((
+        "ssd carried state",
+        ssd_pallas,
+        (sds((1, 80, 2, 16), jnp.bfloat16), sds((1, 80, 2)),
+         sds((1, 80, 2, 8), jnp.bfloat16), sds((1, 80, 2, 8), jnp.bfloat16)),
+        dict(chunk=32),
+    ))
+    return cases
+
+
+def run_shipped(verbose: bool = True) -> int:
+    """Analyze every shipped kernel case; print one line per case.
+
+    The CI ``verify`` stage runs this as ``python -m repro.analysis
+    --kernels``; returns the number of failing cases.
+    """
+    failures = 0
+    for label, fn, args, kwargs in shipped_kernel_cases():
+        try:
+            reports = analyze_callable(fn, *args, **kwargs)
+        except CaptureError as e:
+            print(f"[kernels] {label}: CAPTURE FAILED: {e}")
+            failures += 1
+            continue
+        bad = [r for r in reports if not r.ok]
+        if bad:
+            failures += 1
+            if verbose:
+                for r in bad:
+                    print(f"[kernels] {label}: {r}")
+        elif verbose:
+            checked = sum(r.programs_checked for r in reports)
+            print(f"[kernels] {label}: clean "
+                  f"({len(reports)} call site(s), {checked} programs)")
+    return failures

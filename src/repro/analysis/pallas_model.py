@@ -1,0 +1,328 @@
+"""Abstract model of ``pl.pallas_call`` sites — the kernel-side analogue of
+the schedule verifier's chunk lattice.
+
+A Pallas TPU kernel is, statically, a *grid* of programs plus one
+``BlockSpec`` per operand: the index map sends a program id tuple to block
+coordinates, the block shape scales those to an element-space footprint.
+Everything the kernel lint proves (coverage, write-race freedom, bounds,
+scratch-carry discipline — see :mod:`repro.analysis.kernel_lint`) is a
+property of these footprints, so this module extracts them **without any
+device execution**:
+
+* :func:`capture_call_sites` runs a kernel *wrapper* (e.g.
+  ``flash_attention_pallas``) under :func:`jax.eval_shape` with
+  ``pl.pallas_call`` temporarily replaced by a recorder — the wrapper's own
+  reshapes/pads/transposes trace abstractly, the recorder stores the grid,
+  specs, operand/out shapes and returns zeros of ``out_shape``, and nothing
+  is compiled or executed.
+* :class:`BlockModel.footprint` evaluates one index map at one enumerated
+  program id and returns the element-space :class:`Box` (``None`` block
+  dims are squeezed: size 1, offset = the raw coordinate; sized dims scale
+  the block coordinate by the block extent — Pallas semantics).
+
+JAX is imported lazily (only :func:`capture_call_sites` needs it), so
+importing this module from jax-free analysis contexts stays cheap.  The
+recorder patches the public ``jax.experimental.pallas.pallas_call``
+attribute, which covers every call site written as ``pl.pallas_call(...)``
+against a ``from jax.experimental import pallas as pl`` import — the only
+idiom in this tree (enforced by the shipped-kernel registry in
+``kernel_lint``).  Capture is serialized under a module lock because the
+patch is process-global.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, replace
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "BlockModel",
+    "Box",
+    "CallSite",
+    "CaptureError",
+    "capture_call_sites",
+    "whole_array_box",
+]
+
+
+class CaptureError(RuntimeError):
+    """A wrapper could not be captured (no pallas_call reached, bad specs)."""
+
+
+# ----------------------------------------------------------------- geometry
+
+
+@dataclass(frozen=True)
+class Box:
+    """An axis-aligned element-space footprint: ``[offset, offset+size)``."""
+
+    offset: Tuple[int, ...]
+    size: Tuple[int, ...]
+
+    def __post_init__(self) -> None:
+        if len(self.offset) != len(self.size):
+            raise ValueError(f"rank mismatch: {self.offset} vs {self.size}")
+
+    @property
+    def volume(self) -> int:
+        v = 1
+        for s in self.size:
+            v *= s
+        return v
+
+    @property
+    def end(self) -> Tuple[int, ...]:
+        return tuple(o + s for o, s in zip(self.offset, self.size))
+
+    def within(self, shape: Sequence[int]) -> bool:
+        """True when the whole box lies inside ``[0, shape)``."""
+        return len(shape) == len(self.offset) and all(
+            0 <= o and o + s <= d for o, s, d in zip(self.offset, self.size, shape)
+        )
+
+    def overlaps(self, other: "Box") -> bool:
+        return all(
+            o1 < o2 + s2 and o2 < o1 + s1
+            for o1, s1, o2, s2 in zip(self.offset, self.size, other.offset, other.size)
+        )
+
+
+def whole_array_box(shape: Sequence[int]) -> Box:
+    return Box((0,) * len(shape), tuple(int(d) for d in shape))
+
+
+# -------------------------------------------------------------- block model
+
+
+@dataclass(frozen=True)
+class BlockModel:
+    """One operand's ``BlockSpec`` as captured: shape with ``None`` dims
+    preserved, plus the raw index map (program ids → block coordinates)."""
+
+    block_shape: Tuple[Optional[int], ...]
+    index_map: Callable[..., Tuple[int, ...]]
+
+    @property
+    def sizes(self) -> Tuple[int, ...]:
+        """Element-space extent per dim (``None`` squeezed dims are 1)."""
+        return tuple(1 if b is None else int(b) for b in self.block_shape)
+
+    def coords(self, program: Sequence[int]) -> Tuple[int, ...]:
+        out = self.index_map(*program)
+        if not isinstance(out, tuple):
+            out = (out,)
+        if len(out) != len(self.block_shape):
+            raise CaptureError(
+                f"index map returned {len(out)} coords for a "
+                f"{len(self.block_shape)}-dim block {self.block_shape}"
+            )
+        return tuple(int(c) for c in out)
+
+    def footprint(self, program: Sequence[int]) -> Box:
+        """Element-space box this program touches through this spec.
+
+        ``None`` block dims index by element (size-1 slice, then squeezed);
+        sized dims index by block, so the offset is ``coord * block_dim``.
+        """
+        coords = self.coords(program)
+        offset = tuple(
+            c if b is None else c * int(b)
+            for c, b in zip(coords, self.block_shape)
+        )
+        return Box(offset, self.sizes)
+
+
+# ---------------------------------------------------------------- call site
+
+
+@dataclass(frozen=True)
+class CallSite:
+    """One captured ``pl.pallas_call``: everything the lint needs, nothing
+    device-side.  Dtypes are numpy dtype *names* so jax-free consumers can
+    compare them without importing JAX."""
+
+    name: str
+    grid: Tuple[int, ...]
+    in_blocks: Tuple[BlockModel, ...]
+    in_shapes: Tuple[Tuple[int, ...], ...]
+    in_dtypes: Tuple[str, ...]
+    out_blocks: Tuple[BlockModel, ...]
+    out_shapes: Tuple[Tuple[int, ...], ...]
+    out_dtypes: Tuple[str, ...]
+    scratch_shapes: Tuple[Tuple[int, ...], ...] = ()
+    scratch_dtypes: Tuple[str, ...] = ()
+    kernel: Optional[Callable] = None  # as passed (possibly functools.partial)
+    input_output_aliases: Tuple[Tuple[int, int], ...] = ()
+    dimension_semantics: Optional[Tuple[str, ...]] = None
+
+    @property
+    def num_programs(self) -> int:
+        n = 1
+        for g in self.grid:
+            n *= g
+        return n
+
+    def with_in_block(self, i: int, block: BlockModel) -> "CallSite":
+        blocks = list(self.in_blocks)
+        blocks[i] = block
+        return replace(self, in_blocks=tuple(blocks))
+
+    def with_out_block(self, i: int, block: BlockModel) -> "CallSite":
+        blocks = list(self.out_blocks)
+        blocks[i] = block
+        return replace(self, out_blocks=tuple(blocks))
+
+
+def _dtype_name(dt: Any) -> str:
+    return np.dtype(dt).name
+
+
+def _as_seq(x: Any) -> List[Any]:
+    return list(x) if isinstance(x, (list, tuple)) else [x]
+
+
+def _block_of(spec: Any, operand_shape: Tuple[int, ...]) -> BlockModel:
+    """Normalize a captured ``pl.BlockSpec`` into a :class:`BlockModel`.
+
+    A spec with no block shape means "whole array, one block" (the
+    memory-space-only form); a missing index map defaults to block 0.
+    """
+    shape = getattr(spec, "block_shape", None)
+    imap = getattr(spec, "index_map", None)
+    if shape is None:
+        shape = tuple(int(d) for d in operand_shape)
+    else:
+        shape = tuple(None if b is None else int(b) for b in shape)
+    if imap is None:
+        ndim = len(shape)
+
+        def imap(*_ids, _ndim=ndim):
+            return (0,) * _ndim
+
+    return BlockModel(block_shape=shape, index_map=imap)
+
+
+def _normalize_grid(grid: Any) -> Tuple[int, ...]:
+    if grid is None:
+        return ()
+    if isinstance(grid, int):
+        return (int(grid),)
+    return tuple(int(g) for g in grid)
+
+
+def _dimension_semantics(kw: dict) -> Optional[Tuple[str, ...]]:
+    """Pull ``dimension_semantics`` out of ``compiler_params`` when present
+    (both the dict form and the TPUCompilerParams object form)."""
+    cp = kw.get("compiler_params")
+    if cp is None:
+        return None
+    if isinstance(cp, dict):
+        for v in cp.values():
+            if isinstance(v, dict) and "dimension_semantics" in v:
+                ds = v["dimension_semantics"]
+                return tuple(str(s) for s in ds) if ds is not None else None
+        ds = cp.get("dimension_semantics")
+        return tuple(str(s) for s in ds) if ds is not None else None
+    ds = getattr(cp, "dimension_semantics", None)
+    return tuple(str(s) for s in ds) if ds is not None else None
+
+
+# ------------------------------------------------------------------ capture
+
+_CAPTURE_LOCK = threading.Lock()  # the pallas_call patch is process-global
+
+
+def _abstract(x: Any) -> Any:
+    import jax
+
+    if hasattr(x, "shape") and hasattr(x, "dtype"):
+        return jax.ShapeDtypeStruct(tuple(x.shape), x.dtype)
+    return x
+
+
+def capture_call_sites(fn: Callable, *args: Any, **kwargs: Any) -> List[CallSite]:
+    """Trace ``fn(*args, **kwargs)`` abstractly and record every
+    ``pl.pallas_call`` it reaches.
+
+    ``args`` may be concrete arrays or ``ShapeDtypeStruct``s — only shapes
+    and dtypes are used.  Returns the call sites in execution order; raises
+    :class:`CaptureError` if none is reached (a wrapper that silently takes
+    a non-Pallas path must not "pass" the kernel lint vacuously).
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pallas_mod
+
+    sites: List[CallSite] = []
+
+    def fake_pallas_call(kernel, *pargs, **kw):
+        out_shape = kw.get("out_shape", pargs[0] if pargs else None)
+        if out_shape is None:
+            raise CaptureError("pallas_call without out_shape")
+        grid = kw.get("grid")
+        if grid is None and kw.get("grid_spec") is not None:
+            gs = kw["grid_spec"]
+            grid = getattr(gs, "grid", None)
+            kw = dict(kw, in_specs=getattr(gs, "in_specs", kw.get("in_specs")),
+                      out_specs=getattr(gs, "out_specs", kw.get("out_specs")))
+        grid_t = _normalize_grid(grid)
+        out_leaves = _as_seq(out_shape)
+        out_specs = _as_seq(kw.get("out_specs", [None] * len(out_leaves)))
+        scratch = _as_seq(kw.get("scratch_shapes", ()) or ())
+        aliases = kw.get("input_output_aliases") or {}
+        alias_t = tuple(sorted((int(i), int(o)) for i, o in dict(aliases).items()))
+        kname = getattr(getattr(kernel, "func", kernel), "__name__", str(kernel))
+
+        def runner(*operands):
+            in_specs = _as_seq(kw.get("in_specs", [None] * len(operands)))
+            if len(in_specs) != len(operands):
+                raise CaptureError(
+                    f"{kname}: {len(operands)} operands but "
+                    f"{len(in_specs)} in_specs"
+                )
+            in_shapes = tuple(tuple(int(d) for d in o.shape) for o in operands)
+            site = CallSite(
+                name=kname,
+                grid=grid_t,
+                in_blocks=tuple(
+                    _block_of(s, shp) for s, shp in zip(in_specs, in_shapes)
+                ),
+                in_shapes=in_shapes,
+                in_dtypes=tuple(_dtype_name(o.dtype) for o in operands),
+                out_blocks=tuple(
+                    _block_of(s, tuple(l.shape))
+                    for s, l in zip(out_specs, out_leaves)
+                ),
+                out_shapes=tuple(tuple(int(d) for d in l.shape) for l in out_leaves),
+                out_dtypes=tuple(_dtype_name(l.dtype) for l in out_leaves),
+                scratch_shapes=tuple(
+                    tuple(int(d) for d in s.shape) for s in scratch
+                ),
+                scratch_dtypes=tuple(_dtype_name(s.dtype) for s in scratch),
+                kernel=kernel,
+                input_output_aliases=alias_t,
+                dimension_semantics=_dimension_semantics(kw),
+            )
+            sites.append(site)
+            outs = [jnp.zeros(l.shape, l.dtype) for l in out_leaves]
+            return outs[0] if not isinstance(out_shape, (list, tuple)) else outs
+
+        return runner
+
+    abstract_args = tuple(_abstract(a) for a in args)
+    with _CAPTURE_LOCK:
+        real = pallas_mod.pallas_call
+        pallas_mod.pallas_call = fake_pallas_call
+        try:
+            jax.eval_shape(lambda *a: fn(*a, **kwargs), *abstract_args)
+        finally:
+            pallas_mod.pallas_call = real
+    if not sites:
+        raise CaptureError(
+            f"{getattr(fn, '__name__', fn)}: no pallas_call reached during "
+            "capture (wrapper took a non-Pallas path?)"
+        )
+    return sites

@@ -243,7 +243,7 @@ def _run_eager(comm, collective, x):
     )
     fn = exec_engine.EXECUTABLES.get(key)
     if fn is None:
-        fn = _build_executable(comm, collective, sched, x.ndim)
+        fn = _build_executable(comm, collective, sched, tuple(x.shape))
         exec_engine.EXECUTABLES.put(key, fn)
     return fn(x)
 
@@ -276,13 +276,17 @@ class _ExecView:
         return self._table_dev
 
 
-def _build_executable(comm, collective, sched, ndim: int):
+def _build_executable(comm, collective, sched, global_shape):
     """jit(shard_map(...)) over the resolved schedule; donates when the
-    output can alias the input (global shape and dtype preserved)."""
+    output buffer can alias the input, decided structurally by
+    ``exec_engine.donation_compatible`` (whole-array footprints must
+    coincide — the same Box model the kernel lint applies to
+    ``input_output_aliases``; no tracing, so 0-retrace guarantees hold)."""
     import jax
     from jax.sharding import PartitionSpec as P
 
     from repro import compat
+    from repro.comm import exec_engine
 
     backend = comm.backend  # stateless InterpBackend
     view = _ExecView(comm)
@@ -294,11 +298,13 @@ def _build_executable(comm, collective, sched, ndim: int):
     mesh = compat.make_mesh(
         (view.axis_size,), (axis,), devices=jax.devices()[: view.axis_size]
     )
-    spec = P(axis, *([None] * (ndim - 1)))
+    spec = P(axis, *([None] * (len(global_shape) - 1)))
     fun = compat.shard_map(
         inner, mesh=mesh, in_specs=spec, out_specs=spec, check_vma=False
     )
-    donate = (0,) if collective in ("all_reduce", "all_to_all") else ()
+    donate = (
+        (0,) if exec_engine.donation_compatible(collective, global_shape) else ()
+    )
     return jax.jit(fun, donate_argnums=donate)
 
 

@@ -57,7 +57,9 @@ __all__ = [
     "clear_exec_caches",
     "compile_all_to_all",
     "compile_schedule",
+    "donation_compatible",
     "exec_stats",
+    "expected_eager_result_shape",
     "execute_all_to_all_compact",
     "execute_compiled",
     "note_trace",
@@ -313,6 +315,57 @@ def _compile_all_to_all(
         groups=_fold_groups(tables),
         final_slots=_freeze(final_slots),
     )
+
+
+# ----------------------------------------------------- donation aliasing
+
+
+def expected_eager_result_shape(
+    collective: str, global_shape: Tuple[int, ...]
+) -> Tuple[int, ...]:
+    """Result shape of the eager path for a ``(axis_size, *local)`` operand.
+
+    Purely structural — no tracing (the eager path's 0-retrace guarantee
+    must survive the check).  Row ``r`` of the result is rank ``r``'s local
+    output, so the leading axis is preserved and only the first local dim
+    scales: reduce-scatter splits it ``n`` ways, all-gather concatenates
+    ``n`` shards, all-reduce and all-to-all preserve it.
+    """
+    global_shape = tuple(int(d) for d in global_shape)
+    n = global_shape[0]
+    if collective in ("all_reduce", "all_to_all"):
+        return global_shape
+    if collective == "reduce_scatter":
+        if len(global_shape) < 2 or n <= 0 or global_shape[1] % n:
+            raise ScheduleExecutionError(
+                f"reduce_scatter: local leading dim of {global_shape} not "
+                f"divisible by axis size {n}"
+            )
+        return (n, global_shape[1] // n) + global_shape[2:]
+    if collective == "all_gather":
+        if len(global_shape) < 2:
+            raise ScheduleExecutionError(
+                f"all_gather: operand {global_shape} has no local dims"
+            )
+        return (n, global_shape[1] * n) + global_shape[2:]
+    raise ScheduleExecutionError(f"unknown collective {collective!r}")
+
+
+def donation_compatible(collective: str, global_shape: Tuple[int, ...]) -> bool:
+    """May the eager executable donate operand 0 to XLA?
+
+    Donation aliases the result buffer onto the input buffer, which is
+    only sound when their whole-array footprints coincide — the same
+    :class:`~repro.analysis.pallas_model.Box` model the kernel lint uses
+    for ``input_output_aliases``, applied at the executable boundary.
+    """
+    from repro.analysis.pallas_model import whole_array_box  # lazy: no cycle
+
+    try:
+        out_shape = expected_eager_result_shape(collective, global_shape)
+    except ScheduleExecutionError:
+        return False
+    return whole_array_box(tuple(global_shape)) == whole_array_box(out_shape)
 
 
 # --------------------------------------------------------------- execution

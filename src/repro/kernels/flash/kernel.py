@@ -38,7 +38,6 @@ def _flash_fwd_kernel(
     block_k: int,
     causal: bool,
     sm_scale: float,
-    q_offset_blocks: int,
 ):
     block_q, d = q_ref.shape
     T = k_ref.shape[0]
@@ -46,7 +45,6 @@ def _flash_fwd_kernel(
 
     q = q_ref[...].astype(jnp.float32) * sm_scale
     q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
-    q_pos = q_pos + q_offset_blocks * block_q * 0  # offset folded in caller
 
     m = jnp.full((block_q, 1), NEG_INF, jnp.float32)
     l = jnp.zeros((block_q, 1), jnp.float32)
@@ -108,7 +106,6 @@ def flash_attention_pallas(
         block_k=block_k,
         causal=causal,
         sm_scale=1.0 / math.sqrt(D),
-        q_offset_blocks=0,
     )
 
     def kv_index(h, i):

@@ -2,6 +2,7 @@
 
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import jax
@@ -24,6 +25,13 @@ def flash_attention(
         return attention_reference(q, k, v, causal=causal)
     from .kernel import flash_attention_pallas
 
+    if os.environ.get("PCCL_VERIFY", "0") not in ("", "0"):
+        from ...analysis.kernel_lint import verify_entry_point
+
+        verify_entry_point(
+            "flash_attention", flash_attention_pallas, (q, k, v),
+            dict(causal=causal, block_q=block_q, block_k=block_k),
+        )
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     return flash_attention_pallas(

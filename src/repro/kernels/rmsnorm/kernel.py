@@ -4,6 +4,14 @@ Grid over row blocks of the flattened (rows, d) input; each program loads a
 (block_rows, d) tile into VMEM, reduces in fp32, scales by the (d,)-broadcast
 weight, and writes the tile back — one HBM round-trip instead of the three
 (square-reduce / rsqrt-mul / weight-mul) an unfused lowering can incur.
+
+Both axes are padded to legal tile shapes: rows up to a multiple of
+``block_rows``, and the feature axis up to a multiple of the 128-lane VPU
+width.  The lane padding is zeros, which contribute exactly 0.0 to the
+square-sum, so dividing by the *true* ``d`` (not the padded width) keeps the
+numerics bit-identical to the unpadded mean.  Degenerate inputs
+(``rows == 0`` or ``d == 0``) raise ``ValueError`` instead of building an
+empty grid.
 """
 
 from __future__ import annotations
@@ -14,11 +22,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+LANE = 128  # TPU VPU lane width: the last tile dim must be a multiple
 
-def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
-    x = x_ref[...].astype(jnp.float32)               # (rows, d)
-    w = w_ref[...].astype(jnp.float32)               # (1, d)
-    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float, d: int):
+    x = x_ref[...].astype(jnp.float32)               # (rows, d_padded)
+    w = w_ref[...].astype(jnp.float32)               # (1, d_padded)
+    # zero lane-padding adds 0.0 to the sum; dividing by the true d gives
+    # exactly the mean over the real features
+    var = jnp.sum(jnp.square(x), axis=-1, keepdims=True) / d
     o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w).astype(o_ref.dtype)
 
 
@@ -32,24 +44,41 @@ def rmsnorm_pallas(
 ) -> jax.Array:
     orig_shape = x.shape
     d = x.shape[-1]
+    if d == 0:
+        raise ValueError(f"rmsnorm_pallas: feature dim is 0 (shape {orig_shape})")
     rows = x.size // d
+    if rows == 0:
+        raise ValueError(
+            f"rmsnorm_pallas: input has no rows (shape {orig_shape}); "
+            "an empty batch would build an empty Pallas grid"
+        )
+    if w.size != d:
+        raise ValueError(
+            f"rmsnorm_pallas: weight size {w.size} != feature dim {d}"
+        )
     xf = x.reshape(rows, d)
+    wf = w.reshape(1, d)
+    lane_pad = (-d) % LANE
+    if lane_pad:
+        xf = jnp.pad(xf, ((0, 0), (0, lane_pad)))
+        wf = jnp.pad(wf, ((0, 0), (0, lane_pad)))
+    dp = d + lane_pad
     block_rows = min(block_rows, rows)
-    pad = (-rows) % block_rows
-    if pad:
-        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    row_pad = (-rows) % block_rows
+    if row_pad:
+        xf = jnp.pad(xf, ((0, row_pad), (0, 0)))
     grid = (xf.shape[0] // block_rows,)
     out = pl.pallas_call(
-        functools.partial(_rmsnorm_kernel, eps=eps),
+        functools.partial(_rmsnorm_kernel, eps=eps, d=d),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
-            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, dp), lambda i: (i, 0)),
+            pl.BlockSpec((1, dp), lambda i: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((block_rows, d), lambda i: (i, 0)),
+        out_specs=pl.BlockSpec((block_rows, dp), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(xf.shape, x.dtype),
         interpret=interpret,
-    )(xf, w.reshape(1, d))
-    if pad:
-        out = out[:rows]
+    )(xf, wf)
+    if row_pad or lane_pad:
+        out = out[:rows, :d]
     return out.reshape(orig_shape)

@@ -2,6 +2,7 @@
 
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import jax
@@ -21,6 +22,10 @@ def rmsnorm(
         return rmsnorm_reference(x, w, eps=eps)
     from .kernel import rmsnorm_pallas
 
+    if os.environ.get("PCCL_VERIFY", "0") not in ("", "0"):
+        from ...analysis.kernel_lint import verify_entry_point
+
+        verify_entry_point("rmsnorm", rmsnorm_pallas, (x, w), dict(eps=eps))
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     return rmsnorm_pallas(x, w, eps=eps, interpret=interpret)

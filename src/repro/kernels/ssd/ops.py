@@ -7,6 +7,7 @@ reference (`ref.py`) — identical math, XLA-fused.
 
 from __future__ import annotations
 
+import os
 from typing import Optional, Tuple
 
 import jax
@@ -28,6 +29,13 @@ def ssd(
     if use_pallas:
         from .kernel import ssd_pallas
 
+        if os.environ.get("PCCL_VERIFY", "0") not in ("", "0"):
+            from ...analysis.kernel_lint import verify_entry_point
+
+            verify_entry_point(
+                "ssd", ssd_pallas, (X, la, Bm, Cm),
+                dict(chunk=chunk, initial_state=initial_state),
+            )
         if interpret is None:
             interpret = jax.default_backend() == "cpu"
         return ssd_pallas(

@@ -1,0 +1,729 @@
+"""Kernel static analyzer tests.
+
+Three layers, mirroring ``tests/test_verify_mutations.py``'s structure for
+the schedule verifier:
+
+1. **clean passes** — every shipped Pallas kernel case analyzes clean;
+2. **rule-by-rule** — each violation kind is triggered by a minimal
+   synthetic ``pallas_call`` (defined at module level so the AST rules can
+   read their source), including a regression for the flash kernel's
+   pre-fix dead ``q_offset_blocks`` parameter;
+3. **seeded mutation corpus** — corrupted index maps, off-by-one grids,
+   swapped block dims and dropped scratch resets applied to the *real*
+   captured kernels, with an explicit survivor triage.
+
+Survivor triage
+---------------
+The analyzer proves structural safety: bounds, exact output coverage,
+race freedom, carry discipline.  It does **not** model kernel arithmetic,
+so a mutated *input* index map whose footprints stay in bounds reads the
+wrong (but valid) data — invisible to spec-level analysis, numerically
+visible to the interpret-mode parity tests in ``tests/test_kernels.py``.
+Those in-bounds input-read mutants are the only allowed survivor class;
+anything else surviving is an analyzer hole and fails outright.
+"""
+
+import copy
+import itertools
+import random
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.analysis.kernel_lint import (
+    KINDS,
+    KernelLintError,
+    analyze_call_site,
+    analyze_callable,
+    clear_verified_cache,
+    shipped_kernel_cases,
+    summarize_kernel,
+    verify_entry_point,
+)
+from repro.analysis.pallas_model import (
+    BlockModel,
+    CaptureError,
+    capture_call_sites,
+)
+
+f32 = jnp.float32
+bf16 = jnp.bfloat16
+SDS = jax.ShapeDtypeStruct
+
+
+def _kinds(report):
+    return {v.kind for v in report.violations}
+
+
+# --------------------------------------------------------- 1. clean passes
+
+CASES = shipped_kernel_cases()
+
+
+@pytest.mark.parametrize("case", CASES, ids=[c[0] for c in CASES])
+def test_shipped_kernels_analyze_clean(case):
+    label, fn, args, kwargs = case
+    reports = analyze_callable(fn, *args, **kwargs)
+    assert reports, label
+    for r in reports:
+        assert r.ok, f"{label}: {r}"
+        assert r.programs_checked > 0
+
+
+def test_capture_requires_a_pallas_call():
+    """A wrapper that never reaches pallas_call must not pass vacuously."""
+    with pytest.raises(CaptureError):
+        capture_call_sites(lambda x: x + 1, SDS((8, 128), f32))
+
+
+# --------------------------------------------- 2. rule-by-rule synthetics
+#
+# Kernels live at module level so inspect.getsource works (the AST rules
+# skip exec-defined bodies by design).  Capture monkeypatches pallas_call,
+# so none of these ever execute — only grid/specs/source matter.
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _one_in(grid, in_map, out_map, shape=(128, 128), block=(32, 128),
+            dtype=f32, kernel=_copy_kernel, **kw):
+    def wrap(x):
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[pl.BlockSpec(block, in_map)],
+            out_specs=pl.BlockSpec(block, out_map),
+            out_shape=SDS(shape, dtype),
+            **kw,
+        )(x)
+
+    return wrap
+
+
+def test_coverage_gap_with_attribution():
+    wrap = _one_in((2,), lambda i: (i, 0), lambda i: (i, 0))
+    [r] = analyze_callable(wrap, SDS((128, 128), f32))
+    assert _kinds(r) == {"coverage-gap"}
+    [v] = r.violations
+    assert v.box == (2, 0)  # first never-written block coordinate
+    assert "2 of 4 blocks" in v.detail
+
+
+def test_coverage_gap_ragged_blocks():
+    wrap = _one_in((4,), lambda i: (i, 0), lambda i: (i, 0), shape=(100, 128))
+    [r] = analyze_callable(wrap, SDS((100, 128), f32))
+    assert "coverage-gap" in _kinds(r)  # 32 does not divide 100
+
+
+def test_write_race_two_programs_same_block():
+    wrap = _one_in((4,), lambda i: (i, 0), lambda i: (i % 2, 0))
+    [r] = analyze_callable(wrap, SDS((128, 128), f32))
+    assert "write-race" in _kinds(r)
+    race = [v for v in r.violations if v.kind == "write-race"]
+    assert race[0].program is not None and race[0].box is not None
+
+
+def test_write_race_parallel_axis_revisit():
+    """An output whose index map ignores a *parallel* grid axis is a race;
+    ignoring a sequential axis (ssd's fin) is a legal carry."""
+    wrap = _one_in(
+        (4,), lambda i: (i, 0), lambda i: (0, 0), shape=(32, 128),
+        compiler_params=dict(mosaic=dict(dimension_semantics=("parallel",))),
+    )
+    [r] = analyze_callable(wrap, SDS((128, 128), f32))
+    assert "write-race" in _kinds(r)
+
+    wrap = _one_in(
+        (4,), lambda i: (i, 0), lambda i: (0, 0), shape=(32, 128),
+        compiler_params=dict(mosaic=dict(dimension_semantics=("arbitrary",))),
+    )
+    [r] = analyze_callable(wrap, SDS((128, 128), f32))
+    assert "write-race" not in _kinds(r)
+
+
+def test_oob_write_and_read():
+    wrap = _one_in((4,), lambda i: (i, 0), lambda i: (i + 1, 0))
+    [r] = analyze_callable(wrap, SDS((128, 128), f32))
+    assert "oob-write" in _kinds(r)
+
+    wrap = _one_in((4,), lambda i: (i + 1, 0), lambda i: (i, 0))
+    [r] = analyze_callable(wrap, SDS((128, 128), f32))
+    assert "oob-read" in _kinds(r)
+
+
+def test_grid_empty_and_unenumerable():
+    wrap = _one_in((0,), lambda i: (i, 0), lambda i: (i, 0))
+    [r] = analyze_callable(wrap, SDS((128, 128), f32))
+    assert _kinds(r) == {"grid-empty"}
+
+    wrap = _one_in((1024, 1024), lambda i, j: (i, 0), lambda i, j: (i, 0))
+    [r] = analyze_callable(wrap, SDS((128, 128), f32))
+    assert _kinds(r) == {"grid-unenumerable"}  # explicit, never silent
+
+
+def _alias_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def test_alias_footprint_mismatch():
+    def wrap(x):
+        return pl.pallas_call(
+            _alias_kernel,
+            grid=(4,),
+            in_specs=[pl.BlockSpec((32, 128), lambda i: (3 - i, 0))],
+            out_specs=pl.BlockSpec((32, 128), lambda i: (i, 0)),
+            out_shape=SDS((128, 128), f32),
+            input_output_aliases={0: 0},
+        )(x)
+
+    [r] = analyze_callable(wrap, SDS((128, 128), f32))
+    assert "alias-mismatch" in _kinds(r)
+
+    def wrap_ok(x):
+        return pl.pallas_call(
+            _alias_kernel,
+            grid=(4,),
+            in_specs=[pl.BlockSpec((32, 128), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((32, 128), lambda i: (i, 0)),
+            out_shape=SDS((128, 128), f32),
+            input_output_aliases={0: 0},
+        )(x)
+
+    [r] = analyze_callable(wrap_ok, SDS((128, 128), f32))
+    assert r.ok, str(r)
+
+
+def _carry_no_reset(x_ref, o_ref, acc_ref):
+    acc_ref[...] = acc_ref[...] + x_ref[...]
+    o_ref[...] = acc_ref[...]
+
+
+def _carry_outer_reset(x_ref, o_ref, acc_ref):
+    hi = pl.program_id(0)
+
+    @pl.when(hi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] = acc_ref[...] + x_ref[...]
+    o_ref[...] = acc_ref[...]
+
+
+def _carry_inner_reset(x_ref, o_ref, acc_ref):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] = acc_ref[...] + x_ref[...]
+    o_ref[...] = acc_ref[...]
+
+
+def _carry_wrap(kernel, **kw):
+    def wrap(x):
+        return pl.pallas_call(
+            kernel,
+            grid=(2, 4),
+            in_specs=[pl.BlockSpec((None, 32, 128), lambda h, c: (h, c, 0))],
+            out_specs=pl.BlockSpec((None, 32, 128), lambda h, c: (h, c, 0)),
+            out_shape=SDS((2, 128, 128), f32),
+            scratch_shapes=[pltpu.VMEM((32, 128), f32)],
+            **kw,
+        )(x)
+
+    return wrap
+
+
+def test_scratch_no_reset():
+    [r] = analyze_callable(_carry_wrap(_carry_no_reset), SDS((2, 128, 128), f32))
+    assert _kinds(r) == {"scratch-no-reset"}
+
+
+def test_scratch_carry_axis_must_be_innermost():
+    [r] = analyze_callable(_carry_wrap(_carry_outer_reset), SDS((2, 128, 128), f32))
+    assert _kinds(r) == {"scratch-carry-axis"}
+    [r] = analyze_callable(_carry_wrap(_carry_inner_reset), SDS((2, 128, 128), f32))
+    assert r.ok, str(r)
+
+
+def test_scratch_carry_parallel_axis():
+    wrap = _carry_wrap(
+        _carry_inner_reset,
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("arbitrary", "parallel"))
+        ),
+    )
+    [r] = analyze_callable(wrap, SDS((2, 128, 128), f32))
+    assert "scratch-carry-parallel" in _kinds(r)
+
+
+def _uncast_store(x_ref, o_ref):
+    o_ref[...] = x_ref[...].astype(jnp.float32) * 2.0
+
+
+def _raw_bf16_read(x_ref, o_ref):
+    o_ref[...] = (x_ref[...] * 2.0).astype(o_ref.dtype)
+
+
+def _clean_bf16(x_ref, o_ref):
+    o_ref[...] = (x_ref[...].astype(jnp.float32) * 2.0).astype(o_ref.dtype)
+
+
+def test_precision_rules_fire_only_for_sub_fp32():
+    mk = lambda kernel, dtype: _one_in(
+        (4,), lambda i: (i, 0), lambda i: (i, 0), dtype=dtype, kernel=kernel
+    )
+    [r] = analyze_callable(mk(_uncast_store, bf16), SDS((128, 128), bf16))
+    assert _kinds(r) == {"missing-store-cast"}
+    [r] = analyze_callable(mk(_raw_bf16_read, bf16), SDS((128, 128), bf16))
+    assert _kinds(r) == {"low-precision-read"}
+    [r] = analyze_callable(mk(_clean_bf16, bf16), SDS((128, 128), bf16))
+    assert r.ok, str(r)
+    # the same bodies on fp32 operands are fine: no upcast/cast needed
+    [r] = analyze_callable(mk(_uncast_store, f32), SDS((128, 128), f32))
+    assert r.ok, str(r)
+    [r] = analyze_callable(mk(_raw_bf16_read, f32), SDS((128, 128), f32))
+    assert r.ok, str(r)
+
+
+def _prefix_flash(q_ref, o_ref, *, sm_scale, q_offset_blocks):
+    # the flash kernel's pre-fix shape: the offset is multiplied by a
+    # literal 0 ("folded in caller"), so the parameter does nothing
+    qi = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32) * sm_scale
+    q_pos = qi * 32 + q_offset_blocks * 32 * 0
+    o_ref[...] = (q + q_pos).astype(o_ref.dtype)
+
+
+def _unused_param(x_ref, o_ref, *, scale, unused):
+    o_ref[...] = x_ref[...] * scale
+
+
+def test_dead_param_regression_prefix_flash():
+    """The analyzer must flag the flash kernel's pre-fix dead
+    ``q_offset_blocks`` (multiply-by-zero) — the rule that motivated
+    deleting it."""
+    import functools
+
+    wrap = _one_in(
+        (4,), lambda i: (i, 0), lambda i: (i, 0),
+        kernel=functools.partial(_prefix_flash, sm_scale=1.0, q_offset_blocks=0),
+    )
+    [r] = analyze_callable(wrap, SDS((128, 128), f32))
+    dead = [v for v in r.violations if v.kind == "dead-param"]
+    assert len(dead) == 1 and dead[0].operand == "q_offset_blocks"
+    assert "literal 0" in dead[0].detail
+
+
+def test_dead_param_unused():
+    import functools
+
+    wrap = _one_in(
+        (4,), lambda i: (i, 0), lambda i: (i, 0),
+        kernel=functools.partial(_unused_param, scale=2.0, unused=7),
+    )
+    [r] = analyze_callable(wrap, SDS((128, 128), f32))
+    dead = [v for v in r.violations if v.kind == "dead-param"]
+    assert len(dead) == 1 and dead[0].operand == "unused"
+
+
+def test_current_flash_kernel_has_no_dead_params():
+    from repro.kernels.flash.kernel import flash_attention_pallas
+
+    sites = capture_call_sites(
+        flash_attention_pallas,
+        SDS((1, 256, 2, 32), f32), SDS((1, 256, 2, 32), f32),
+        SDS((1, 256, 2, 32), f32), causal=True,
+    )
+    summ = summarize_kernel(sites[0].kernel, 3, 1, 0)
+    assert summ.parsed
+    r = analyze_call_site(sites[0])
+    assert not any(v.kind == "dead-param" for v in r.violations), str(r)
+
+
+def test_vmem_budget():
+    wrap = _one_in((4,), lambda i: (i, 0), lambda i: (i, 0))
+    [site] = capture_call_sites(wrap, SDS((128, 128), f32))
+    r = analyze_call_site(site, vmem_budget=1024)
+    assert "vmem-budget" in _kinds(r)
+    assert analyze_call_site(site).ok  # default 16 MiB budget is fine
+
+
+def test_violation_kinds_are_stable():
+    """Every kind the synthetics produce is declared in KINDS (docs/tests
+    key on these strings)."""
+    assert len(KINDS) == len(set(KINDS))
+    for k in ("coverage-gap", "write-race", "oob-read", "oob-write",
+              "scratch-no-reset", "dead-param", "missing-store-cast"):
+        assert k in KINDS
+
+
+# ------------------------------------------------ PCCL_VERIFY entry points
+
+
+def test_verify_entry_point_gate():
+    clear_verified_cache()
+    ok = _one_in((4,), lambda i: (i, 0), lambda i: (i, 0))
+    bad = _one_in((2,), lambda i: (i, 0), lambda i: (i, 0))  # coverage gap
+
+    verify_entry_point("lint-ok", ok, (SDS((128, 128), f32),))
+    verify_entry_point("lint-ok", ok, (SDS((128, 128), f32),))  # memo hit
+    with pytest.raises(KernelLintError) as ei:
+        verify_entry_point("lint-bad", bad, (SDS((128, 128), f32),))
+    assert "coverage-gap" in str(ei.value)
+    clear_verified_cache()
+
+
+def test_ops_dispatch_verifies_under_env(monkeypatch):
+    """PCCL_VERIFY=1 runs the analyzer at the ops entry point, then the
+    kernel itself — clean kernels pass through unchanged."""
+    import numpy as np
+
+    from repro.kernels.rmsnorm.ops import rmsnorm
+    from repro.kernels.rmsnorm.ref import rmsnorm_reference
+
+    clear_verified_cache()
+    monkeypatch.setenv("PCCL_VERIFY", "1")
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 64)), f32)
+    w = jnp.asarray(rng.normal(size=(64,)) + 1.0, f32)
+    got = rmsnorm(x, w, use_pallas=True, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(rmsnorm_reference(x, w)), rtol=2e-6, atol=2e-6
+    )
+    clear_verified_cache()
+
+
+# ------------------------------------------------- 3. mutation corpus
+
+
+def _flash_base():
+    from repro.kernels.flash.kernel import flash_attention_pallas
+
+    [site] = capture_call_sites(
+        flash_attention_pallas,
+        SDS((1, 256, 2, 32), f32), SDS((1, 256, 1, 32), f32),
+        SDS((1, 256, 1, 32), f32), causal=True, block_q=64, block_k=64,
+    )
+    return site
+
+
+def _rmsnorm_base():
+    from repro.kernels.rmsnorm.kernel import rmsnorm_pallas
+
+    [site] = capture_call_sites(
+        rmsnorm_pallas, SDS((300, 100), f32), SDS((100,), f32)
+    )
+    return site
+
+
+def _ssd_base():
+    from repro.kernels.ssd.kernel import ssd_pallas
+
+    [site] = capture_call_sites(
+        ssd_pallas, SDS((1, 80, 2, 16), f32), SDS((1, 80, 2), f32),
+        SDS((1, 80, 2, 8), f32), SDS((1, 80, 2, 8), f32), chunk=32,
+    )
+    return site
+
+
+def _summary_of(site):
+    return summarize_kernel(
+        site.kernel, len(site.in_blocks), len(site.out_blocks),
+        len(site.scratch_shapes),
+    )
+
+
+def _mapped(block, transform):
+    base = block.index_map
+
+    def index_map(*ids):
+        out = base(*ids)
+        if not isinstance(out, tuple):
+            out = (out,)
+        return transform(out)
+
+    return BlockModel(block.block_shape, index_map)
+
+
+def _replace_spec(site, idx, block):
+    if idx < len(site.in_blocks):
+        return site.with_in_block(idx, block), "in"
+    return site.with_out_block(idx - len(site.in_blocks), block), "out"
+
+
+def _pick_spec(rng, site):
+    return rng.randrange(len(site.in_blocks) + len(site.out_blocks))
+
+
+def _spec_at(site, idx):
+    blocks = site.in_blocks + site.out_blocks
+    return blocks[idx]
+
+
+# operators: (rng, site, summary) -> (site', summary', role)
+
+def mut_index_bump(rng, site, summ):
+    idx = _pick_spec(rng, site)
+    blk = _spec_at(site, idx)
+    d = rng.randrange(len(blk.block_shape))
+    site, role = _replace_spec(site, idx, _mapped(
+        blk, lambda c, _d=d: tuple(x + (1 if j == _d else 0)
+                                   for j, x in enumerate(c))))
+    return site, summ, role
+
+
+def mut_index_swap(rng, site, summ):
+    idx = _pick_spec(rng, site)
+    blk = _spec_at(site, idx)
+    nd = len(blk.block_shape)
+    if nd < 2:
+        return site, summ, "noop"
+    i, j = rng.sample(range(nd), 2)
+
+    def swap(c, _i=i, _j=j):
+        c = list(c)
+        c[_i], c[_j] = c[_j], c[_i]
+        return tuple(c)
+
+    site, role = _replace_spec(site, idx, _mapped(blk, swap))
+    return site, summ, role
+
+
+def mut_index_const_zero(rng, site, summ):
+    idx = _pick_spec(rng, site)
+    blk = _spec_at(site, idx)
+    site, role = _replace_spec(site, idx, _mapped(
+        blk, lambda c: (0,) * len(c)))
+    return site, summ, role
+
+
+def mut_grid_plus1(rng, site, summ):
+    import dataclasses
+
+    a = rng.randrange(len(site.grid))
+    grid = tuple(g + (1 if i == a else 0) for i, g in enumerate(site.grid))
+    return dataclasses.replace(site, grid=grid), summ, "grid"
+
+
+def mut_grid_minus1(rng, site, summ):
+    import dataclasses
+
+    a = rng.randrange(len(site.grid))
+    grid = tuple(g - (1 if i == a else 0) for i, g in enumerate(site.grid))
+    return dataclasses.replace(site, grid=grid), summ, "grid"
+
+
+def mut_block_swap_dims(rng, site, summ):
+    idx = _pick_spec(rng, site)
+    blk = _spec_at(site, idx)
+    nd = len(blk.block_shape)
+    if nd < 2:
+        return site, summ, "noop"
+    i, j = rng.sample(range(nd), 2)
+    shape = list(blk.block_shape)
+    shape[i], shape[j] = shape[j], shape[i]
+    site, role = _replace_spec(
+        site, idx, BlockModel(tuple(shape), blk.index_map))
+    return site, summ, role
+
+
+def mut_drop_reset(rng, site, summ):
+    summ = copy.deepcopy(summ)
+    summ.resets.clear()
+    return site, summ, "summary"
+
+
+def mut_reset_axis_shift(rng, site, summ):
+    summ = copy.deepcopy(summ)
+    summ.resets = {k: {a - 1 for a in v} for k, v in summ.resets.items()}
+    return site, summ, "summary"
+
+
+OPERATORS = [mut_index_bump, mut_index_swap, mut_index_const_zero,
+             mut_grid_plus1, mut_grid_minus1, mut_block_swap_dims,
+             mut_drop_reset, mut_reset_axis_shift]
+
+
+def _fingerprint(site, summ):
+    """Footprint-level identity: mutants indistinguishable from the base
+    here are *equivalent* for a spec-level analyzer and excluded."""
+    fps = []
+    for p in itertools.product(*(range(g) for g in site.grid)):
+        row = []
+        for blk in site.in_blocks + site.out_blocks:
+            try:
+                b = blk.footprint(p)
+                row.append((b.offset, b.size))
+            except Exception:
+                row.append("err")
+        fps.append(tuple(row))
+    resets = frozenset(
+        (k, frozenset(v)) for k, v in (summ.resets if summ else {}).items()
+    )
+    return (site.grid, tuple(fps), resets)
+
+
+def _gen_mutants(seed=20260807, per_pair=4):
+    rng = random.Random(seed)
+    bases = [("flash", _flash_base()), ("rmsnorm", _rmsnorm_base()),
+             ("ssd", _ssd_base())]
+    mutants = []
+    for name, site in bases:
+        summ = _summary_of(site)
+        assert summ.parsed, name
+        base_fp = _fingerprint(site, summ)
+        for op in OPERATORS:
+            for _ in range(per_pair):
+                m_site, m_summ, role = op(rng, site, summ)
+                if role == "noop":
+                    continue
+                if _fingerprint(m_site, m_summ) == base_fp:
+                    continue  # equivalent at the footprint level
+                mutants.append((name, op.__name__, role, m_site, m_summ))
+    return mutants
+
+
+def _exec_site(site, arrays):
+    """Re-materialize a (possibly mutated) CallSite as a real interpret-mode
+    pallas_call and run it — the numeric oracle for static survivors.  Only
+    sound for sites the bounds check accepted (survivors, by definition)."""
+    import numpy as np
+
+    in_specs = [pl.BlockSpec(b.block_shape, b.index_map) for b in site.in_blocks]
+    out_specs = [pl.BlockSpec(b.block_shape, b.index_map) for b in site.out_blocks]
+    multi = len(site.out_blocks) > 1
+    out_shape = [SDS(s, np.dtype(d))
+                 for s, d in zip(site.out_shapes, site.out_dtypes)]
+    scratch = [pltpu.VMEM(s, np.dtype(d))
+               for s, d in zip(site.scratch_shapes, site.scratch_dtypes)]
+    out = pl.pallas_call(
+        site.kernel,
+        grid=site.grid,
+        in_specs=in_specs,
+        out_specs=out_specs if multi else out_specs[0],
+        out_shape=out_shape if multi else out_shape[0],
+        scratch_shapes=scratch,
+        interpret=True,
+    )(*arrays)
+    leaves = out if multi else [out]
+    return [np.asarray(leaf, np.float32) for leaf in leaves]
+
+
+def _operands_for(site, seed=0):
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.normal(size=s), np.dtype(d))
+            for s, d in zip(site.in_shapes, site.in_dtypes)]
+
+
+def test_mutation_kill_rate():
+    """>= 90% of non-equivalent mutants killed statically; every static
+    survivor triaged AND killed by the numeric oracle.
+
+    Allowed static-survivor class (module docstring): an *input* index-map
+    mutation whose footprints stay within bounds — the reads are valid but
+    wrong, which spec-level analysis cannot see.  For each such survivor we
+    re-execute the mutated call site in interpret mode and require its
+    output to differ from the base — the demonstration that the
+    interpret-mode parity tests in test_kernels.py are the complementary
+    oracle.  Grid, output, block-shape and reset mutations must all be
+    killed statically.
+    """
+    import numpy as np
+
+    mutants = _gen_mutants()
+    assert len(mutants) >= 50  # the corpus is not degenerate
+
+    bases = {"flash": _flash_base(), "rmsnorm": _rmsnorm_base(),
+             "ssd": _ssd_base()}
+    base_out = {}
+
+    killed_static = 0
+    killed_numeric = []
+    unexplained = []
+    for name, op_name, role, m_site, m_summ in mutants:
+        r = analyze_call_site(m_site, summary=m_summ)
+        if r.violations:
+            killed_static += 1
+            continue
+        if not (role == "in" and op_name in (
+                "mut_index_const_zero", "mut_index_swap", "mut_index_bump")):
+            unexplained.append((name, op_name, role))
+            continue
+        # triaged class: must be numerically visible in interpret mode
+        if name not in base_out:
+            base_out[name] = _exec_site(bases[name], _operands_for(bases[name]))
+        got = _exec_site(m_site, _operands_for(bases[name]))
+        if any(not np.allclose(g, b, rtol=1e-4, atol=1e-4)
+               for g, b in zip(got, base_out[name])):
+            killed_numeric.append((name, op_name))
+        else:
+            unexplained.append((name, op_name, "numeric-equal"))
+
+    assert not unexplained, f"untriaged survivors: {unexplained}"
+
+    total = len(mutants)
+    rate = (killed_static + len(killed_numeric)) / total
+    assert rate >= 0.90, (
+        f"combined kill rate {rate:.3f} "
+        f"({killed_static}+{len(killed_numeric)}/{total})"
+    )
+    # the static analyzer alone must still do the overwhelming majority
+    assert killed_static / total >= 0.85, (
+        f"static kill rate {killed_static / total:.3f}; "
+        f"numeric-only kills: {killed_numeric}"
+    )
+
+
+def test_pinned_mutants_are_killed():
+    """One deterministic mutant per structural rule, pinned independent of
+    the corpus rng (catches a rule regressing even if the rate holds)."""
+    import dataclasses
+
+    ssd = _ssd_base()
+    summ = _summary_of(ssd)
+
+    # dropped reset -> stale carried state
+    _, m_summ, _ = mut_drop_reset(None, ssd, summ)
+    r = analyze_call_site(ssd, summary=m_summ)
+    assert _kinds(r) == {"scratch-no-reset"}
+
+    # reset keyed on the outer axis
+    _, m_summ, _ = mut_reset_axis_shift(None, ssd, summ)
+    r = analyze_call_site(ssd, summary=m_summ)
+    assert _kinds(r) == {"scratch-carry-axis"}
+
+    # off-by-one grids
+    short = dataclasses.replace(ssd, grid=(ssd.grid[0], ssd.grid[1] - 1))
+    assert "coverage-gap" in _kinds(analyze_call_site(short))
+    long = dataclasses.replace(ssd, grid=(ssd.grid[0], ssd.grid[1] + 1))
+    assert {"oob-read", "oob-write"} <= _kinds(analyze_call_site(long))
+
+    # corrupted output index map
+    flash = _flash_base()
+    bumped = flash.with_out_block(0, _mapped(
+        flash.out_blocks[0],
+        lambda c: (c[0], c[1] + 1, c[2])))
+    assert "oob-write" in _kinds(analyze_call_site(bumped))
+
+
+def test_known_survivor_class_is_what_interpret_tests_catch():
+    """The triaged survivor class, pinned: zeroing an input index map keeps
+    every read in bounds (analyzer-clean) but reads the wrong data — the
+    interpret-mode parity sweep in test_kernels.py is the complementary
+    oracle for exactly this."""
+    rms = _rmsnorm_base()
+    zeroed = rms.with_in_block(0, _mapped(
+        rms.in_blocks[0], lambda c: (0,) * len(c)))
+    r = analyze_call_site(zeroed)
+    assert r.ok, str(r)  # structurally valid ...
+    assert _fingerprint(zeroed, _summary_of(rms)) != _fingerprint(
+        rms, _summary_of(rms))  # ... but genuinely different reads

@@ -117,6 +117,30 @@ def test_rmsnorm_block_rows_sweep():
         np.testing.assert_allclose(np.asarray(got), np.asarray(rmsnorm_reference(x, w)), rtol=2e-6)
 
 
+@pytest.mark.parametrize("shape", [(5, 100), (4, 33), (2, 3, 130), (1, 1)])
+def test_rmsnorm_lane_unaligned_d(shape):
+    """Feature dims off the 128-lane grid are zero-padded; dividing the
+    square-sum by the true d keeps the numerics exact."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    w = jnp.asarray(rng.normal(size=shape[-1]) + 1.0, jnp.float32)
+    got = rmsnorm_pallas(x, w, interpret=True)
+    want = rmsnorm_reference(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-6, atol=2e-6)
+
+
+def test_rmsnorm_degenerate_inputs_raise():
+    w = jnp.ones((64,), jnp.float32)
+    with pytest.raises(ValueError, match="no rows"):
+        rmsnorm_pallas(jnp.zeros((0, 64), jnp.float32), w, interpret=True)
+    with pytest.raises(ValueError, match="feature dim is 0"):
+        rmsnorm_pallas(jnp.zeros((4, 0), jnp.float32),
+                       jnp.ones((0,), jnp.float32), interpret=True)
+    with pytest.raises(ValueError, match="weight size"):
+        rmsnorm_pallas(jnp.zeros((4, 64), jnp.float32),
+                       jnp.ones((32,), jnp.float32), interpret=True)
+
+
 # ---------------------------------------- model-level kernel integration
 def test_model_with_pallas_flash_matches_reference_path():
     """A reduced dense model in use_pallas mode (interpret) must match the
