@@ -10,12 +10,19 @@ Usage (one or more ``FRESH:BASELINE[:TOLERANCE]`` pairs)::
         .ci-bench/BENCH_concurrent.json:BENCH_concurrent.json
 
 Each file is one of the repo's bench formats — a top-level ``points`` /
-``sweep_points`` list of dicts carrying a ``speedup`` metric plus
-identifying fields (``n``, ``collective``, ``tp_mb``, ...).  Points are
-matched on the identifying fields that appear in both files, so a CI run
-may produce a reduced (``--smoke``) point set and still gate against the
-full committed baseline: only the intersection is compared, and at least
-one shared point is required per pair.
+``sweep_points`` (plus ``hier_points``) list of dicts carrying gated
+metrics plus identifying fields (``n``, ``collective``, ``pod_size``,
+``tp_mb``, ...).  Points are matched on the identifying fields that appear
+in both files, so a CI run may produce a reduced (``--smoke``) point set
+and still gate against the full committed baseline: only the intersection
+is compared, and at least one shared point is required per pair.
+
+Gated metrics carry a direction: ``speedup`` is higher-is-better,
+``cost_ratio`` (hierarchical stitched cost vs the flat exact DP) is
+lower-is-better.  Absolute wall-clock fields (``hier_cold_s``, ``loop_s``,
+...) are never gated — they don't transfer across machines; the benches'
+own ``--smoke`` assertions carry the wall-clock bars.  A shared point with
+no gated metric on both sides is skipped.
 
 Tolerance
 ---------
@@ -48,18 +55,26 @@ from typing import Dict, List, Tuple
 
 # fields that identify a point (the metric fields are everything else)
 ID_KEYS = (
-    "n", "collective", "algorithm", "tp", "dp",
+    "n", "collective", "algorithm", "pod_size", "tp", "dp",
     "tp_collective", "dp_collective", "tp_mb", "dp_mb", "sizes_mb",
 )
-METRIC = "speedup"
+# gated metric -> direction ("higher" or "lower" is better)
+METRICS = {
+    "speedup": "higher",
+    "cost_ratio": "lower",
+}
 
 
 def load_points(path: Path) -> List[Dict]:
     doc = json.loads(path.read_text())
-    for key in ("points", "sweep_points"):
-        if key in doc:
-            return doc[key]
-    raise SystemExit(f"{path}: no 'points'/'sweep_points' list")
+    points: List[Dict] = []
+    for key in ("points", "sweep_points", "hier_points"):
+        points += doc.get(key, ())
+    if not points:
+        raise SystemExit(
+            f"{path}: no 'points'/'sweep_points'/'hier_points' list"
+        )
+    return points
 
 
 def point_id(p: Dict) -> Tuple:
@@ -77,19 +92,30 @@ def gate_pair(fresh_path: Path, base_path: Path, tolerance: float) -> List[str]:
         ]
     failures: List[str] = []
     for k in shared:
-        f, b = fresh[k][METRIC], base[k][METRIC]
-        ok = f >= tolerance * b
         label = " ".join(f"{key}={json.loads(v)}" for key, v in k)
-        print(
-            f"  {'ok  ' if ok else 'FAIL'} {label}: "
-            f"fresh {f:.2f}x vs baseline {b:.2f}x "
-            f"(floor {tolerance * b:.2f}x)"
-        )
-        if not ok:
-            failures.append(
-                f"{fresh_path}: {label} regressed to {f:.2f}x "
-                f"(baseline {b:.2f}x, tolerance {tolerance:g})"
+        gated = [m for m in METRICS if m in fresh[k] and m in base[k]]
+        if not gated:
+            print(f"  skip {label}: no gated metric on both sides")
+            continue
+        for metric in gated:
+            f, b = fresh[k][metric], base[k][metric]
+            if METRICS[metric] == "higher":
+                floor = tolerance * b
+                ok = f >= floor
+                bound = f"floor {floor:.2f}"
+            else:
+                ceil = b / tolerance
+                ok = f <= ceil
+                bound = f"ceiling {ceil:.2f}"
+            print(
+                f"  {'ok  ' if ok else 'FAIL'} {label} {metric}: "
+                f"fresh {f:.2f} vs baseline {b:.2f} ({bound})"
             )
+            if not ok:
+                failures.append(
+                    f"{fresh_path}: {label} {metric} regressed to {f:.2f} "
+                    f"(baseline {b:.2f}, tolerance {tolerance:g})"
+                )
     return failures
 
 

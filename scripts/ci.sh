@@ -61,8 +61,10 @@ stage_verify() {
 
 stage_smoke() {
   mkdir -p "$BENCH_DIR"
-  # planner perf smoke (n=16): plan_sweep must stay bit-identical to the
-  # per-size plan() loop and meaningfully faster; fails fast on regression
+  # planner perf smoke: plan_sweep must stay bit-identical to the per-size
+  # plan() loop and meaningfully faster (n=16), and one n=256 hierarchical
+  # point per case must plan cold inside its wall-clock bar (keeps the
+  # scaling path alive in CI without the full n=1024 matrix)
   python -m benchmarks.planner_bench --smoke --json-out "$BENCH_DIR/BENCH_planner.json"
   # execution-engine smoke (n=8): warm engine calls must be 0-retrace
   # (deterministic guard) and beat the cold per-round interpreter

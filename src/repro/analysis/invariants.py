@@ -38,6 +38,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from collections import Counter
+
 from ..core.circuits import CircuitRequest, MZIMesh, route_circuits, validate_routes
 from ..core.cost_model import (
     HardwareParams,
@@ -46,14 +48,16 @@ from ..core.cost_model import (
 )
 from ..core.fibers import route_fibers, server_grid
 from ..core.planner import (
+    HierarchicalPlan,
     Plan,
     ConcurrentPlan,
     _JointState,
+    _pod_standard_set,
     build_structure,
     plan,
 )
-from ..core.schedules import Schedule
-from ..core.topology import Topology
+from ..core.schedules import Schedule, pod_subschedules
+from ..core.topology import Topology, induced_topology, quotient_topology
 
 _REL_TOL = 1e-9
 _ABS_TOL = 1e-12
@@ -324,6 +328,196 @@ def check_plan(
         out.append(InvariantViolation(
             "final-topology", "plan",
             "final_topology does not match the last step's state"))
+    return out
+
+
+def _prefixed(
+    violations: Sequence[InvariantViolation], prefix: str
+) -> List[InvariantViolation]:
+    return [
+        InvariantViolation(v.kind, f"{prefix}: {v.where}", v.message)
+        for v in violations
+    ]
+
+
+def check_hierarchical_plan(
+    hp: HierarchicalPlan, g0: Topology, standard: Sequence[Topology]
+) -> List[InvariantViolation]:
+    """Replay a two-level hierarchical plan: both planning levels, the
+    pod decomposition itself, and the stitching arithmetic.
+
+    * every representative pod plan replays through :func:`check_plan`
+      against the pod's induced fabric (violations prefixed ``pod p``),
+      and the coarse inter-pod plan against the quotient fabric
+      (prefixed ``inter``);
+    * **containment/conservation** — per round, each pod's executed
+      transfers (its shared representative plan, mapped to the pod's local
+      ids) must be exactly the original round's traffic inside that pod,
+      and the declared ``boundary`` pod-pair multiplicities must be exactly
+      the original cross-pod traffic — nothing dropped, invented, or
+      leaked across a pod boundary;
+    * **stitching** — ``round_costs[i]`` must equal the max over groups of
+      round ``i``'s comm + reconfig (barrier-synced independent groups),
+      and ``total_cost`` their sum.
+
+    With one pod the plan *is* the flat exact DP and delegates to
+    :func:`check_plan` on the caller's inputs.
+    """
+    out: List[InvariantViolation] = []
+    sched = hp.schedule
+    n, R, P = sched.n, len(sched.rounds), len(hp.pods)
+
+    if sorted(r for pod in hp.pods for r in pod) != list(range(n)):
+        out.append(InvariantViolation(
+            "pods-not-partition", "pods",
+            f"pods do not partition ranks 0..{n - 1} exactly once"))
+        return out
+    if len(hp.pod_plans) != P:
+        out.append(InvariantViolation(
+            "pod-plan-count", "pods",
+            f"{len(hp.pod_plans)} pod plans for {P} pods"))
+        return out
+    for pp in hp.pod_plans:
+        if pp.ranks != hp.pods[pp.pod_index]:
+            out.append(InvariantViolation(
+                "pod-ranks", f"pod {pp.pod_index}",
+                "PodPlan.ranks disagrees with the pod partition"))
+            return out
+
+    if P == 1:
+        if hp.inter_plan is not None:
+            out.append(InvariantViolation(
+                "inter-plan", "inter",
+                "single-pod plan carries an inter-pod phase"))
+        out += _prefixed(
+            check_plan(hp.pod_plans[0].plan, g0, standard), "pod 0")
+        group_plans: List[Plan] = [hp.pod_plans[0].plan]
+    else:
+        intra, rep, boundary = pod_subschedules(sched, hp.pods)
+        if hp.rep != rep:
+            out.append(InvariantViolation(
+                "rep-map", "pods",
+                "stored pod-representative map disagrees with the "
+                "schedule's pod equivalence classes"))
+        for p in sorted(set(hp.rep)):
+            ranks = hp.pods[p]
+            pod_g0 = induced_topology(g0, ranks, name=f"{g0.name}|pod{p}")
+            out += _prefixed(
+                check_plan(
+                    hp.pod_plans[p].plan, pod_g0, _pod_standard_set(len(ranks))
+                ),
+                f"pod {p}",
+            )
+        if hp.inter_plan is None:
+            out.append(InvariantViolation(
+                "inter-plan", "inter", f"{P} pods but no inter-pod plan"))
+            return out
+        coarse_g0 = quotient_topology(g0, hp.pods, name=f"{g0.name}/pods")
+        if hp.inter_plan.schedule.n != P:
+            out.append(InvariantViolation(
+                "inter-n", "inter",
+                f"coarse schedule spans {hp.inter_plan.schedule.n} "
+                f"super-ranks for {P} pods"))
+            return out
+        out += _prefixed(
+            check_plan(hp.inter_plan, coarse_g0, _pod_standard_set(P)),
+            "inter",
+        )
+        if len(hp.inter_plan.schedule.rounds) != R:
+            out.append(InvariantViolation(
+                "inter-rounds", "inter",
+                f"coarse schedule has {len(hp.inter_plan.schedule.rounds)} "
+                f"rounds for horizon {R}"))
+            return out
+        group_plans = [hp.pod_plans[p].plan for p in sorted(set(hp.rep))]
+        group_plans.append(hp.inter_plan)
+
+    # ---- containment / conservation against the original schedule
+    pod_of = [0] * n
+    local_of = [0] * n
+    for p, ranks in enumerate(hp.pods):
+        for j, r in enumerate(ranks):
+            pod_of[r] = p
+            local_of[r] = j
+    if len(hp.boundary) != R:
+        out.append(InvariantViolation(
+            "boundary-length", "boundary",
+            f"{len(hp.boundary)} boundary rounds for horizon {R}"))
+        return out
+    for i, rnd in enumerate(sched.rounds):
+        cross: Counter = Counter()
+        inside: List[Counter] = [Counter() for _ in range(P)]
+        for t in rnd.transfers:
+            if t.src == t.dst:
+                continue
+            ps, pd = pod_of[t.src], pod_of[t.dst]
+            if ps == pd:
+                inside[ps][(local_of[t.src], local_of[t.dst])] += 1
+            else:
+                cross[(ps, pd)] += 1
+        if tuple(sorted(cross.items())) != hp.boundary[i]:
+            out.append(InvariantViolation(
+                "boundary-conservation", f"round {i}",
+                "declared cross-pod pod-pair multiplicities disagree with "
+                "the schedule's actual cross-pod traffic"))
+        if P > 1 and hp.inter_plan is not None:
+            crnd = hp.inter_plan.schedule.rounds[i]
+            executed = Counter(
+                (t.src, t.dst) for t in crnd.transfers if t.src != t.dst)
+            if set(executed) != set(cross):
+                out.append(InvariantViolation(
+                    "inter-containment", f"round {i}",
+                    "coarse round's pod pairs are not exactly the round's "
+                    "cross-pod pairs"))
+            if crnd.size != rnd.size:
+                out.append(InvariantViolation(
+                    "inter-size", f"round {i}",
+                    f"coarse round carries {crnd.size} bytes, original "
+                    f"round {rnd.size}"))
+        for pp in hp.pod_plans:
+            psched = pp.plan.schedule
+            if len(psched.rounds) != R:
+                out.append(InvariantViolation(
+                    "pod-rounds", f"pod {pp.pod_index}",
+                    f"pod plan has {len(psched.rounds)} rounds for "
+                    f"horizon {R}"))
+                return out
+            prnd = psched.rounds[i]
+            executed = Counter(
+                (t.src, t.dst) for t in prnd.transfers if t.src != t.dst)
+            if executed != inside[pp.pod_index]:
+                out.append(InvariantViolation(
+                    "pod-containment", f"pod {pp.pod_index} round {i}",
+                    "pod's executed transfers are not exactly the original "
+                    "round's traffic inside the pod"))
+            if prnd.size != rnd.size:
+                out.append(InvariantViolation(
+                    "pod-size", f"pod {pp.pod_index} round {i}",
+                    f"pod round carries {prnd.size} bytes, original round "
+                    f"{rnd.size}"))
+
+    # ---- stitching arithmetic: barrier-synced independent groups
+    if len(hp.round_costs) != R:
+        out.append(InvariantViolation(
+            "round-costs-length", "stitching",
+            f"{len(hp.round_costs)} round costs for horizon {R}"))
+        return out
+    for i in range(R):
+        want = max((gp.steps[i].total for gp in group_plans), default=0.0)
+        if not _close(hp.round_costs[i], want):
+            out.append(InvariantViolation(
+                "round-cost-stitching", f"round {i}",
+                f"stitched cost {hp.round_costs[i]:.6g}, slowest group "
+                f"gives {want:.6g}"))
+    if not _close(hp.total_cost, sum(hp.round_costs)):
+        out.append(InvariantViolation(
+            "total-cost", "stitching",
+            f"round costs sum to {sum(hp.round_costs):.6g}, plan claims "
+            f"{hp.total_cost:.6g}"))
+    if hp.final_topology is not None:
+        out.append(InvariantViolation(
+            "final-topology", "stitching",
+            "hierarchical plans cannot thread a single final topology"))
     return out
 
 

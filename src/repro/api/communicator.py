@@ -127,6 +127,31 @@ class Communicator:
             collective, nbytes, n=self.n, algorithm=self.algorithm
         ).cost
 
+    def replan(
+        self,
+        collective: str,
+        nbytes: float,
+        *,
+        failed_edges: Sequence[Tuple[int, int]] = (),
+        failed_ranks: Sequence[int] = (),
+    ):
+        """Warm-replan this communicator's collective after fabric faults.
+
+        Forwards to :meth:`PcclSession.replan` at this communicator's group
+        size: only planner states the failed links/ranks actually touch are
+        re-routed (O(affected)), the result is bit-identical to cold-planning
+        the degraded fabric, and the session permanently drops the dead
+        links for every later plan on this axis.  Edges/ranks are group-local
+        indices (the planner's rank space for this communicator)."""
+        return self.session.replan(
+            collective,
+            nbytes,
+            n=self.n,
+            algorithm=self.algorithm,
+            failed_edges=failed_edges,
+            failed_ranks=failed_ranks,
+        )
+
     # ----------------------------------------------------------- primitives
     def all_reduce(self, x):
         return self.backend.all_reduce(self, x)
@@ -155,6 +180,12 @@ class Communicator:
         The parent's backend *instance* is shared by default so stateful
         backends keep one account (e.g. ``sim_elapsed_s`` covers sub-group
         traffic too); pass ``backend="..."`` to get a fresh one instead.
+
+        Resizing is a warm-path event: the sub-communicator plans at the
+        new group size through the same session, so its structure cache
+        (keyed without ``nbytes``) and any prior plans at that size are
+        reused — only a genuinely new (size, fabric, algorithm) combination
+        routes, and later faults go through :meth:`replan` incrementally.
         """
         if self.groups is not None:
             raise ValueError("split() on an already-split communicator")

@@ -31,21 +31,38 @@ from __future__ import annotations
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import TYPE_CHECKING, Dict, FrozenSet, List, Optional, Sequence, Tuple
+from typing import (
+    TYPE_CHECKING,
+    Any,
+    Dict,
+    FrozenSet,
+    Iterable,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+)
 
-from repro.core.cost_model import HardwareParams, ScheduleCost, schedule_cost_fixed
+from repro.core.cost_model import (
+    STRUCTURE_TABLE,
+    HardwareParams,
+    ScheduleCost,
+    schedule_cost_fixed,
+)
 from repro.core.pccl import (
     CollectiveRequest,
     ConcurrentCollectiveRequest,
     ConcurrentPcclPlan,
     PcclPlan,
     default_standard_set,
+    plan_collective_hierarchical,
     plan_collective_sweep,
     plan_concurrent_collectives,
+    replan_collective,
 )
-from repro.core.planner import PlanStructure
+from repro.core.planner import PlanStructure, trans_cache_stats
 from repro.core import schedules as S
-from repro.core.topology import Edge, Topology, ring
+from repro.core.topology import Edge, Topology, degrade_topology, ring
 
 if TYPE_CHECKING:  # pragma: no cover
     from .communicator import Communicator
@@ -62,10 +79,25 @@ class CacheStats:
     misses: int
     size: int
     evictions: int = 0
+    bytes: int = 0  # estimated value footprint (0 for unmetered caches)
 
     @property
     def requests(self) -> int:
         return self.hits + self.misses
+
+
+@dataclass(frozen=True)
+class StructureStatsTotals(CacheStats):
+    """:attr:`PcclSession.structure_stats` — the session's structure-bundle
+    cache accounting plus the process-wide planner table totals behind it
+    (``bytes`` = this session's cached ``PlanStructure`` arrays;
+    ``table_bytes``/``trans_bytes`` = the shared routing structure table and
+    transition memo, which size-aware eviction keeps bounded at large n)."""
+
+    table_bytes: int = 0
+    table_entries: int = 0
+    trans_bytes: int = 0
+    trans_entries: int = 0
 
 
 class PlanCache:
@@ -79,15 +111,26 @@ class PlanCache:
     threads.
     """
 
-    def __init__(self, max_entries: int = 4096) -> None:
+    def __init__(
+        self, max_entries: int = 4096, max_bytes: Optional[int] = None
+    ) -> None:
         if max_entries < 1:
             raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        if max_bytes is not None and max_bytes < 1:
+            raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
         self._plans: "OrderedDict[PlanKey, PcclPlan]" = OrderedDict()
         self.max_entries = max_entries
+        self.max_bytes = max_bytes
         self._lock = threading.Lock()
         self._hits = 0
         self._misses = 0
         self._evictions = 0
+        self._bytes = 0
+        self._charges: Dict[PlanKey, int] = {}
+
+    def _charge(self, value: Any) -> int:
+        """Estimated byte footprint of a cached value; 0 = unmetered."""
+        return 0
 
     def lookup(self, key: PlanKey) -> Optional[PcclPlan]:
         with self._lock:
@@ -100,25 +143,43 @@ class PlanCache:
             return plan
 
     def store(self, key: PlanKey, plan: PcclPlan) -> None:
+        charge = self._charge(plan)
         with self._lock:
+            # Bundles are mutated in place and re-stored, so an existing
+            # key's charge is replaced, not accumulated.
+            self._bytes += charge - self._charges.pop(key, 0)
+            if charge:
+                self._charges[key] = charge
             self._plans[key] = plan
             self._plans.move_to_end(key)
-            while len(self._plans) > self.max_entries:
-                self._plans.popitem(last=False)
+            # Byte pressure never evicts the entry just stored (>1 floor),
+            # so a single oversized bundle still caches.
+            while len(self._plans) > 1 and (
+                len(self._plans) > self.max_entries
+                or (self.max_bytes is not None and self._bytes > self.max_bytes)
+            ):
+                old_key, _ = self._plans.popitem(last=False)
+                self._bytes -= self._charges.pop(old_key, 0)
                 self._evictions += 1
 
     def clear(self) -> None:
         with self._lock:
             self._plans.clear()
+            self._charges.clear()
             self._hits = 0
             self._misses = 0
             self._evictions = 0
+            self._bytes = 0
 
     @property
     def stats(self) -> CacheStats:
         with self._lock:
             return CacheStats(
-                self._hits, self._misses, len(self._plans), self._evictions
+                self._hits,
+                self._misses,
+                len(self._plans),
+                self._evictions,
+                self._bytes,
             )
 
 
@@ -130,8 +191,25 @@ class StructureCache(PlanCache):
     by the planner's size-independent phase.  A plan-cache miss at a new
     buffer size reuses the bundle and pays only the cheap numeric phase;
     only a new (collective, fabric, algorithm-mode) combination routes.
-    Same bounded lock-guarded LRU semantics as :class:`PlanCache`.
+    Same bounded lock-guarded LRU semantics as :class:`PlanCache`, plus
+    byte-charged eviction: bundles are charged their numpy array footprint
+    so large-n structures (tables scale with states × rounds) cannot pin
+    unbounded memory no matter how few entries they span.
     """
+
+    def _charge(self, value: Any) -> int:
+        total = 0
+        for structure in value.values():
+            for arr in (
+                structure.dilation,
+                structure.congestion,
+                structure.feasible,
+                structure.enterable,
+                structure.trans,
+            ):
+                total += int(arr.nbytes)
+            total += 512  # fixed overhead: states, keys, dict slot
+        return total
 
 
 class PcclSession:
@@ -159,6 +237,11 @@ class PcclSession:
         planner's size-independent routing/transition tables.  A plan-cache
         miss that hits here (e.g. a new buffer size over a known fabric)
         skips all routing and pays only the numeric phase.
+      max_structure_bytes: byte bound on the same structure cache.  Entry
+        counts alone under-bound memory at large ``n`` (one n=1024 bundle
+        dwarfs hundreds of n=16 ones), so bundles are charged their numpy
+        array footprint and evicted LRU-first past this cap (totals in
+        :attr:`structure_stats`).
     """
 
     def __init__(
@@ -170,11 +253,14 @@ class PcclSession:
         thread_fabric: bool = True,
         max_cached_plans: int = 4096,
         max_cached_structures: int = 512,
+        max_structure_bytes: int = 256 * 1024 * 1024,
     ) -> None:
         self.hw = hw
         self.thread_fabric = thread_fabric
         self.cache = PlanCache(max_entries=max_cached_plans)
-        self.structures = StructureCache(max_entries=max_cached_structures)
+        self.structures = StructureCache(
+            max_entries=max_cached_structures, max_bytes=max_structure_bytes
+        )
         # plan() is a read-plan-store-thread sequence over fabric state;
         # serialize it so concurrent planners never start from a topology
         # the fabric doesn't hold (distinct sessions still plan in parallel)
@@ -336,6 +422,132 @@ class PcclSession:
                     plans[k] = p
             return [plans[k] for k in range(len(sizes_f))]
 
+    def plan_hierarchical(
+        self,
+        collective: str,
+        nbytes: float,
+        *,
+        n: Optional[int] = None,
+        algorithm: str = "paper_default",
+        dims: Optional[Sequence[int]] = None,
+        pods: Optional[Sequence[Sequence[int]]] = None,
+        pod_size: Optional[int] = None,
+    ) -> PcclPlan:
+        """Plan ``collective`` through the two-level hierarchical path
+        (per-pod exact DP + coarse inter-pod phase), cached.
+
+        This is the scaling entry point: flat exact planning is quadratic in
+        the state count (~``n``), while the hierarchical path plans one
+        representative pod per equivalence class plus a ``P``-super-rank
+        coarse phase — n=1024 cold plans land well inside the 1 s budget.
+        With one pod (``pod_size=n``) the result wraps the flat exact plan
+        bit-identically.  Hierarchical plans carry no single final fabric
+        (pods own disjoint circuits), so fabric state is **not** threaded.
+        """
+        with self._plan_lock:
+            n = self._resolve_n(n)
+            g0 = self.fabric(n)
+            dims_t = tuple(dims) if dims is not None else None
+            pods_t = (
+                tuple(tuple(p) for p in pods) if pods is not None else None
+            )
+            key = (
+                "__hierarchical__",
+                collective,
+                n,
+                float(nbytes),
+                algorithm,
+                dims_t,
+                pods_t,
+                pod_size,
+                g0.edges,
+            )
+            plan = self.cache.lookup(key)
+            if plan is None:
+                plan = plan_collective_hierarchical(
+                    CollectiveRequest(
+                        collective, n, float(nbytes), algorithm=algorithm
+                    ),
+                    g0,
+                    self.hw,
+                    standard=self.standard_set(n),
+                    dims=dims,
+                    pods=pods_t,
+                    pod_size=pod_size,
+                )
+                self.cache.store(key, plan)
+            return plan
+
+    def replan(
+        self,
+        collective: str,
+        nbytes: float,
+        *,
+        n: Optional[int] = None,
+        algorithm: str = "paper_default",
+        dims: Optional[Sequence[int]] = None,
+        failed_edges: Iterable[Edge] = (),
+        failed_ranks: Iterable[int] = (),
+    ) -> PcclPlan:
+        """Warm-replan after link/rank failures: the fault-event fast path.
+
+        ``failed_edges`` name physical links, so both directions die; a rank
+        in ``failed_ranks`` loses every incident link.  The session's cached
+        size-independent structures are re-priced incrementally — only
+        states whose edge set actually changed re-route
+        (O(affected states), see :func:`repro.core.planner.replan`) — and
+        the resulting plan equals a cold plan of the degraded fabric
+        bit-for-bit.  Failures are permanent: the per-``n`` fabric,
+        initial fabric, and standard set are degraded in place, so every
+        later :meth:`plan` (and :meth:`reset_fabric`) sees the surviving
+        links only, and the refreshed structures are cached under the
+        degraded fingerprint for further warm events.
+        """
+        with self._plan_lock:
+            n = self._resolve_n(n)
+            g0 = self.fabric(n)
+            dims_t = tuple(dims) if dims is not None else None
+            failed_e = frozenset(
+                e for (u, v) in failed_edges for e in ((u, v), (v, u))
+            )
+            failed_r = frozenset(failed_ranks)
+            skey: StructureKey = (collective, n, algorithm, dims_t, g0.edges)
+            bundle = self.structures.lookup(skey) or {}
+            new_bundle: Dict[str, PlanStructure] = {}
+            plan = replan_collective(
+                CollectiveRequest(
+                    collective, n, float(nbytes), algorithm=algorithm
+                ),
+                g0,
+                self.hw,
+                standard=self.standard_set(n),
+                dims=dims,
+                changed_edges=tuple(failed_e),
+                changed_ranks=tuple(failed_r),
+                structure_for=bundle.get,
+                on_structure=new_bundle.__setitem__,
+            )
+            self._standard[n] = [
+                degrade_topology(s, failed_e, failed_r)
+                for s in self.standard_set(n)
+            ]
+            d_g0 = degrade_topology(g0, failed_e, failed_r)
+            self._fabric[n] = d_g0
+            if n in self._initial:
+                self._initial[n] = degrade_topology(
+                    self._initial[n], failed_e, failed_r
+                )
+            self.structures.store(
+                (collective, n, algorithm, dims_t, d_g0.edges), new_bundle
+            )
+            self.cache.store(
+                (collective, n, float(nbytes), algorithm, dims_t, d_g0.edges),
+                plan,
+            )
+            if self.thread_fabric and plan.final_topology is not None:
+                self._fabric[n] = plan.final_topology
+            return plan
+
     def plan_concurrent(
         self,
         requests: Sequence[ConcurrentCollectiveRequest],
@@ -429,9 +641,25 @@ class PcclSession:
         return self.cache.stats
 
     @property
-    def structure_stats(self) -> CacheStats:
-        """Hit/miss accounting for the size-independent structure cache."""
-        return self.structures.stats
+    def structure_stats(self) -> StructureStatsTotals:
+        """Hit/miss accounting for the size-independent structure cache,
+        plus byte totals for it and the process-wide planner tables (the
+        routing structure table and the transition memo), all of which are
+        byte-charged and evict under memory pressure."""
+        base = self.structures.stats
+        table = STRUCTURE_TABLE.stats
+        trans_entries, trans_bytes = trans_cache_stats()
+        return StructureStatsTotals(
+            base.hits,
+            base.misses,
+            base.size,
+            base.evictions,
+            base.bytes,
+            table_bytes=table.bytes,
+            table_entries=table.size,
+            trans_bytes=trans_bytes,
+            trans_entries=trans_entries,
+        )
 
     def exec_stats(self):
         """Execution-engine counters: the jitted-executable cache (hits /

@@ -381,9 +381,231 @@ def _route_linear_batch(stacked: "_StackedLinear", srcs, dsts):
     return dil, cong, feas
 
 
+# Bounded LRU over (n, edges) → path-position labels for *bidirectional path
+# forests* (every directed edge has its reverse, undirected degree ≤ 2, no
+# cycles) — exactly the shape of a ring fabric that lost a link, the dominant
+# state on the warm-replan path.  Cycles are excluded: antipodal pairs on an
+# even bidirectional cycle have tied shortest paths, so routes would not be
+# provably identical to the predecessor-walk leg.  None is cached too.
+_BIDI_CACHE: "OrderedDict[Tuple, Optional[Tuple]]" = OrderedDict()
+_BIDI_CACHE_MAX = 512
+_BIDI_CACHE_LOCK = threading.Lock()
+
+
+def _bidi_path_labels(topo: Topology):
+    """(comp, pos, off, n_slots) labels for a bidirectional path forest, or
+    None if ``topo`` is not one.
+
+    ``comp[v]``/``pos[v]`` place each node on its undirected path; component
+    ``c`` owns slot block ``[off[c], off[c] + length_c)`` where slot ``p``
+    stands for the segment between positions ``p`` and ``p + 1`` (one slot
+    per direction plane, see :func:`_route_rounds_bidi`).  On such graphs
+    every pair has a *unique* simple path, so shortest-path routing is
+    forced and results are bit-identical to the general predecessor walk."""
+    import numpy as np
+
+    key = (topo.n, topo.edges)
+    with _BIDI_CACHE_LOCK:
+        if key in _BIDI_CACHE:
+            _BIDI_CACHE.move_to_end(key)
+            return _BIDI_CACHE[key]
+
+    n = topo.n
+    adj: List[List[int]] = [[] for _ in range(n)]
+    ok = True
+    for u, v in topo.edges:
+        if (v, u) not in topo.edges:
+            ok = False
+            break
+        adj[u].append(v)
+    if ok:
+        ok = all(len(a) <= 2 for a in adj)
+    labels = None
+    if ok:
+        comp = [-1] * n
+        pos = [0] * n
+        length: List[int] = []
+        for s in range(n):  # paths start at endpoints (degree 0 or 1)
+            if comp[s] != -1 or len(adj[s]) == 2:
+                continue
+            c = len(length)
+            u, prev, p = s, -1, 0
+            while u != -1:
+                comp[u] = c
+                pos[u] = p
+                p += 1
+                nxt = -1
+                for w in adj[u]:
+                    if w != prev:
+                        nxt = w
+                        break
+                prev, u = u, nxt
+            length.append(p)
+        if all(c != -1 for c in comp):  # unvisited nodes would lie on cycles
+            length_a = np.asarray(length, dtype=np.int64)
+            off = np.zeros(len(length) + 1, dtype=np.int64)
+            np.cumsum(length_a, out=off[1:])
+            labels = (
+                np.asarray(comp, dtype=np.int64),
+                np.asarray(pos, dtype=np.int64),
+                off[:-1],
+                int(off[-1]),
+            )
+
+    with _BIDI_CACHE_LOCK:
+        _BIDI_CACHE[key] = labels
+        _BIDI_CACHE.move_to_end(key)
+        while len(_BIDI_CACHE) > _BIDI_CACHE_MAX:
+            _BIDI_CACHE.popitem(last=False)
+    return labels
+
+
+def _route_rounds_bidi(
+    labels, pair_arrays_list: Sequence[Tuple]
+) -> List[Tuple[int, int, bool]]:
+    """Batch-route many rounds on ONE bidirectional path forest.
+
+    Same contract as :func:`_route_rounds_general` (and bit-identical to it:
+    unique simple paths force the same routes) without any shortest-path
+    machinery — dilation is position arithmetic, congestion is two interval
+    difference planes (one per travel direction, since the two directed
+    circuits of a segment are distinct links) cumsum'd per round."""
+    import numpy as np
+
+    comp, pos, off, n_slots = labels
+    R = len(pair_arrays_list)
+    counts = np.asarray([s.shape[0] for s, _ in pair_arrays_list])
+    srcs = np.concatenate([s for s, _ in pair_arrays_list])
+    dsts = np.concatenate([d for _, d in pair_arrays_list])
+    seg = np.repeat(np.arange(R), counts)
+
+    cu = comp[srcs]
+    same = cu == comp[dsts]
+    feas = np.bincount(seg[~same], minlength=R) == 0
+    pu = pos[srcs]
+    pv = pos[dsts]
+    d = np.abs(pv - pu)
+    dil = np.zeros(R, dtype=np.int64)
+    keep = feas[seg]
+    np.maximum.at(dil, seg[keep], d[keep])
+
+    base = off[cu]
+    lo = base + np.minimum(pu, pv)
+    hi = base + np.maximum(pu, pv)
+    fwd = keep & (pu < pv)          # ascending positions: forward plane
+    bwd = keep & (pu > pv)          # descending: backward plane
+    m = R * n_slots
+    rowbase = seg * n_slots
+    plus = np.concatenate([(rowbase + lo)[fwd], m + (rowbase + lo)[bwd]])
+    minus = np.concatenate([(rowbase + hi)[fwd], m + (rowbase + hi)[bwd]])
+    diff = np.bincount(plus, minlength=2 * m) - np.bincount(
+        minus, minlength=2 * m
+    )
+    # rows: fwd plane rounds 0..R-1, then bwd plane; each component block's
+    # entries cancel before the block ends, so one row cumsum segments cleanly
+    run = diff.reshape(2 * R, n_slots).cumsum(axis=1)
+    mx = run.max(axis=1)
+    cong = np.maximum(mx[:R], mx[R:])
+
+    out: List[Tuple[int, int, bool]] = []
+    for k in range(R):
+        if feas[k]:
+            out.append((int(dil[k]), int(cong[k]), True))
+        else:
+            out.append((_BIG, _BIG, False))
+    return out
+
+
+def _route_rounds_general(
+    topo: Topology, pair_arrays_list: Sequence[Tuple]
+) -> List[Tuple[int, int, bool]]:
+    """Batch the general shortest-path leg of :func:`_route_pairs` over many
+    rounds on ONE topology: a single predecessor-matrix walk prices every
+    round simultaneously instead of one walk per round.
+
+    ``pair_arrays_list[k]`` is round ``k``'s prebuilt ``(srcs, dsts)`` index
+    arrays (non-empty, self-pairs already dropped).  Returns one
+    ``(dilation, congestion, feasible)`` triple per round, bit-identical to
+    calling ``_route_pairs(topo, pairs, allow_fast=False)`` per round: the
+    same ``dist``/``pred`` matrices drive the same deterministic routes, the
+    per-round edge-load multisets are segment-tagged rather than recomputed.
+    The warm-replan path leans on this — a degraded standard topology must
+    re-price every distinct round of the schedule, and per-round scalar
+    walks were the dominant cost of ``planner.replan``."""
+    import numpy as np
+
+    R = len(pair_arrays_list)
+    dist, pred = _scipy_paths(topo)
+    n = topo.n
+    counts = np.asarray([s.shape[0] for s, _ in pair_arrays_list])
+    srcs = np.concatenate([s for s, _ in pair_arrays_list])
+    dsts = np.concatenate([d for _, d in pair_arrays_list])
+    seg = np.repeat(np.arange(R), counts)
+
+    d = dist[srcs, dsts]
+    finite = np.isfinite(d)
+    feas = np.bincount(seg[~finite], minlength=R) == 0
+    dil = np.zeros(R)
+    np.maximum.at(dil, seg[finite], d[finite])
+
+    # walk only the pairs of fully feasible rounds (infinite-distance pairs
+    # would never terminate; their rounds are already (_BIG, _BIG, False))
+    keep = feas[seg]
+    ws, wseg = srcs[keep], seg[keep]
+    cur = dsts[keep].copy()
+    codes: List = []
+    active = cur != ws
+    nn = n * n
+    while active.any():
+        prev = pred[ws[active], cur[active]]
+        codes.append(
+            wseg[active] * nn + prev.astype(np.int64) * n + cur[active]
+        )
+        nxt = cur.copy()
+        nxt[active] = prev
+        cur = nxt
+        active = cur != ws
+    if codes:
+        all_codes = np.concatenate(codes)
+        if R * nn <= (1 << 23):
+            # dense per-round edge-load counting: one bincount + row max
+            # beats the O(E log E) sort of np.unique at modest R·n²
+            loads = np.bincount(all_codes, minlength=R * nn)
+            cong_a = loads.reshape(R, nn).max(axis=1)
+            return [
+                (int(dil[k]), int(cong_a[k]), True) if feas[k]
+                else (_BIG, _BIG, False)
+                for k in range(R)
+            ]
+        uniq, cnts = np.unique(all_codes, return_counts=True)
+        useg = uniq // nn  # ascending (uniq is sorted)
+        bounds = np.searchsorted(useg, np.arange(R + 1))
+    else:  # every round infeasible (or all pairs self-pairs, excluded above)
+        cnts = np.zeros(0, dtype=np.int64)
+        bounds = np.zeros(R + 1, dtype=np.int64)
+
+    out: List[Tuple[int, int, bool]] = []
+    for k in range(R):
+        if not feas[k]:
+            out.append((_BIG, _BIG, False))
+            continue
+        block = cnts[bounds[k]:bounds[k + 1]]
+        cong = int(block.max()) if block.shape[0] else 0
+        out.append((int(dil[k]), cong, True))
+    return out
+
+
 def pairs_of(rnd: Round) -> List[Tuple[int, int]]:
-    """The (src, dst) pairs of a round that actually move data."""
-    return [(t.src, t.dst) for t in rnd.transfers if t.src != t.dst]
+    """The (src, dst) pairs of a round that actually move data.
+
+    Memoized on the round itself (schedules are memoized too, so planners
+    keep re-pricing the same ``Round`` objects); callers must not mutate
+    the returned list."""
+    cached = rnd.__dict__.get("_pairs")
+    if cached is None:
+        cached = [(t.src, t.dst) for t in rnd.transfers if t.src != t.dst]
+        object.__setattr__(rnd, "_pairs", cached)
+    return cached
 
 
 # Bounded LRU over (n, edges, pair-multiset) → per-directed-edge loads.
@@ -567,12 +789,15 @@ def _route_pairs(
 class StructureStats:
     """Hit/miss accounting for :class:`StructureTable`.  ``misses`` is the
     number of actual routing computations (the quantity the planner
-    benchmarks report as *routing calls*)."""
+    benchmarks report as *routing calls*); ``bytes`` is the table's current
+    estimated key+value footprint (what size-aware eviction charges
+    against)."""
 
     hits: int
     misses: int
     size: int
     evictions: int = 0
+    bytes: int = 0
 
     @property
     def routing_calls(self) -> int:
@@ -592,18 +817,37 @@ class StructureTable:
 
     Lock-guarded bounded LRU (same discipline as ``_SP_CACHE``): sessions
     may plan from multiple threads, and eviction drops only the
-    least-recently-used entry.
+    least-recently-used entry.  Eviction is *size-aware*: each entry is
+    charged by the estimated bytes of its key (the dominant cost — a key
+    holds a topology edge-set plus a round pair-multiset, both O(n) tuples
+    of tuples), so an n=1024 structure phase whose keys are ~100 KiB each
+    cannot pin gigabytes behind an entry-count limit sized for n=16.
     """
 
-    def __init__(self, max_entries: int = 65536) -> None:
+    # key footprint ≈ per-element tuple/int overhead × (edges + pairs) + slack
+    _CHARGE_PER_ELEM = 120
+    _CHARGE_BASE = 512
+
+    def __init__(
+        self, max_entries: int = 65536, max_bytes: int = 128 * 1024 * 1024
+    ) -> None:
         if max_entries < 1:
             raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        if max_bytes < 1:
+            raise ValueError(f"max_bytes must be >= 1, got {max_bytes}")
         self._table: "OrderedDict[Tuple, Tuple[int, int, bool]]" = OrderedDict()
         self.max_entries = max_entries
+        self.max_bytes = max_bytes
         self._lock = threading.Lock()
         self._hits = 0
         self._misses = 0
         self._evictions = 0
+        self._bytes = 0
+
+    @classmethod
+    def _charge(cls, full_key: Tuple) -> int:
+        _, edges, pair_key = full_key
+        return cls._CHARGE_PER_ELEM * (len(edges) + len(pair_key)) + cls._CHARGE_BASE
 
     def lookup(
         self, topo: Topology, key: PairKey
@@ -625,10 +869,37 @@ class StructureTable:
     ) -> None:
         full_key = (topo.n, topo.edges, key)
         with self._lock:
+            if full_key not in self._table:
+                self._bytes += self._charge(full_key)
             self._table[full_key] = factors
             self._table.move_to_end(full_key)
-            while len(self._table) > self.max_entries:
-                self._table.popitem(last=False)
+            while len(self._table) > 1 and (
+                len(self._table) > self.max_entries or self._bytes > self.max_bytes
+            ):
+                victim, _ = self._table.popitem(last=False)
+                self._bytes -= self._charge(victim)
+                self._evictions += 1
+
+    def store_many(
+        self,
+        topo: Topology,
+        items: Sequence[Tuple[PairKey, Tuple[int, int, bool]]],
+    ) -> None:
+        """Bulk :meth:`store` for one topology under a single lock round —
+        batch routers deposit a whole schedule's worth of rounds at once."""
+        n, edges = topo.n, topo.edges
+        with self._lock:
+            for key, factors in items:
+                full_key = (n, edges, key)
+                if full_key not in self._table:
+                    self._bytes += self._charge(full_key)
+                self._table[full_key] = factors
+                self._table.move_to_end(full_key)
+            while len(self._table) > 1 and (
+                len(self._table) > self.max_entries or self._bytes > self.max_bytes
+            ):
+                victim, _ = self._table.popitem(last=False)
+                self._bytes -= self._charge(victim)
                 self._evictions += 1
 
     def factors(
@@ -659,12 +930,14 @@ class StructureTable:
             self._hits = 0
             self._misses = 0
             self._evictions = 0
+            self._bytes = 0
 
     @property
     def stats(self) -> StructureStats:
         with self._lock:
             return StructureStats(
-                self._hits, self._misses, len(self._table), self._evictions
+                self._hits, self._misses, len(self._table), self._evictions,
+                self._bytes,
             )
 
 
@@ -689,6 +962,8 @@ def clear_structure_caches(keep_shortest_paths: bool = False) -> None:
             _SP_CACHE.clear()
     with _LINEAR_CACHE_LOCK:
         _LINEAR_CACHE.clear()
+    with _BIDI_CACHE_LOCK:
+        _BIDI_CACHE.clear()
     with _EDGE_LOAD_CACHE_LOCK:
         _EDGE_LOAD_CACHE.clear()
 

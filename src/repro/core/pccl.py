@@ -27,12 +27,15 @@ from . import schedules as S
 from .cost_model import HardwareParams, ScheduleCost, ideal_cost, schedule_cost_fixed
 from .planner import (
     ConcurrentPlan,
+    HierarchicalPlan,
     Plan,
     PlanStructure,
     _plans_from_structure,
     build_structure,
     plan_concurrent,
+    plan_hierarchical,
     plan_sweep,
+    replan,
 )
 from .schedules import Groups, Schedule, replicate_groups
 from .topology import Topology, ring, standard_topologies
@@ -42,7 +45,9 @@ from .topology import Topology, ring, standard_topologies
 class PcclPlan:
     request: "CollectiveRequest"
     schedule: Schedule
-    plan: Plan
+    # flat exact-DP plan, or a stitched two-level plan (same accounting
+    # surface: total_cost / num_reconfigs / final_topology / breakdown)
+    plan: "Plan | HierarchicalPlan"
     candidates: Tuple[Tuple[str, float], ...]  # (algorithm, planned cost)
 
     @property
@@ -217,6 +222,103 @@ def plan_collective_sweep(
         assert b is not None
         out.append(PcclPlan(b.request, b.schedule, b.plan, tuple(c)))
     return out
+
+
+def plan_collective_hierarchical(
+    request: CollectiveRequest,
+    g0: Topology,
+    hw: HardwareParams,
+    standard: Optional[Sequence[Topology]] = None,
+    dims: Optional[Sequence[int]] = None,
+    *,
+    pods: Optional[Sequence[Sequence[int]]] = None,
+    pod_size: Optional[int] = None,
+) -> PcclPlan:
+    """Plan one collective through the two-level hierarchical path
+    (:func:`repro.core.planner.plan_hierarchical`), arbitrating candidate
+    algorithms by stitched cost exactly like :func:`plan_collective` does by
+    flat cost.
+
+    This is the scaling path: flat exact planning is O(rounds · states²)
+    with states ~ n, while the hierarchical path plans one representative
+    pod and one P-super-rank coarse phase.  With a single pod it degrades
+    to the flat exact DP (bit-identical plan inside ``.plan.pod_plans[0]``).
+    """
+    if standard is None:
+        standard = default_standard_set(request.n)
+    best: Optional[PcclPlan] = None
+    cands: List[Tuple[str, float]] = []
+    for algo in candidate_algorithms(request.collective, request.n, request.algorithm):
+        algo_dims, usable = candidate_dims(algo, request.n, dims)
+        if not usable:
+            continue
+        schedule = S.get_schedule(
+            request.collective, algo, request.n, request.buffer_bytes,
+            dims=algo_dims,
+        )
+        hp = plan_hierarchical(
+            g0, standard, schedule, hw, pods=pods, pod_size=pod_size
+        )
+        cands.append((algo, hp.total_cost))
+        if best is None or hp.total_cost < best.cost:
+            best = PcclPlan(request, schedule, hp, ())
+    if best is None:
+        raise ValueError(
+            f"no usable candidate algorithm for {request.collective} at "
+            f"n={request.n}"
+        )
+    return PcclPlan(best.request, best.schedule, best.plan, tuple(cands))
+
+
+def replan_collective(
+    request: CollectiveRequest,
+    g0: Topology,
+    hw: HardwareParams,
+    standard: Optional[Sequence[Topology]] = None,
+    dims: Optional[Sequence[int]] = None,
+    *,
+    changed_edges: Sequence[Tuple[int, int]] = (),
+    changed_ranks: Sequence[int] = (),
+    structure_for: Optional[Callable[[str], Optional[PlanStructure]]] = None,
+    on_structure: Optional[Callable[[str, PlanStructure], None]] = None,
+) -> PcclPlan:
+    """Warm-replan one collective after a fabric mutation.
+
+    ``g0``/``standard`` are the *pre-failure* fabric inputs; candidate
+    algorithms whose structures are available via ``structure_for`` take the
+    incremental O(affected-states) path of :func:`repro.core.planner.replan`
+    (cold building otherwise), and ``on_structure`` receives each
+    post-mutation structure for recaching.  Arbitration across candidates
+    matches :func:`plan_collective` on the degraded fabric exactly.
+    """
+    if standard is None:
+        standard = default_standard_set(request.n)
+    best: Optional[PcclPlan] = None
+    cands: List[Tuple[str, float]] = []
+    for algo in candidate_algorithms(request.collective, request.n, request.algorithm):
+        algo_dims, usable = candidate_dims(algo, request.n, dims)
+        if not usable:
+            continue
+        schedule = S.get_schedule(
+            request.collective, algo, request.n, request.buffer_bytes,
+            dims=algo_dims,
+        )
+        structure = structure_for(algo) if structure_for is not None else None
+        p, new_structure = replan(
+            g0, standard, schedule, hw, structure,
+            changed_edges=changed_edges, changed_ranks=changed_ranks,
+        )
+        if on_structure is not None:
+            on_structure(algo, new_structure)
+        cands.append((algo, p.total_cost))
+        if best is None or p.total_cost < best.cost:
+            best = PcclPlan(request, schedule, p, ())
+    if best is None:
+        raise ValueError(
+            f"no usable candidate algorithm for {request.collective} at "
+            f"n={request.n}"
+        )
+    return PcclPlan(best.request, best.schedule, best.plan, tuple(cands))
 
 
 # --------------------------------------------------------- concurrent groups

@@ -68,7 +68,7 @@ from __future__ import annotations
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass, replace
-from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -85,8 +85,18 @@ from .cost_model import (
     round_cost_from_factors,
     round_structure_key,
 )
-from .schedules import Round, Schedule
-from .topology import Edge, Topology
+from .schedules import Round, Schedule, Transfer, pod_subschedules
+from .topology import (
+    Edge,
+    Topology,
+    degrade_topology,
+    derive_pods,
+    induced_topology,
+    quotient_topology,
+    ring,
+    square_dims2,
+    torus2d,
+)
 
 
 @dataclass(frozen=True)
@@ -201,10 +211,21 @@ class PlanStructure:
     # trans bakes in these reconfig params, g0_idx this start state
     g0_edges: FrozenSet[Edge] = frozenset()
     reconfig_params: Tuple[float, Optional[float]] = (0.0, None)
+    # edge-sets of standard topologies dropped by the dead-state prune
+    # (infeasible for every round, e.g. disconnected by link failures) —
+    # recorded so structure reuse can still validate its standard set
+    pruned_standard: FrozenSet[FrozenSet[Edge]] = frozenset()
+    # the exact Schedule object this structure was built from, when known:
+    # ``_check_structure`` skips the O(rounds × pairs) round-key replay on an
+    # identity hit (the session's ``get_schedule`` memo hands every caller
+    # one shared object, so warm replans validate in O(1))
+    schedule: Optional[Schedule] = None
 
 
 def _round_structures(
-    states: Sequence[TopoState], schedule: Schedule
+    states: Sequence[TopoState],
+    schedule: Schedule,
+    round_keys: Optional[Tuple] = None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, Tuple]:
     """(dilation, congestion, feasible, round_keys): Algorithm 2's integer
     factors for every (round, state).
@@ -212,14 +233,70 @@ def _round_structures(
     Structurally identical rounds (same pair multiset) are routed once and
     their rows copied — a ring schedule's n−1 rounds are one routing query
     per state.  Individual (topology, pair-set) queries additionally hit the
-    process-wide ``STRUCTURE_TABLE``."""
-    from .cost_model import _StackedLinear, _linear_labels, _route_linear_batch
+    process-wide ``STRUCTURE_TABLE``.
+
+    Non-linear states carry undirected-component labels computed once per
+    state; a (state, round) combo whose pairs cross components is marked
+    infeasible without routing (no shortest-path walk) — the common case on
+    degraded fabrics and coarsened inter-pod graphs, where disconnected
+    candidates would otherwise each pay a scipy APSP.  The rounds a
+    non-linear state still has to route after the table and component
+    shortcuts are priced in one batched predecessor walk
+    (``_route_rounds_general``), not one scalar walk per round."""
+    from .cost_model import (
+        _StackedLinear,
+        _bidi_path_labels,
+        _linear_labels,
+        _route_linear_batch,
+        _route_rounds_bidi,
+        _route_rounds_general,
+    )
+    from .topology import _BIG
 
     n_rounds = len(schedule.rounds)
     ns = len(states)
-    dil = np.zeros((n_rounds, ns), dtype=np.int64)
-    cong = np.zeros((n_rounds, ns), dtype=np.int64)
-    feas = np.ones((n_rounds, ns), dtype=bool)
+
+    # --- deduplicate rounds by pair multiset; route only the distinct ones,
+    # then expand rows back to the full round axis with one fancy index.
+    # A caller that already knows the per-round keys (replan reuses the
+    # validated ``structure.round_keys``) passes them in and skips the
+    # O(rounds × pairs) key derivation.
+    keys: List = []
+    first: Dict = {}
+    didx = np.empty(n_rounds, dtype=np.int64)
+    d_keys: List = []
+    d_arrays: List = []  # (srcs, dsts) index arrays, or None for empty rounds
+    for i, rnd in enumerate(schedule.rounds):
+        pairs: Optional[List[Tuple[int, int]]] = None
+        if round_keys is not None:
+            key = round_keys[i]
+        else:
+            pairs = pairs_of(rnd)
+            key = round_structure_key(pairs)
+        keys.append(key)
+        k = first.get(key)
+        if k is None:
+            k = len(d_keys)
+            first[key] = k
+            d_keys.append(key)
+            arrs = rnd.__dict__.get("_pair_arrays", False)
+            if arrs is False:  # memoized alongside pairs_of: same rounds
+                if pairs is None:  # get re-priced across plans and replans
+                    pairs = pairs_of(rnd)
+                if pairs:
+                    arrs = (
+                        np.asarray([p[0] for p in pairs]),
+                        np.asarray([p[1] for p in pairs]),
+                    )
+                else:
+                    arrs = None
+                object.__setattr__(rnd, "_pair_arrays", arrs)
+            d_arrays.append(arrs)
+        didx[i] = k
+    nd = len(d_keys)
+    ddil = np.zeros((nd, ns), dtype=np.int64)
+    dcong = np.zeros((nd, ns), dtype=np.int64)
+    dfeas = np.ones((nd, ns), dtype=bool)
 
     # Linear states (permutation ideal graphs — usually most of the state
     # set) are routed against each distinct round structure in ONE batched
@@ -234,51 +311,99 @@ def _round_structures(
             lin_labels.append(lab)
         else:
             other_states.append(s)
-    stacked = _StackedLinear(lin_labels) if len(lin_states) > 1 else None
+    stacked = _StackedLinear(lin_labels) if lin_states else None
 
-    keys = []
-    first_row: Dict = {}
-    for i, rnd in enumerate(schedule.rounds):
-        pairs = pairs_of(rnd)
-        key = round_structure_key(pairs)
-        keys.append(key)
-        j = first_row.get(key)
-        if j is not None:
-            dil[i] = dil[j]
-            cong[i] = cong[j]
-            feas[i] = feas[j]
+    for k in range(nd):
+        if d_arrays[k] is None:  # empty round: (0, 0, True) on every topology
             continue
-        first_row[key] = i
-        if not pairs:  # empty round: (0, 0, True) on every topology
+        if stacked is None:
+            break
+        key = d_keys[k]
+        srcs, dsts = d_arrays[k]
+        cached = {}
+        for s in lin_states:
+            hit = STRUCTURE_TABLE.lookup(s.topo, key)
+            if hit is not None:
+                cached[s.idx] = hit
+        if len(cached) == len(lin_states):
+            for s_idx, (d, c, ok) in cached.items():
+                ddil[k, s_idx], dcong[k, s_idx], dfeas[k, s_idx] = d, c, ok
+        else:
+            bd, bc, bf = _route_linear_batch(stacked, srcs, dsts)
+            for t, s in enumerate(lin_states):
+                f3 = (int(bd[t]), int(bc[t]), bool(bf[t]))
+                if s.idx not in cached:
+                    STRUCTURE_TABLE.store(s.topo, key, f3)
+                ddil[k, s.idx], dcong[k, s.idx], dfeas[k, s.idx] = f3
+
+    # Non-linear states: table lookups and the cross-component shortcut
+    # first; whatever survives is routed in ONE batched shortest-path walk
+    # per state over all its uncached distinct rounds (the warm-replan
+    # path's dominant cost was one scalar walk per round here).
+    for s in other_states:
+        # bidirectional path forests (a ring that lost a link — the typical
+        # degraded fabric) route by position arithmetic, no path walk and no
+        # per-round component prefilter (the router prices infeasibility)
+        bidi = _bidi_path_labels(s.topo)
+        lab: Optional[np.ndarray] = None
+        pending: List[int] = []
+        for k in range(nd):
+            if d_arrays[k] is None:
+                continue
+            f3 = STRUCTURE_TABLE.lookup(s.topo, d_keys[k])
+            if f3 is None:
+                if bidi is None:
+                    if lab is None:
+                        lab = _undirected_components(s.topo)
+                    srcs, dsts = d_arrays[k]
+                    if (lab[srcs] != lab[dsts]).any():
+                        # a pair crosses undirected components: unroutable
+                        # in any direction, same verdict every routing path
+                        # returns
+                        f3 = (_BIG, _BIG, False)
+                        STRUCTURE_TABLE.store(s.topo, d_keys[k], f3)
+                    else:
+                        pending.append(k)
+                        continue
+                else:
+                    pending.append(k)
+                    continue
+            ddil[k, s.idx], dcong[k, s.idx], dfeas[k, s.idx] = f3
+        if not pending:
             continue
-        arrays = (
-            np.asarray([p[0] for p in pairs]),
-            np.asarray([p[1] for p in pairs]),
+        if bidi is not None:
+            routed = _route_rounds_bidi(bidi, [d_arrays[k] for k in pending])
+        else:
+            routed = _route_rounds_general(
+                s.topo, [d_arrays[k] for k in pending]
+            )
+        STRUCTURE_TABLE.store_many(
+            s.topo, [(d_keys[k], f3) for k, f3 in zip(pending, routed)]
         )
-        scalar_states: Sequence[TopoState] = states
-        if stacked is not None:
-            scalar_states = other_states
-            cached = {}
-            for s in lin_states:
-                hit = STRUCTURE_TABLE.lookup(s.topo, key)
-                if hit is not None:
-                    cached[s.idx] = hit
-            if len(cached) == len(lin_states):
-                for s_idx, (d, c, ok) in cached.items():
-                    dil[i, s_idx], cong[i, s_idx], feas[i, s_idx] = d, c, ok
-            else:
-                bd, bc, bf = _route_linear_batch(stacked, arrays[0], arrays[1])
-                for t, s in enumerate(lin_states):
-                    f3 = (int(bd[t]), int(bc[t]), bool(bf[t]))
-                    if s.idx not in cached:
-                        STRUCTURE_TABLE.store(s.topo, key, f3)
-                    dil[i, s.idx], cong[i, s.idx], feas[i, s.idx] = f3
-        for s in scalar_states:
-            d, c, ok = STRUCTURE_TABLE.factors(s.topo, pairs, key, arrays)
-            dil[i, s.idx] = d
-            cong[i, s.idx] = c
-            feas[i, s.idx] = ok
-    return dil, cong, feas, tuple(keys)
+        for k, f3 in zip(pending, routed):
+            ddil[k, s.idx], dcong[k, s.idx], dfeas[k, s.idx] = f3
+
+    return ddil[didx], dcong[didx], dfeas[didx], tuple(keys)
+
+
+def _undirected_components(topo: Topology) -> np.ndarray:
+    """Undirected connected-component label per node.  A pair whose endpoints
+    sit in different components is unroutable regardless of direction —
+    Algorithm 2's feasibility has this as a necessary condition that needs no
+    shortest-path computation."""
+    parent = list(range(topo.n))
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for u, v in topo.edges:
+        ru, rv = find(u), find(v)
+        if ru != rv:
+            parent[ru] = rv
+    return np.asarray([find(x) for x in range(topo.n)], dtype=np.int64)
 
 
 def build_structure(
@@ -294,11 +419,11 @@ def build_structure(
     sweep."""
     states = build_states(g0, standard, schedule)
     dil, cong, feas, keys = _round_structures(states, schedule)
+    states, dil, cong, feas, pruned = _prune_dead_states(
+        states, g0, dil, cong, feas
+    )
     trans = _transition_costs(states, hw)
-    enterable = np.array(
-        [[s.enterable_at(i) for s in states] for i in range(len(schedule.rounds))],
-        dtype=bool,
-    ).reshape(len(schedule.rounds), len(states))
+    enterable = _enterable_mask(states, len(schedule.rounds))
     return PlanStructure(
         states=tuple(states),
         g0_idx=_g0_state(states, g0),
@@ -311,16 +436,114 @@ def build_structure(
         round_keys=keys,
         g0_edges=g0.edges,
         reconfig_params=(hw.reconfig_delay, hw.reconfig_delay_per_link),
+        pruned_standard=pruned,
+        schedule=schedule,
     )
+
+
+def _enterable_mask(states: Sequence[TopoState], n_rounds: int) -> np.ndarray:
+    """(rounds × states) Eq. 5 entry mask, column-scattered rather than
+    evaluated per cell (R·ns ``enterable_at`` calls add up at n≥1024)."""
+    ent = np.zeros((n_rounds, len(states)), dtype=bool)
+    for s in states:
+        if s.standard:
+            ent[:, s.idx] = True
+        else:
+            for i in s.entry_rounds:
+                ent[i, s.idx] = True
+    return ent
+
+
+def _prune_dead_states(
+    states: List[TopoState],
+    g0: Topology,
+    dil: np.ndarray,
+    cong: np.ndarray,
+    feas: np.ndarray,
+) -> Tuple[List[TopoState], np.ndarray, np.ndarray, np.ndarray,
+           FrozenSet[FrozenSet[Edge]]]:
+    """Drop candidate states that are infeasible for *every* round, before
+    the transition table is built — each dead state would otherwise cost a
+    row and column of the ns² table plus a DP lane while never being part
+    of any finite-cost plan.  G0 is always kept (it is the start state even
+    when a degraded fabric cannot route a single round).  Ideal-graph states
+    are feasible at their own entry round by construction, so on a healthy
+    fabric the mask never fires and plans are bit-identical with or without
+    this pass; what it prunes in practice are standard/initial topologies
+    disconnected by link failures (``replan``) and coarse super-rank
+    candidates that cannot carry a boundary round (``plan_hierarchical``)."""
+    if feas.size == 0:  # no rounds: nothing to judge feasibility against
+        return states, dil, cong, feas, frozenset()
+    keep = feas.any(axis=0)
+    keep[_g0_state(states, g0)] = True
+    if keep.all():
+        return states, dil, cong, feas, frozenset()
+    pruned = frozenset(s.topo.edges for s in states if not keep[s.idx])
+    states = [
+        replace(s, idx=k)
+        for k, s in enumerate(s for s in states if keep[s.idx])
+    ]
+    return states, dil[:, keep], cong[:, keep], feas[:, keep], pruned
 
 
 # Bounded LRU over (state edge-sets, reconfig params) → transition matrix.
 # A session sweeping buffer sizes re-plans the same (states, hw) pair per
-# size point; the table is dense but tiny (ns² floats), so memoizing it
+# size point; the table is dense but small (ns² floats), so memoizing it
 # behind the same lock/LRU discipline as _SP_CACHE removes the rebuild.
+# Eviction is size-aware on top of the entry count: an entry is charged its
+# array bytes plus its key's edge-set footprint, so 64 n=1024 entries
+# (each key alone holds ~1k-edge topologies) cannot pin gigabytes.
 _TRANS_CACHE: "OrderedDict[Tuple, np.ndarray]" = OrderedDict()
 _TRANS_CACHE_MAX = 64
+_TRANS_CACHE_MAX_BYTES = 64 * 1024 * 1024
+_TRANS_CACHE_BYTES = [0]  # mutable cell, guarded by _TRANS_CACHE_LOCK
 _TRANS_CACHE_LOCK = threading.Lock()
+
+
+def _trans_entry_charge(key: Tuple, arr: np.ndarray) -> int:
+    edge_sets = key[0]
+    return int(arr.nbytes) + 120 * sum(len(es) for es in edge_sets) + 512
+
+
+def trans_cache_stats() -> Tuple[int, int]:
+    """(entries, estimated bytes) currently held by the transition memo."""
+    with _TRANS_CACHE_LOCK:
+        return len(_TRANS_CACHE), _TRANS_CACHE_BYTES[0]
+
+
+def _transition_costs_update(
+    old_trans: np.ndarray,
+    states: Sequence[TopoState],
+    changed_idx: Sequence[int],
+    hw: HardwareParams,
+) -> np.ndarray:
+    """Rows/columns of the transition table touched by ``changed_idx``,
+    recomputed against ``old_trans`` (the pre-mutation table for the same
+    state positions).  Exactly the arithmetic of :func:`_transition_costs`
+    restricted to the affected pairs — ``|E_p Δ E_s|`` via set symmetric
+    difference instead of the full incidence matmul — so a warm replan does
+    O(changed · ns) set work, not O(ns²) + an O(ns · |E|) matrix build."""
+    trans = np.array(old_trans)  # writable copy; old_trans is read-only
+    edge_sets = [s.topo.edges for s in states]
+    for c in changed_idx:
+        ec = edge_sets[c]
+        if hw.reconfig_delay_per_link is None:
+            # serial mode needs only 1[E_c ≠ E_s], and state edge sets are
+            # pairwise distinct by construction: every off-diagonal entry
+            # is the flat delay, no symmetric differences at all
+            row = np.full(len(edge_sets), hw.reconfig_delay)
+            row[c] = 0.0
+        else:
+            cnt = np.fromiter(
+                (len(ec ^ es) for es in edge_sets),
+                dtype=np.float64,
+                count=len(edge_sets),
+            )
+            row = np.minimum(hw.reconfig_delay, hw.reconfig_delay_per_link * cnt)
+        trans[c, :] = row
+        trans[:, c] = row
+    trans.setflags(write=False)
+    return trans
 
 
 def _transition_costs(states: Sequence[TopoState], hw: HardwareParams) -> np.ndarray:
@@ -364,10 +587,16 @@ def _transition_costs(states: Sequence[TopoState], hw: HardwareParams) -> np.nda
     trans.setflags(write=False)
 
     with _TRANS_CACHE_LOCK:
+        if key not in _TRANS_CACHE:
+            _TRANS_CACHE_BYTES[0] += _trans_entry_charge(key, trans)
         _TRANS_CACHE[key] = trans
         _TRANS_CACHE.move_to_end(key)
-        while len(_TRANS_CACHE) > _TRANS_CACHE_MAX:
-            _TRANS_CACHE.popitem(last=False)
+        while len(_TRANS_CACHE) > 1 and (
+            len(_TRANS_CACHE) > _TRANS_CACHE_MAX
+            or _TRANS_CACHE_BYTES[0] > _TRANS_CACHE_MAX_BYTES
+        ):
+            vkey, varr = _TRANS_CACHE.popitem(last=False)
+            _TRANS_CACHE_BYTES[0] -= _trans_entry_charge(vkey, varr)
     return trans
 
 
@@ -378,6 +607,7 @@ def clear_planner_caches(keep_shortest_paths: bool = False) -> None:
     (see ``cost_model.clear_structure_caches``)."""
     with _TRANS_CACHE_LOCK:
         _TRANS_CACHE.clear()
+        _TRANS_CACHE_BYTES[0] = 0
     clear_structure_caches(keep_shortest_paths=keep_shortest_paths)
 
 
@@ -450,31 +680,67 @@ def _plans_from_structure(
     f[:, 0, enter0] = cost[:, 0, enter0] + trans[g0_idx, enter0][None, :]
     parent[:, 0, enter0] = g0_idx
 
-    for i in range(1, n_rounds):
-        prev = f[:, i - 1, :]                        # (K, ns)
-        if hw.overlap:
-            eff = np.maximum(0.0, trans[None, :, :] - cost[:, i - 1, :, None])
-        else:
-            eff = trans[None, :, :]
-        cand = prev[:, :, None] + eff                # cand[k, p, s]
-        best_p = cand.argmin(axis=1)                 # (K, ns)
-        best = np.take_along_axis(cand, best_p[:, None, :], axis=1)[:, 0, :]
-        # staying put (p == s, zero transition) wins ties, matching Eq. 7's
-        # charge-only-on-change semantics
-        stay = cand[:, idx, idx]
-        prefer_stay = stay <= best
-        best = np.where(prefer_stay, stay, best)
-        best_p = np.where(prefer_stay, idx[None, :], best_p)
+    if K == 1:
+        # 2-D specialization of the loop below for the single-schedule case
+        # (every plan()/replan() call): diagonal views instead of fancy
+        # indexing, full-width wheres instead of masked assignment, no K
+        # broadcasting.  Same candidate sums and tie-breaking element for
+        # element — plan_sweep's sweep ≡ loop tests pin the two paths to
+        # each other bit-for-bit.
+        f0, parent0, cost0 = f[0], parent[0], cost[0]
+        eff = trans
+        cand = np.empty((ns, ns))
+        for i in range(1, n_rounds):
+            prev = f0[i - 1]
+            if hw.overlap:
+                eff = np.maximum(0.0, trans - cost0[i - 1][:, None])
+            np.add(prev[:, None], eff, out=cand)     # cand[p, s]
+            best_p = cand.argmin(axis=0)
+            best = cand.min(axis=0)
+            stay = np.diagonal(cand)
+            prefer_stay = stay <= best
+            best = np.where(prefer_stay, stay, best)
+            best_p = np.where(prefer_stay, idx, best_p)
 
-        enterable = structure.enterable[i]
-        f[:, i, enterable] = best[:, enterable] + cost[:, i, enterable]
-        parent[:, i, enterable] = best_p[:, enterable]
-        carry = ~enterable
-        if carry.any():
-            # Eq. 5: ideal graphs outside their entry round carry only
-            fin = np.isfinite(prev[:, carry])
-            f[:, i, carry] = np.where(fin, prev[:, carry] + cost[:, i, carry], INF)
-            parent[:, i, carry] = np.where(fin, idx[carry][None, :], -1)
+            enterable = structure.enterable[i]
+            fin = np.isfinite(prev)
+            f0[i] = np.where(
+                enterable, best + cost0[i],
+                np.where(fin, prev + cost0[i], INF),
+            )
+            parent0[i] = np.where(
+                enterable, best_p, np.where(fin, idx, -1)
+            )
+    else:
+        eff = trans[None, :, :]  # constant unless overlap re-derives per round
+        cand = np.empty((K, ns, ns))
+        for i in range(1, n_rounds):
+            prev = f[:, i - 1, :]                    # (K, ns)
+            if hw.overlap:
+                eff = np.maximum(
+                    0.0, trans[None, :, :] - cost[:, i - 1, :, None]
+                )
+            np.add(prev[:, :, None], eff, out=cand)  # cand[k, p, s]
+            best_p = cand.argmin(axis=1)             # (K, ns)
+            best = cand.min(axis=1)  # same element argmin names: first min
+            # staying put (p == s, zero transition) wins ties, matching
+            # Eq. 7's charge-only-on-change semantics
+            stay = cand[:, idx, idx]
+            prefer_stay = stay <= best
+            best = np.where(prefer_stay, stay, best)
+            best_p = np.where(prefer_stay, idx[None, :], best_p)
+
+            enterable = structure.enterable[i]
+            f[:, i, enterable] = best[:, enterable] + cost[:, i, enterable]
+            parent[:, i, enterable] = best_p[:, enterable]
+            carry = ~enterable
+            if carry.any():
+                # Eq. 5: ideal graphs outside their entry round carry only
+                fin = np.isfinite(prev[:, carry])
+                f[:, i, carry] = np.where(
+                    fin, prev[:, carry] + cost[:, i, carry], INF
+                )
+                parent[:, i, carry] = np.where(fin, idx[carry][None, :], -1)
 
     last = f[:, n_rounds - 1, :].argmin(axis=1)      # (K,)
     plans: List[Plan] = []
@@ -568,7 +834,10 @@ def _check_structure(
         )
     std_edges = {s.topo.edges for s in structure.states if s.standard}
     for topo in standard:
-        if topo.edges not in std_edges:
+        if (
+            topo.edges not in std_edges
+            and topo.edges not in structure.pruned_standard
+        ):
             raise ValueError(
                 f"standard topology {topo.name} is not a state of the "
                 "supplied structure"
@@ -578,6 +847,11 @@ def _check_structure(
             f"template has {len(schedule.rounds)} rounds; supplied "
             f"structure has {structure.n_rounds}"
         )
+    if structure.schedule is schedule:
+        # built from this exact (immutable) Schedule object — the per-round
+        # key replay below would be comparing the schedule with itself.  The
+        # common warm path: get_schedule's memo hands out shared objects.
+        return
     for i, rnd in enumerate(schedule.rounds):
         if round_structure_key(pairs_of(rnd)) != structure.round_keys[i]:
             raise ValueError(
@@ -647,6 +921,347 @@ def plan_sweep(
                         "does not match the structure's pair multiset"
                     )
     return _plans_from_structure(structure, schedules, hw)
+
+
+# ------------------------------------------------- hierarchical planning
+
+
+@dataclass(frozen=True)
+class PodPlan:
+    """One pod's slice of a hierarchical plan: the exact DP's plan for the
+    pod's intra-pod sub-schedule, expressed over local rank ids
+    (``ranks[local]`` is the global rank).  Structurally identical pods
+    share one underlying :class:`Plan` object."""
+
+    pod_index: int
+    ranks: Tuple[int, ...]
+    plan: Plan
+
+
+@dataclass(frozen=True)
+class HierarchicalPlan:
+    """A stitched two-level plan: per-pod exact DP plans plus one coarse
+    inter-pod plan over the super-rank (quotient) graph.
+
+    Execution model priced here: pods own disjoint circuits and reconfigure
+    independently, the boundary network is one more independent group, and
+    every round is barrier-synced across groups — so round ``i`` lasts as
+    long as its slowest group's reconfiguration + communication,
+    ``round_costs[i] = max over groups of (steps[i].cost + reconfig)``, and
+    ``total_cost = Σ_i round_costs[i]``.  The inter-pod phase is
+    *capacity-optimistic*: each distinct pod pair of a round becomes one
+    coarse transfer at the full round payload, so multiple rank pairs
+    crossing the same pod pair are assumed to share aggregated boundary
+    bandwidth.  ``analysis.invariants.check_hierarchical_plan`` replays both
+    levels plus this stitching arithmetic.
+
+    With one pod there is no decomposition: ``pod_plans[0].plan`` *is* the
+    flat exact-DP plan (bit-identical steps and totals) and ``inter_plan``
+    is ``None``.
+    """
+
+    schedule: Schedule
+    hw: HardwareParams
+    pods: Tuple[Tuple[int, ...], ...]
+    rep: Tuple[int, ...]                 # pod → representative pod index
+    pod_plans: Tuple[PodPlan, ...]
+    inter_plan: Optional[Plan]
+    # per-round cross-pod traffic: sorted ((src_pod, dst_pod), multiplicity)
+    boundary: Tuple[Tuple[Tuple[Tuple[int, int], int], ...], ...]
+    round_costs: Tuple[float, ...]
+    total_cost: float
+    # like Plan.final_topology, but a stitched fabric state is not a single
+    # Topology the session can thread forward — always None
+    final_topology: Optional[Topology] = None
+
+    def groups(self) -> Tuple[Plan, ...]:
+        """The distinct per-group plans (one per pod equivalence class,
+        plus the inter-pod plan when present)."""
+        seen: Dict[int, Plan] = {}
+        for pp in self.pod_plans:
+            seen.setdefault(id(pp.plan), pp.plan)
+        out = tuple(seen.values())
+        if self.inter_plan is not None:
+            out = out + (self.inter_plan,)
+        return out
+
+    @property
+    def num_reconfigs(self) -> int:
+        return sum(g.num_reconfigs for g in self.groups())
+
+    def breakdown(self) -> Dict[str, float]:
+        pod_totals = [pp.plan.total_cost for pp in self.pod_plans]
+        return {
+            "total": self.total_cost,
+            "max_pod_total": max(pod_totals, default=0.0),
+            "inter_total": (
+                self.inter_plan.total_cost if self.inter_plan is not None else 0.0
+            ),
+            "num_pods": float(len(self.pods)),
+        }
+
+
+def _pod_standard_set(m: int) -> List[Topology]:
+    """Standard candidates for an m-node (sub-)fabric — the same ring +
+    most-square torus pair ``pccl.default_standard_set`` uses at the top
+    level (duplicates dedup away in ``build_states``)."""
+    if m < 2:
+        return []
+    std = [ring(m)]
+    a, b = square_dims2(m)
+    if a >= 2:  # a 1×m "torus" is just the ring again
+        std.append(torus2d(a, b))
+    return std
+
+
+def plan_hierarchical(
+    g0: Topology,
+    standard: Sequence[Topology],
+    schedule: Schedule,
+    hw: HardwareParams,
+    *,
+    pods: Optional[Sequence[Sequence[int]]] = None,
+    pod_size: Optional[int] = None,
+) -> HierarchicalPlan:
+    """Two-level planning: exact DP per pod, exact DP over the coarse
+    super-rank graph, stitched (see :class:`HierarchicalPlan`).
+
+    ``pods`` partitions the ranks explicitly; otherwise
+    ``topology.derive_pods(n, pod_size)`` cuts contiguous blocks aligned
+    with the fabric's torus tiles / ring segments.  Pods with identical
+    intra-pod round structure are planned once (``schedules.
+    pod_subschedules`` deduplication), so planning cost scales with the
+    number of *distinct* pod classes — typically one — plus one coarse
+    phase over ``P`` super-ranks, not with ``n``.
+
+    With ``pods=1`` (or ``pod_size=n``) this *is* the flat exact DP on the
+    caller's inputs, wrapped: same steps, same total.
+    """
+    n = schedule.n
+    if g0.n != n:
+        raise ValueError(f"G0 has n={g0.n}, schedule has n={n}")
+    if pods is None:
+        pods = derive_pods(n, pod_size)
+    else:
+        pods = tuple(tuple(p) for p in pods)
+    P = len(pods)
+    R = len(schedule.rounds)
+
+    if P == 1:
+        flat = plan(g0, standard, schedule, hw)
+        return HierarchicalPlan(
+            schedule=schedule,
+            hw=hw,
+            pods=pods,
+            rep=(0,),
+            pod_plans=(PodPlan(0, pods[0], flat),),
+            inter_plan=None,
+            boundary=tuple(() for _ in range(R)),
+            round_costs=tuple(s.total for s in flat.steps),
+            total_cost=flat.total_cost,
+        )
+
+    intra, rep, boundary = pod_subschedules(schedule, pods)
+
+    rep_plans: Dict[int, Plan] = {}
+    for p in sorted(set(rep)):
+        ranks = pods[p]
+        pod_g0 = induced_topology(g0, ranks, name=f"{g0.name}|pod{p}")
+        rep_plans[p] = plan(pod_g0, _pod_standard_set(len(ranks)), intra[p], hw)
+
+    coarse_g0 = quotient_topology(g0, pods, name=f"{g0.name}/pods")
+    # rounds crossing the same pod pairs share one coarse transfer tuple —
+    # keyed on the pairs alone, since multiplicities (which differ round to
+    # round) don't change the capacity-optimistic coarse round
+    coarse_transfers: Dict[Tuple, Tuple[Transfer, ...]] = {}
+    coarse_rounds = []
+    for i in range(R):
+        pkey = tuple(pr for pr, _cnt in boundary[i])
+        ts = coarse_transfers.get(pkey)
+        if ts is None:
+            ts = tuple(Transfer(u, v) for u, v in pkey)
+            coarse_transfers[pkey] = ts
+        coarse_rounds.append(Round(ts, schedule.rounds[i].size))
+    coarse_schedule = Schedule(
+        schedule.collective,
+        f"{schedule.algorithm}@inter",
+        P,
+        schedule.buffer_bytes,
+        tuple(coarse_rounds),
+    )
+    inter = plan(coarse_g0, _pod_standard_set(P), coarse_schedule, hw)
+
+    group_plans = [rep_plans[p] for p in sorted(set(rep))] + [inter]
+    round_costs = tuple(
+        max(gp.steps[i].total for gp in group_plans) for i in range(R)
+    )
+    return HierarchicalPlan(
+        schedule=schedule,
+        hw=hw,
+        pods=pods,
+        rep=rep,
+        pod_plans=tuple(
+            PodPlan(p, pods[p], rep_plans[rep[p]]) for p in range(P)
+        ),
+        inter_plan=inter,
+        boundary=boundary,
+        round_costs=round_costs,
+        total_cost=float(sum(round_costs)),
+    )
+
+
+# ------------------------------------------------- incremental replanning
+
+
+def replan(
+    g0: Topology,
+    standard: Sequence[Topology],
+    schedule: Schedule,
+    hw: HardwareParams,
+    structure: Optional[PlanStructure] = None,
+    *,
+    changed_edges: Iterable[Edge] = (),
+    changed_ranks: Iterable[int] = (),
+) -> Tuple[Plan, PlanStructure]:
+    """Warm replanning after a fabric mutation: O(affected states) routing
+    instead of a cold structure phase.
+
+    ``g0``/``standard`` are the *pre-failure* inputs ``structure`` was built
+    from; ``changed_edges`` (directed circuits — pass both directions of a
+    dead physical link) and ``changed_ranks`` (every incident circuit dies)
+    describe the mutation.  The fault model degrades the initial and
+    standard topologies only — round ideal graphs are what the switch
+    *programs*, so they regenerate from the schedule unchanged.
+
+    Column-level reuse: degraded states keep their position in the state
+    set, so (dilation, congestion, feasibility) columns of states whose
+    edge set did not change are copied from ``structure`` and only the
+    degraded states — typically 2–3 of hundreds — are re-routed (round
+    deduplication and the ``STRUCTURE_TABLE`` still apply).  The transition
+    table rebuild is one memoized vectorized pass.  The result is
+    bit-identical — same steps, same totals, same tie-breaks — to cold
+
+        plan(degrade(g0), [degrade(s) for s in standard], schedule, hw)
+
+    which is also the fallback whenever column reuse is unsound (no
+    ``structure`` supplied, degradation merged two states into one edge
+    set, or the supplied structure had already pruned states).  Returns
+    ``(plan, structure)`` for the degraded fabric so sessions can cache the
+    new structure for subsequent warm paths.
+    """
+    failed_e = frozenset(changed_edges)
+    failed_r = frozenset(changed_ranks)
+    d_g0 = degrade_topology(g0, failed_e, failed_r)
+    d_std = [degrade_topology(s, failed_e, failed_r) for s in standard]
+
+    def cold() -> Tuple[Plan, PlanStructure]:
+        s2 = build_structure(d_g0, d_std, schedule, hw)
+        return _plans_from_structure(s2, [schedule], hw)[0], s2
+
+    if len(schedule.rounds) == 0:
+        s2 = build_structure(d_g0, d_std, schedule, hw)
+        return Plan(schedule, hw, (), 0.0, final_topology=d_g0), s2
+    if structure is None:
+        return cold()
+    _check_structure(structure, g0, standard, schedule, hw)
+    if structure.pruned_standard:
+        # the old columns do not cover the pruned states; start clean
+        return cold()
+
+    # Reconstruct the degraded state set from the old one without replaying
+    # ``build_states`` over every round: the fault model touches only the
+    # fabric-derived states (G0 + standards, the ones flagged ``standard``),
+    # ideal-graph states regenerate from the schedule unchanged.  The
+    # rebuild-from-scratch path remains for the cases positional reuse
+    # cannot express: a degraded fabric state colliding with another
+    # state's edge set (merge), or a state that doubles as a round's ideal
+    # graph changing shape (it would split in a cold build).
+    old = structure.states
+    fresh: Optional[List[TopoState]] = None
+    degraded: Dict[int, Topology] = {}
+    # positional reuse is only sound when the old fabric states are exactly
+    # the caller's {G0} ∪ standard (the documented contract; anything else
+    # goes through the rebuild-and-compare path below)
+    split = {o.topo.edges for o in old if o.standard} != (
+        {g0.edges} | {s.edges for s in standard}
+    )
+    for o in old:
+        if split:
+            break
+        if not o.standard:
+            continue
+        d_topo = degrade_topology(o.topo, failed_e, failed_r)
+        if d_topo.edges == o.topo.edges:
+            continue
+        if o.entry_rounds:
+            split = True
+            break
+        degraded[o.idx] = d_topo
+    if not split:
+        edge_sets = [
+            degraded[o.idx].edges if o.idx in degraded else o.topo.edges
+            for o in old
+        ]
+        if len(set(edge_sets)) == len(edge_sets):
+            fresh = [
+                replace(o, topo=degraded[o.idx]) if o.idx in degraded else o
+                for o in old
+            ]
+    if fresh is None:
+        rebuilt = build_states(d_g0, d_std, schedule)
+        if len(rebuilt) != len(old) or any(
+            f.standard != o.standard or f.entry_rounds != o.entry_rounds
+            for f, o in zip(rebuilt, old)
+        ):
+            # degradation merged or split states: positional column reuse
+            # is no longer sound
+            return cold()
+        fresh = rebuilt
+        changed_idx = [
+            f.idx for f, o in zip(fresh, old) if f.topo.edges != o.topo.edges
+        ]
+    else:
+        changed_idx = sorted(degraded)
+    if not changed_idx:
+        return _plans_from_structure(structure, [schedule], hw)[0], structure
+
+    dil = structure.dilation.copy()
+    cong = structure.congestion.copy()
+    feas = structure.feasible.copy()
+    sub = [replace(fresh[i], idx=j) for j, i in enumerate(changed_idx)]
+    sdil, scong, sfeas, _skeys = _round_structures(
+        sub, schedule, round_keys=structure.round_keys
+    )
+    dil[:, changed_idx] = sdil
+    cong[:, changed_idx] = scong
+    feas[:, changed_idx] = sfeas
+
+    states, dil, cong, feas, pruned = _prune_dead_states(
+        fresh, d_g0, dil, cong, feas
+    )
+    if pruned:
+        # pruning reindexed the states; positional reuse of the old
+        # transition table is off — rebuild it (memoized, vectorized)
+        trans = _transition_costs(states, hw)
+    else:
+        trans = _transition_costs_update(structure.trans, states, changed_idx, hw)
+    enterable = _enterable_mask(states, len(schedule.rounds))
+    new_structure = PlanStructure(
+        states=tuple(states),
+        g0_idx=_g0_state(states, d_g0),
+        n_rounds=structure.n_rounds,
+        dilation=dil,
+        congestion=cong,
+        feasible=feas,
+        enterable=enterable,
+        trans=trans,
+        round_keys=structure.round_keys,
+        g0_edges=d_g0.edges,
+        reconfig_params=(hw.reconfig_delay, hw.reconfig_delay_per_link),
+        pruned_standard=pruned,
+        schedule=schedule,
+    )
+    return _plans_from_structure(new_structure, [schedule], hw)[0], new_structure
 
 
 # ------------------------------------------------------------------ oracles

@@ -42,6 +42,8 @@ from __future__ import annotations
 
 import hashlib
 import math
+import threading
+from collections import OrderedDict
 from dataclasses import dataclass, field, replace
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -50,8 +52,10 @@ from .topology import Topology, from_transfers
 # --------------------------------------------------------------------------- data
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, slots=True)
 class Transfer:
+    # slots: schedules at n=1024 hold millions of transfers; dropping the
+    # per-instance dict roughly halves their footprint
     src: int
     dst: int
     chunks: Tuple[int, ...] = ()
@@ -194,42 +198,34 @@ def _chunk(d: float, n: int) -> float:
 
 
 def ring_reduce_scatter(n: int, d: float) -> Schedule:
-    """N-1 rounds; round t: rank i sends chunk (i - t) mod N to i+1, receiver
-    accumulates.  After N-1 rounds rank i holds fully reduced chunk (i+1)%n…
-    we shift so the post-condition is the canonical "rank c owns chunk c"."""
+    """N-1 rounds; round t: rank i sends the partial of chunk (i - t - 1)
+    mod N to i+1, receiver accumulates.  Chunk ids are born canonical: after
+    N-1 rounds rank i holds the fully reduced chunk i (the naive "(i - t)
+    mod N" labelling would leave rank i owning chunk i+1 and need an O(n²)
+    relabelling pass — at n=1024 that pass doubled generation time)."""
+    size = _chunk(d, n)
+    ctup = [(c,) for c in range(n)]  # chunk tuples shared across rounds
     rounds = []
     for t in range(n - 1):
         transfers = tuple(
-            Transfer(i, (i + 1) % n, chunks=((i - t) % n,), reduce=True)
+            Transfer(i, (i + 1) % n, chunks=ctup[(i - t - 1) % n], reduce=True)
             for i in range(n)
         )
-        rounds.append(Round(transfers, _chunk(d, n)))
-    # canonicalize ownership: after the loop above, rank i holds chunk
-    # (i - (n - 1) + n) % n == (i + 1) % n; relabel by shifting chunk ids so
-    # rank i ends owning chunk i.
-    shifted = []
-    for rnd in rounds:
-        shifted.append(
-            Round(
-                tuple(
-                    Transfer(t.src, t.dst, chunks=tuple((c - 1) % n for c in t.chunks), reduce=True)
-                    for t in rnd.transfers
-                ),
-                rnd.size,
-            )
-        )
-    return Schedule("reduce_scatter", "ring", n, d, tuple(shifted))
+        rounds.append(Round(transfers, size))
+    return Schedule("reduce_scatter", "ring", n, d, tuple(rounds))
 
 
 def ring_all_gather(n: int, d: float) -> Schedule:
     """N-1 rounds; round t: rank i forwards chunk (i - t) mod N to i+1."""
+    size = _chunk(d, n)
+    ctup = [(c,) for c in range(n)]  # chunk tuples shared across rounds
     rounds = []
     for t in range(n - 1):
         transfers = tuple(
-            Transfer(i, (i + 1) % n, chunks=((i - t) % n,), reduce=False)
+            Transfer(i, (i + 1) % n, chunks=ctup[(i - t) % n], reduce=False)
             for i in range(n)
         )
-        rounds.append(Round(transfers, _chunk(d, n)))
+        rounds.append(Round(transfers, size))
     return Schedule("all_gather", "ring", n, d, tuple(rounds))
 
 
@@ -538,14 +534,219 @@ def split_for_fanout(schedule: Schedule, tx_limit: int) -> Schedule:
     return replace(schedule, rounds=tuple(new_rounds))
 
 
+# ------------------------------------------------- hierarchical decomposition
+
+
+def pod_subschedules(
+    schedule: Schedule, pods: Sequence[Sequence[int]]
+) -> Tuple[
+    Tuple[Schedule, ...],
+    Tuple[int, ...],
+    Tuple[Tuple[Tuple[Tuple[int, int], int], ...], ...],
+]:
+    """Split a schedule into per-pod intra-pod schedules plus the cross-pod
+    boundary traffic (the two-level planner's inputs).
+
+    Returns ``(intra, rep, boundary)``:
+
+    * ``intra[p]`` — a planning-only :class:`Schedule` over pod ``p``'s local
+      rank ids with exactly the global round count (rounds with no intra-pod
+      transfers stay as empty rounds, keeping round indices aligned for
+      stitching).  Chunk metadata is dropped: these schedules price
+      communication, they are never executed.
+    * ``rep[p]`` — the representative pod whose Schedule object ``intra[p]``
+      *is*.  Pods with identical local round structure (same local pair
+      multisets every round, same size) share one object, so structurally
+      identical pods are planned once.
+    * ``boundary[i]`` — round ``i``'s cross-pod traffic as sorted
+      ``((src_pod, dst_pod), multiplicity)`` pairs.
+
+    The decomposition is conservative: every transfer of every round appears
+    either in exactly one pod's intra round or (as its pod pair) in the
+    boundary multiset — ``analysis/invariants.py`` replays this containment.
+    Rounds are deduplicated by pair multiset before any per-pod work, so
+    e.g. a ring schedule's n−1 identical rounds decompose once.
+    """
+    import numpy as np
+
+    n = schedule.n
+    pods = tuple(tuple(p) for p in pods)
+    pod_of = np.full(n, -1, dtype=np.int64)
+    local_of = np.zeros(n, dtype=np.int64)
+    for p, ranks in enumerate(pods):
+        for j, r in enumerate(ranks):
+            if not 0 <= r < n:
+                raise ValueError(f"pod {p} rank {r} outside [0,{n})")
+            if pod_of[r] != -1:
+                raise ValueError(f"rank {r} appears in two pods")
+            pod_of[r] = p
+            local_of[r] = j
+    if (pod_of == -1).any():
+        raise ValueError("pods must cover every rank exactly once")
+    P = len(pods)
+    sizes = [len(p) for p in pods]
+    mmax = max(sizes)
+
+    # One decomposition per distinct round structure, deduplicated by the
+    # pair *sequence* (cheap: a tuple of existing ints, no array build) —
+    # slightly finer than the pair multiset, but generator-built schedules
+    # emit repeated rounds in identical order, so e.g. a ring schedule's
+    # 2(n−1) rounds still collapse to one entry.  Only distinct rounds pay
+    # the numpy conversion; this pass is the only place in the planner that
+    # touches every transfer of every round.
+    from itertools import chain
+    from operator import attrgetter
+
+    get_sd = attrgetter("src", "dst")
+    R = len(schedule.rounds)
+    round_keys: List[int] = []
+    key_index: Dict[Tuple, int] = {}
+    distinct: List[Round] = []
+    d_arrays: List = []                # [distinct] -> (srcs, dsts) or None
+    for rnd in schedule.rounds:
+        prs = tuple(map(get_sd, rnd.transfers))
+        kidx = key_index.get(prs)
+        if kidx is None:
+            kidx = len(distinct)
+            key_index[prs] = kidx
+            distinct.append(rnd)
+            if prs:
+                arr = np.fromiter(
+                    chain.from_iterable(prs), dtype=np.int64, count=2 * len(prs)
+                ).reshape(-1, 2)
+                arr = arr[arr[:, 0] != arr[:, 1]]
+            if prs and len(arr):
+                d_arrays.append((arr[:, 0], arr[:, 1]))
+            else:
+                d_arrays.append(None)
+        round_keys.append(kidx)
+
+    # per distinct round: boundary pairs + a per-pod signature of the local
+    # pair multiset (sorted local codes as raw bytes — cheap to compare)
+    d_boundary: List[Tuple[Tuple[Tuple[int, int], int], ...]] = []
+    d_sigs: List[List[bytes]] = []     # [distinct][pod] -> signature
+    d_local: List[Tuple] = []          # [distinct] -> (pod-sorted arrays) for pass 2
+    for k, rnd in enumerate(distinct):
+        if d_arrays[k] is None:
+            d_boundary.append(())
+            d_sigs.append([b""] * P)
+            d_local.append(None)
+            continue
+        srcs, dsts = d_arrays[k]
+        pu, pv = pod_of[srcs], pod_of[dsts]
+        cross = pu != pv
+        codes = pu[cross] * P + pv[cross]
+        uniq, cnt = np.unique(codes, return_counts=True)
+        d_boundary.append(tuple(
+            ((int(c) // P, int(c) % P), int(k))
+            for c, k in zip(uniq.tolist(), cnt.tolist())
+        ))
+        intra = ~cross
+        ip = pu[intra]
+        lcode = local_of[srcs[intra]] * mmax + local_of[dsts[intra]]
+        order = np.lexsort((lcode, ip))
+        ip_s, lcode_s = ip[order], lcode[order]
+        bounds = np.searchsorted(ip_s, np.arange(P + 1))
+        d_sigs.append([
+            lcode_s[bounds[p]:bounds[p + 1]].tobytes() for p in range(P)
+        ])
+        d_local.append((ip_s, lcode_s, bounds))
+
+    # pod classes: identical size + identical signature on every distinct round
+    class_of: Dict[Tuple, int] = {}
+    rep = [0] * P
+    for p in range(P):
+        ckey = (sizes[p], tuple(d_sigs[k][p] for k in range(len(distinct))))
+        rep[p] = class_of.setdefault(ckey, p)
+
+    # build intra schedules for representatives only
+    rep_scheds: Dict[int, Schedule] = {}
+    for p in set(rep):
+        m = sizes[p]
+        d_rounds: List[Round] = []
+        for k, rnd in enumerate(distinct):
+            if d_local[k] is None:
+                d_rounds.append(Round((), rnd.size))
+                continue
+            ip_s, lcode_s, bounds = d_local[k]
+            codes = lcode_s[bounds[p]:bounds[p + 1]]
+            d_rounds.append(Round(
+                tuple(
+                    Transfer(int(c) // mmax, int(c) % mmax)
+                    for c in codes.tolist()
+                ),
+                rnd.size,
+            ))
+        # rounds sharing a pair structure share the Round object unless
+        # their payloads differ (then only the size is swapped out)
+        rep_scheds[p] = Schedule(
+            schedule.collective,
+            f"{schedule.algorithm}@pod{p}",
+            m,
+            schedule.buffer_bytes,
+            tuple(
+                base if base.size == rnd.size else Round(base.transfers, rnd.size)
+                for rnd, base in (
+                    (schedule.rounds[i], d_rounds[round_keys[i]])
+                    for i in range(R)
+                )
+            ),
+        )
+    intra = tuple(rep_scheds[rep[p]] for p in range(P))
+    boundary = tuple(d_boundary[round_keys[i]] for i in range(R))
+    return intra, tuple(rep), boundary
+
+
 # ----------------------------------------------------------------- registries
 
 ScheduleFn = Callable[[int, float], Schedule]
 
+# Bounded LRU over (collective, algorithm, n, d, dims) → Schedule.  Schedules
+# are deterministic in their key and immutable (frozen dataclasses; the lazy
+# ``fingerprint`` memo is idempotent), so sharing one object across planner /
+# session / bench callers is safe.  Generation is the single most expensive
+# artifact at scale — an n=1024 ring all-reduce is ~2M Transfer objects —
+# and unlike the planner's routing caches it does not depend on fabric state
+# or hardware params, so ``planner.clear_planner_caches`` deliberately leaves
+# this memo alone (cold *planning* never includes re-deriving the schedule).
+# Capacity is small: entries are hundreds of MB at n=1024.
+_SCHEDULE_CACHE: "OrderedDict[Tuple, Schedule]" = OrderedDict()
+_SCHEDULE_CACHE_MAX = 8
+_SCHEDULE_CACHE_LOCK = threading.Lock()
+
+
+def clear_schedule_cache() -> None:
+    """Drop every memoized ``get_schedule`` result (tests / memory pressure)."""
+    with _SCHEDULE_CACHE_LOCK:
+        _SCHEDULE_CACHE.clear()
+
 
 def get_schedule(collective: str, algorithm: str, n: int, d: float,
                  dims: Optional[Sequence[int]] = None) -> Schedule:
-    """Uniform constructor used by the planner facade and benchmarks."""
+    """Uniform constructor used by the planner facade and benchmarks.
+
+    Memoized: repeated lookups of the same (collective, algorithm, n, d,
+    dims) return one shared immutable Schedule object."""
+    cache_key = (
+        collective, algorithm, n, float(d),
+        tuple(dims) if dims is not None else None,
+    )
+    with _SCHEDULE_CACHE_LOCK:
+        hit = _SCHEDULE_CACHE.get(cache_key)
+        if hit is not None:
+            _SCHEDULE_CACHE.move_to_end(cache_key)
+            return hit
+    sched = _build_schedule(collective, algorithm, n, d, dims)
+    with _SCHEDULE_CACHE_LOCK:
+        _SCHEDULE_CACHE[cache_key] = sched
+        _SCHEDULE_CACHE.move_to_end(cache_key)
+        while len(_SCHEDULE_CACHE) > _SCHEDULE_CACHE_MAX:
+            _SCHEDULE_CACHE.popitem(last=False)
+    return sched
+
+
+def _build_schedule(collective: str, algorithm: str, n: int, d: float,
+                    dims: Optional[Sequence[int]] = None) -> Schedule:
     key = (collective, algorithm)
     if algorithm.startswith("bucket"):
         if dims is None:

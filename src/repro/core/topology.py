@@ -22,7 +22,8 @@ Algorithm 2 queries it once per transfer per candidate topology per round.
 from __future__ import annotations
 
 import itertools
-from collections import deque
+import threading
+from collections import OrderedDict, deque
 from dataclasses import dataclass
 from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
 
@@ -146,6 +147,8 @@ def _apsp(t: Topology) -> List[List[int]]:
 def clear_caches() -> None:
     _BFS_CACHE.clear()
     _APSP_CACHE.clear()
+    with _DEGRADE_CACHE_LOCK:
+        _DEGRADE_CACHE.clear()
 
 
 # ---------------------------------------------------------------------------
@@ -294,3 +297,102 @@ def topology_by_name(name: str, n: int) -> Topology:
     if name not in std:
         raise KeyError(f"unknown topology {name!r}; have {sorted(std)}")
     return std[name]
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical decomposition + fault helpers (used by the two-level planner
+# and incremental replanning; see core/planner.py).
+# ---------------------------------------------------------------------------
+
+
+def derive_pods(n: int, pod_size: Optional[int] = None) -> Tuple[Tuple[int, ...], ...]:
+    """Partition ``n`` ranks into contiguous equal-size pods.
+
+    ``pod_size`` defaults to the larger factor of the most-square 2-D
+    factorization — the column length of the torus the fabric would be laid
+    out on — so pods line up with torus tiles / ring segments (16 → 4 pods
+    of 4, 128 → 8 pods of 16, 1024 → 32 pods of 32).  A prime ``n`` yields
+    a single pod, which the hierarchical planner treats as "no hierarchy"
+    and delegates to the flat exact DP.
+    """
+    if n < 1:
+        raise ValueError(f"need n >= 1, got {n}")
+    if pod_size is None:
+        _, pod_size = square_dims2(n)
+    if pod_size < 1 or n % pod_size:
+        raise ValueError(f"pod_size {pod_size} does not divide n={n}")
+    return tuple(
+        tuple(range(p * pod_size, (p + 1) * pod_size))
+        for p in range(n // pod_size)
+    )
+
+
+def induced_topology(topo: Topology, ranks: Sequence[int], name: str) -> Topology:
+    """The subgraph of ``topo`` induced on ``ranks``, relabelled to local ids
+    ``0..len(ranks)-1`` (a pod's view of the fabric)."""
+    local = {r: i for i, r in enumerate(ranks)}
+    edges = frozenset(
+        (local[u], local[v]) for u, v in topo.edges if u in local and v in local
+    )
+    return Topology(len(ranks), edges, name=name)
+
+
+def quotient_topology(
+    topo: Topology, pods: Sequence[Sequence[int]], name: str = "quotient"
+) -> Topology:
+    """The super-rank graph: one node per pod, an edge (p, q) iff some
+    directed edge of ``topo`` crosses from pod ``p`` into pod ``q``."""
+    pod_of: Dict[int, int] = {}
+    for p, ranks in enumerate(pods):
+        for r in ranks:
+            pod_of[r] = p
+    edges = frozenset(
+        (pod_of[u], pod_of[v])
+        for u, v in topo.edges
+        if pod_of[u] != pod_of[v]
+    )
+    return Topology(len(pods), edges, name=name)
+
+
+_DEGRADE_CACHE: "OrderedDict[Tuple, Topology]" = OrderedDict()
+_DEGRADE_CACHE_MAX = 256
+_DEGRADE_CACHE_LOCK = threading.Lock()
+
+
+def degrade_topology(
+    topo: Topology,
+    failed_edges: Iterable[Edge] = (),
+    failed_ranks: Iterable[int] = (),
+) -> Topology:
+    """``topo`` with the failed directed circuits removed (fault model: a
+    dead link can no longer carry a circuit in that direction; a dead rank
+    loses every incident circuit).  Edges not present are ignored, so
+    callers may pass both directions of a physical link uniformly.  Returns
+    ``topo`` itself when nothing changes, keeping cache keys (edge-set
+    identity) stable for unaffected topologies.
+
+    Memoized (bounded LRU): a fault event degrades the same topologies in
+    the session layer, the planner's replan fast path, and the fault
+    runtime — one edge-set filter serves them all."""
+    failed = frozenset(failed_edges)
+    ranks = frozenset(failed_ranks)
+    key = (topo.n, topo.edges, failed, ranks)
+    with _DEGRADE_CACHE_LOCK:
+        hit = _DEGRADE_CACHE.get(key)
+        if hit is not None:
+            _DEGRADE_CACHE.move_to_end(key)
+            return hit
+    kept = frozenset(
+        e for e in topo.edges
+        if e not in failed and e[0] not in ranks and e[1] not in ranks
+    )
+    if kept == topo.edges:
+        out = topo
+    else:
+        out = Topology(topo.n, kept, name=f"{topo.name}~degraded")
+    with _DEGRADE_CACHE_LOCK:
+        _DEGRADE_CACHE[key] = out
+        _DEGRADE_CACHE.move_to_end(key)
+        while len(_DEGRADE_CACHE) > _DEGRADE_CACHE_MAX:
+            _DEGRADE_CACHE.popitem(last=False)
+    return out

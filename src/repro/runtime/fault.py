@@ -13,16 +13,58 @@ import collections
 import statistics
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import TYPE_CHECKING, Any, Dict, List, Sequence, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.api.session import PcclSession
+    from repro.core.pccl import PcclPlan
+
 
 # ----------------------------------------------------------- failure inject
 class InjectedFailure(RuntimeError):
     pass
+
+
+@dataclass(frozen=True)
+class LinkFailure:
+    """A fabric fault event: physical links (both directions die) and/or
+    whole ranks (every incident link dies).  The unit handed to
+    :func:`replan_after_failure` by whoever detects the fault — the
+    heartbeat service on a real fleet, :class:`FailureInjector` in tests."""
+
+    edges: Tuple[Tuple[int, int], ...] = ()
+    ranks: Tuple[int, ...] = ()
+
+    def __post_init__(self) -> None:
+        if not self.edges and not self.ranks:
+            raise ValueError("LinkFailure needs at least one edge or rank")
+
+
+def replan_after_failure(
+    session: "PcclSession",
+    failure: LinkFailure,
+    collective: str,
+    nbytes: float,
+    *,
+    n: int = None,
+    algorithm: str = "paper_default",
+) -> "PcclPlan":
+    """Turn a fault event into a warm replan: the session re-prices only
+    the states the failure touched (O(affected), bit-identical to a cold
+    plan of the degraded fabric) and permanently drops the dead links from
+    its fabric/standard views.  See :meth:`PcclSession.replan`."""
+    return session.replan(
+        collective,
+        nbytes,
+        n=n,
+        algorithm=algorithm,
+        failed_edges=failure.edges,
+        failed_ranks=failure.ranks,
+    )
 
 
 @dataclass
