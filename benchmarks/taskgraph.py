@@ -25,8 +25,10 @@ overlappable AllReduce) is applied by edge priority.
 from __future__ import annotations
 
 import dataclasses
+import json
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from pathlib import Path
+from typing import List, Optional, Sequence, Tuple, Union
 
 from repro.api import PcclSession
 from repro.core import cost_model as cm
@@ -127,6 +129,29 @@ class SimResult:
     throughput: float  # samples / s
 
 
+def measured_overlap_fraction(
+    bench_exec_json: Union[str, Path],
+) -> Optional[float]:
+    """Overlap fraction measured by the fused comm/compute bench.
+
+    Reads the fused ``fused_matmul_reduce_scatter`` rows out of an
+    ``BENCH_exec.json`` (``benchmarks/exec_bench.py``) and returns the best
+    measured fraction of the sequential kernel-then-collective time that
+    the tile-streaming fusion hid (``1 - fused_warm_s / seq_warm_s``), or
+    ``None`` when the file has no fused rows.  Feed the result to
+    :func:`simulate_training`'s ``overlap_fraction`` to price per-layer
+    AllReduce overlap with the *measured* number instead of a guess.
+    """
+    doc = json.loads(Path(bench_exec_json).read_text())
+    fracs = [
+        max(0.0, 1.0 - p["fused_warm_s"] / p["seq_warm_s"])
+        for p in doc.get("points", ())
+        if p.get("collective") == "fused_matmul_reduce_scatter"
+        and p.get("seq_warm_s", 0) > 0
+    ]
+    return max(fracs) if fracs else None
+
+
 def simulate_training(
     wl: Workload,
     scheme: CommScheme,
@@ -135,6 +160,7 @@ def simulate_training(
     *,
     pipeline_stages: int = 1,
     grad_buckets: Optional[Sequence[float]] = None,
+    overlap_fraction: Optional[float] = None,
 ) -> SimResult:
     """One data-parallel training iteration on n GPUs (paper Fig. 12 setup:
     the optimized strategy is data-parallel with per-layer gradient
@@ -149,7 +175,19 @@ def simulate_training(
     approximation the homogeneous model always used (one warm cost × L−1),
     so alternating bucket sizes whose plans end on different topologies
     price each layer cold-from-steady-state rather than threading fabric
-    layer to layer."""
+    layer to layer.
+
+    ``overlap_fraction`` (flag-guarded; default ``None`` keeps the model
+    unchanged) overlaps each layer's gradient AllReduce with the *next*
+    layer's backward compute, the way the fused tile-streaming dispatch
+    hides collective rounds behind producer tiles: of each warm layer's
+    AllReduce, ``min(ar_s, overlap_fraction * bwd_s)`` is hidden under
+    compute and only the remainder stays on the critical path.  Pass the
+    measured number from :func:`measured_overlap_fraction` (the fused
+    rows of ``BENCH_exec.json``), not a guess.  Layer 1's cold AllReduce
+    never overlaps (it gates the fabric state the warm layers re-enter),
+    and there is no backward left to hide the last layer's AllReduce
+    behind, so one warm AllReduce also stays exposed."""
     n = topo.n
     std = [T.ring(n), T.torus2d(*T.square_dims2(n))]
     # One session per simulated job: PCCL plans thread fabric state across the
@@ -186,7 +224,16 @@ def simulate_training(
     warm = dict(
         zip(warm_sizes, allreduce_times_sweep(scheme, session, n, warm_sizes))
     )
-    comm += ar_cold + sum(warm[b] for b in buckets[1:])
+    warm_costs = [warm[b] for b in buckets[1:]]
+    comm += ar_cold + sum(warm_costs)
+    if overlap_fraction is not None and len(warm_costs) > 1:
+        f = float(overlap_fraction)
+        if not 0.0 <= f <= 1.0:
+            raise ValueError(f"overlap_fraction must be in [0, 1], got {f}")
+        # every warm AllReduce but the last hides under the next layer's
+        # backward; what is hidden leaves the critical path (comm only —
+        # compute still runs, now concurrently with the collective)
+        comm -= sum(min(c, f * bwd) for c in warm_costs[:-1])
 
     it = compute + comm
     return SimResult(

@@ -41,8 +41,13 @@ best-of-3 of millisecond-scale timings whose denominator legitimately
 swings several-fold under co-tenant load, and its hard failure modes
 (retrace regressions collapse the speedup to ~1x) are still far below the
 floor.  The benches' own ``--smoke`` assertions carry the absolute floors
-(planner >= 1.3x, exec >= 3x, concurrent >= 1.2x), so a fresh file that
-exists at all has already cleared those.
+(planner >= 1.3x, exec >= 3x, fused mm+RS >= 1.3x, concurrent >= 1.2x), so
+a fresh file that exists at all has already cleared those.  The exec
+bench's fused rows (``mode="fused"``) share that 0.1 tolerance: their
+speedup is a ratio of two warm dispatch paths on the same machine, so it
+transfers across hosts far better than absolute times, but 1.1-1.8x-scale
+wins still halve under pathological co-tenancy — the smoke assertion, not
+the gate, carries the 1.3x acceptance bar.
 """
 
 from __future__ import annotations
@@ -53,10 +58,13 @@ import sys
 from pathlib import Path
 from typing import Dict, List, Tuple
 
-# fields that identify a point (the metric fields are everything else)
+# fields that identify a point (the metric fields are everything else);
+# "shape"/"mode" distinguish the exec bench's fused comm/compute rows
+# (mode="fused", shape="MxKxN") from its engine rows
 ID_KEYS = (
     "n", "collective", "algorithm", "pod_size", "tp", "dp",
     "tp_collective", "dp_collective", "tp_mb", "dp_mb", "sizes_mb",
+    "shape", "mode",
 )
 # gated metric -> direction ("higher" or "lower" is better)
 METRICS = {

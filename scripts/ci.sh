@@ -67,7 +67,10 @@ stage_smoke() {
   # scaling path alive in CI without the full n=1024 matrix)
   python -m benchmarks.planner_bench --smoke --json-out "$BENCH_DIR/BENCH_planner.json"
   # execution-engine smoke (n=8): warm engine calls must be 0-retrace
-  # (deterministic guard) and beat the cold per-round interpreter
+  # (deterministic guard) and beat the cold per-round interpreter; also
+  # runs one fused comm/compute point (tile-streaming matmul+RS at n=8,
+  # 512x128x128) asserting bit-identity to the sequential composition and
+  # a >=1.3x warm-dispatch win — the fusion acceptance bar
   python -m benchmarks.exec_bench --smoke --json-out "$BENCH_DIR/BENCH_exec.json"
   # concurrent-group smoke (n=16): joint plans reproducible, never worse
   # than sequential, >= 1.2x at some swept point

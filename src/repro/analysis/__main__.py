@@ -47,6 +47,7 @@ def _generator_cases() -> Iterable[Tuple[str, S.Schedule, object]]:
         yield f"ring_rs n={n}", S.ring_reduce_scatter(n, _D), None
         yield f"ring_ag n={n}", S.ring_all_gather(n, _D), None
         yield f"ring_ar n={n}", S.ring_all_reduce(n, _D), None
+        yield f"ring_ef8_ar n={n}", S.ring_ef8_all_reduce(n, _D), None
         yield f"direct_a2a n={n}", S.direct_all_to_all(n, _D), None
         yield f"ring_a2a n={n}", S.ring_all_to_all(n, _D), None
     for n in (2, 4, 8, 16):

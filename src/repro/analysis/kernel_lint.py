@@ -889,11 +889,13 @@ def shipped_kernel_cases() -> List[Tuple[str, Callable, Tuple[Any, ...], Dict[st
     """(label, wrapper, abstract args, kwargs) for every shipped Pallas
     kernel, at shapes that exercise the interesting paths: GQA head
     mapping + causal streaming (flash), row *and* lane padding (rmsnorm),
-    the chunk-carried scratch + sequence padding (ssd)."""
+    the chunk-carried scratch + sequence padding (ssd), the K-carried
+    accumulator + reduce-scatter-chunk epilogue shapes (matmul)."""
     import jax
     import jax.numpy as jnp
 
     from ..kernels.flash.kernel import flash_attention_pallas
+    from ..kernels.matmul.kernel import matmul_pallas
     from ..kernels.rmsnorm.kernel import rmsnorm_pallas
     from ..kernels.ssd.kernel import ssd_pallas
 
@@ -927,6 +929,21 @@ def shipped_kernel_cases() -> List[Tuple[str, Callable, Tuple[Any, ...], Dict[st
         rmsnorm_pallas,
         (sds((512, 128)), sds((128,))),
         dict(block_rows=128),
+    ))
+    # matmul: fp32 scratch accumulator carried over the innermost K axis,
+    # multi-K-block so the @pl.when reset/epilogue pair is load-bearing
+    cases.append((
+        "matmul epilogue multi-k",
+        matmul_pallas,
+        (sds((256, 256)), sds((256, 128))),
+        dict(block_m=64, block_n=128, block_k=128),
+    ))
+    # matmul at the fused reduce-scatter chunk shape (bf16 precision rules)
+    cases.append((
+        "matmul fused-chunk bf16",
+        matmul_pallas,
+        (sds((32, 128), jnp.bfloat16), sds((128, 128), jnp.bfloat16)),
+        dict(block_m=32),
     ))
     # ssd: carried state scratch; S=80 pads to 96 with chunk 32
     cases.append((

@@ -179,6 +179,11 @@ class InterpBackend:
         from repro.comm import primitives as P
 
         if comm.groups is None:
+            if collective == "all_reduce" and sched.algorithm == "ring_ef8":
+                # planner-selected wire compression: int8 payloads per hop
+                from repro.comm.fusion import all_reduce_quantized
+
+                return all_reduce_quantized(x, sched, comm.axis_name)
             return getattr(P, collective)(x, sched, comm.axis_name)
         return _grouped_collective(comm, collective, x, sched)
 
@@ -346,7 +351,15 @@ def _grouped_collective(comm: "Communicator", collective: str, x, sched):
         return jnp.take(chunks, me_local, axis=0)
     if collective == "all_reduce":
         chunks = x.reshape((m, x.shape[0] // m) + x.shape[1:])
-        chunks = execute_schedule(chunks, sched, comm.axis_name)
+        if sched.algorithm == "ring_ef8":
+            from repro.comm.exec_engine import compile_schedule
+            from repro.comm.fusion import execute_compiled_quantized
+
+            chunks = execute_compiled_quantized(
+                chunks, compile_schedule(sched), comm.axis_name
+            )
+        else:
+            chunks = execute_schedule(chunks, sched, comm.axis_name)
         return chunks.reshape(x.shape)
     if collective == "all_gather":
         chunks = jnp.zeros((m,) + x.shape, x.dtype).at[me_local].set(x)

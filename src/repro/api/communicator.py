@@ -51,11 +51,15 @@ class Communicator:
         algorithm: str = "auto",
         groups: Optional[Groups] = None,
         axis_size: Optional[int] = None,
+        rel_error_tol: Optional[float] = None,
     ) -> None:
         self.session = session
         self.axis_name = axis_name
         self.n = n                      # ranks per group (plans use this)
         self.algorithm = algorithm
+        # declared error tolerance: lets auto arbitration consider lossy
+        # wire-compressed algorithms (see PcclSession.plan)
+        self.rel_error_tol = rel_error_tol
         self.groups = groups            # None → the single full-axis group
         self.axis_size = axis_size if axis_size is not None else n
         self.backend: Backend = (
@@ -79,7 +83,8 @@ class Communicator:
     def _schedule(self, collective: str, nbytes: float) -> Schedule:
         """Group-size schedule from the session's (cached) planner."""
         return self.session.plan(
-            collective, nbytes, n=self.n, algorithm=self.algorithm
+            collective, nbytes, n=self.n, algorithm=self.algorithm,
+            rel_error_tol=self.rel_error_tol,
         ).schedule
 
     def axis_schedule(self, collective: str, nbytes: float) -> Schedule:
@@ -124,7 +129,8 @@ class Communicator:
     def estimate(self, collective: str, nbytes: float) -> float:
         """Planned time (seconds) of one collective from the current fabric."""
         return self.session.plan(
-            collective, nbytes, n=self.n, algorithm=self.algorithm
+            collective, nbytes, n=self.n, algorithm=self.algorithm,
+            rel_error_tol=self.rel_error_tol,
         ).cost
 
     def replan(
@@ -209,6 +215,7 @@ class Communicator:
             algorithm=algorithm or self.algorithm,
             groups=groups,
             axis_size=self.axis_size,
+            rel_error_tol=self.rel_error_tol,
         )
 
     def group_fingerprint(self) -> Tuple:

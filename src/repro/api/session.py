@@ -321,15 +321,24 @@ class PcclSession:
         algorithm: str,
         dims_t: Optional[Tuple[int, ...]],
         dims: Optional[Sequence[int]],
+        rel_error_tol: Optional[float] = None,
     ) -> List[PcclPlan]:
         """Plan ``sizes`` through the structure cache (caller holds the
         plan lock and has already missed the per-``nbytes`` plan cache)."""
         skey: StructureKey = (collective, n, algorithm, dims_t, g0.edges)
+        if rel_error_tol is not None:
+            # a declared tolerance can widen the candidate set (ring_ef8),
+            # so tolerant and exact requests must not share structures —
+            # appended only when set, keeping every existing key unchanged
+            skey = skey + (float(rel_error_tol),)
         bundle: Optional[Dict[str, PlanStructure]] = self.structures.lookup(skey)
         if bundle is None:
             bundle = {}
         plans = plan_collective_sweep(
-            CollectiveRequest(collective, n, sizes[0], algorithm=algorithm),
+            CollectiveRequest(
+                collective, n, sizes[0], algorithm=algorithm,
+                rel_error_tol=rel_error_tol,
+            ),
             sizes,
             g0,
             self.hw,
@@ -349,8 +358,16 @@ class PcclSession:
         n: Optional[int] = None,
         algorithm: str = "paper_default",
         dims: Optional[Sequence[int]] = None,
+        rel_error_tol: Optional[float] = None,
     ) -> PcclPlan:
-        """Plan ``collective`` from the *current* fabric state (cached)."""
+        """Plan ``collective`` from the *current* fabric state (cached).
+
+        ``rel_error_tol`` declares how much relative error the caller can
+        absorb (see ``cost_model.compressed_ef_error_bound``); ``auto``
+        arbitration may then also pick lossy wire-compressed algorithms.
+        Tolerant plans get their own cache entries (the key is extended
+        only when the tolerance is set).
+        """
         with self._plan_lock:
             n = self._resolve_n(n)
             g0 = self.fabric(n)
@@ -363,10 +380,13 @@ class PcclSession:
                 dims_t,
                 g0.edges,
             )
+            if rel_error_tol is not None:
+                key = key + (float(rel_error_tol),)
             plan = self.cache.lookup(key)
             if plan is None:
                 plan = self._plan_missing(
-                    collective, [float(nbytes)], n, g0, algorithm, dims_t, dims
+                    collective, [float(nbytes)], n, g0, algorithm, dims_t,
+                    dims, rel_error_tol,
                 )[0]
                 self.cache.store(key, plan)
             if self.thread_fabric and plan.final_topology is not None:
@@ -381,6 +401,7 @@ class PcclSession:
         n: Optional[int] = None,
         algorithm: str = "paper_default",
         dims: Optional[Sequence[int]] = None,
+        rel_error_tol: Optional[float] = None,
     ) -> List[PcclPlan]:
         """Plan ``collective`` at every buffer size in ``sizes``, from the
         *current* fabric state, in one batched numeric phase.
@@ -404,6 +425,8 @@ class PcclSession:
             keys: List[PlanKey] = [
                 (collective, n, d, algorithm, dims_t, g0.edges) for d in sizes_f
             ]
+            if rel_error_tol is not None:
+                keys = [k + (float(rel_error_tol),) for k in keys]
             plans: Dict[int, PcclPlan] = {}
             missing: List[int] = []
             for k, key in enumerate(keys):
@@ -415,7 +438,7 @@ class PcclSession:
             if missing:
                 fresh = self._plan_missing(
                     collective, [sizes_f[k] for k in missing], n, g0,
-                    algorithm, dims_t, dims,
+                    algorithm, dims_t, dims, rel_error_tol,
                 )
                 for k, p in zip(missing, fresh):
                     self.cache.store(keys[k], p)
@@ -689,15 +712,19 @@ class PcclSession:
         *,
         backend: str = "interp",
         algorithm: str = "auto",
+        rel_error_tol: Optional[float] = None,
     ) -> "Communicator":
         """Executable collectives over mesh axis ``axis_name``.
 
         ``backend`` is one of ``interp`` (ppermute schedule interpreter),
         ``xla`` (native lax collectives, the A/B baseline) or ``sim``
-        (cost-model-only, no devices needed).
+        (cost-model-only, no devices needed).  ``rel_error_tol`` (see
+        :meth:`plan`) lets ``auto`` arbitration consider lossy
+        wire-compressed algorithms for this communicator's collectives.
         """
         from .communicator import Communicator
 
         return Communicator(
-            self, axis_name, self._resolve_n(n), backend=backend, algorithm=algorithm
+            self, axis_name, self._resolve_n(n), backend=backend,
+            algorithm=algorithm, rel_error_tol=rel_error_tol,
         )

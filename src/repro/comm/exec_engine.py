@@ -39,6 +39,7 @@ and sim-only processes can read stats without touching it.
 from __future__ import annotations
 
 import os
+import sys
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -62,6 +63,8 @@ __all__ = [
     "expected_eager_result_shape",
     "execute_all_to_all_compact",
     "execute_compiled",
+    "note_fallback_dispatch",
+    "note_fused_dispatch",
     "note_trace",
     "round_tables",
 ]
@@ -469,12 +472,38 @@ EXECUTABLES = _LruCache(max_entries=128)  # exec key → jitted callable
 _TRACE_LOCK = threading.Lock()
 _TRACES = 0
 
+# Overlap counters, filled by repro.comm.fusion: dispatches that streamed
+# producer tiles into collective rounds (vs. took the sequential fallback),
+# how many chunks were streamed, and how many payload bytes moved while
+# compute was still running (an upper bound on hideable wire time).
+_OVERLAP_LOCK = threading.Lock()
+_FUSED_DISPATCHES = 0
+_FALLBACK_DISPATCHES = 0
+_CHUNKS_STREAMED = 0
+_BYTES_HIDDEN = 0
+
 
 def note_trace() -> None:
     """Record one trace through the engine (Python body of a jitted path)."""
     global _TRACES
     with _TRACE_LOCK:
         _TRACES += 1
+
+
+def note_fused_dispatch(chunks_streamed: int, bytes_hidden: int) -> None:
+    """Record one fused (comm-under-compute) dispatch and its overlap volume."""
+    global _FUSED_DISPATCHES, _CHUNKS_STREAMED, _BYTES_HIDDEN
+    with _OVERLAP_LOCK:
+        _FUSED_DISPATCHES += 1
+        _CHUNKS_STREAMED += int(chunks_streamed)
+        _BYTES_HIDDEN += int(bytes_hidden)
+
+
+def note_fallback_dispatch() -> None:
+    """Record one dispatch where fusion was requested but fell back."""
+    global _FALLBACK_DISPATCHES
+    with _OVERLAP_LOCK:
+        _FALLBACK_DISPATCHES += 1
 
 
 @dataclass(frozen=True)
@@ -488,6 +517,10 @@ class ExecStats:
     compiled_misses: int
     compiled_size: int
     traces: int
+    fused_dispatches: int = 0
+    fallback_dispatches: int = 0
+    chunks_streamed: int = 0
+    bytes_hidden: int = 0
 
 
 def exec_stats() -> ExecStats:
@@ -499,9 +532,15 @@ def exec_stats() -> ExecStats:
     * ``compiled_*`` — the schedule→stacked-tables compile cache.
     * ``traces`` — how many times a Python trace actually ran; a warm
       steady state stops incrementing it.
+    * ``fused_*``/``fallback_*``/``chunks_streamed``/``bytes_hidden`` —
+      overlap counters from ``repro.comm.fusion`` (see
+      :func:`note_fused_dispatch`).
     """
     with _TRACE_LOCK:
         traces = _TRACES
+    with _OVERLAP_LOCK:
+        fused, fallback = _FUSED_DISPATCHES, _FALLBACK_DISPATCHES
+        streamed, hidden = _CHUNKS_STREAMED, _BYTES_HIDDEN
     return ExecStats(
         executable_hits=EXECUTABLES.hits,
         executable_misses=EXECUTABLES.misses,
@@ -510,13 +549,31 @@ def exec_stats() -> ExecStats:
         compiled_misses=_COMPILED.misses,
         compiled_size=len(_COMPILED),
         traces=traces,
+        fused_dispatches=fused,
+        fallback_dispatches=fallback,
+        chunks_streamed=streamed,
+        bytes_hidden=hidden,
     )
 
 
 def clear_exec_caches() -> None:
-    """Drop compiled tables + executables and zero all counters (tests)."""
-    global _TRACES
+    """Drop compiled tables + executables and zero all counters (tests).
+
+    Also clears the ``PCCL_VERIFY=1`` per-dispatch kernel-analysis memo
+    (``repro.analysis.kernel_lint._VERIFIED``) so tests that toggle the env
+    var cannot see stale verdicts — but only when that module is already
+    loaded: importing it here would pull JAX into planning-/sim-only
+    processes that this module deliberately keeps JAX-free.
+    """
+    global _TRACES, _FUSED_DISPATCHES, _FALLBACK_DISPATCHES
+    global _CHUNKS_STREAMED, _BYTES_HIDDEN
     _COMPILED.clear()
     EXECUTABLES.clear()
     with _TRACE_LOCK:
         _TRACES = 0
+    with _OVERLAP_LOCK:
+        _FUSED_DISPATCHES = _FALLBACK_DISPATCHES = 0
+        _CHUNKS_STREAMED = _BYTES_HIDDEN = 0
+    lint = sys.modules.get("repro.analysis.kernel_lint")
+    if lint is not None:
+        lint.clear_verified_cache()

@@ -1047,3 +1047,32 @@ def lower_bound_reduce_scatter(n: int, d: float, hw: HardwareParams) -> float:
     import math
 
     return hw.alpha * math.ceil(math.log2(n)) + hw.beta * d * (n - 1) / n
+
+
+def compressed_ef_error_bound(n: int) -> float:
+    """Documented accuracy bound of the ``ring_ef8`` all-reduce wire format.
+
+    ``ring_ef8`` runs the ring all-reduce with every hop's payload
+    quantized to int8 + one fp32 scale (``scale = max|payload| / 127``, see
+    ``repro.comm.fusion.execute_compiled_quantized``), which is what lets
+    the schedule price each round at ``size / 4``.  The quantize→dequantize
+    round trip errs at most ``scale / 2`` per element per hop, every
+    payload (partial sums while reduce-scattering, final sums while
+    gathering) is bounded in magnitude by ``n · A`` where
+    ``A = max_i ||x_i||_inf``, and one output element transits at most
+    ``2(n-1)`` quantizing hops — so to first order
+
+        ``|out - exact| <= 2(n-1) · (n·A)/254  =  bound(n) · n · A``
+
+    elementwise, with ``bound(n) = (n-1)/127``.  This is the *relative*
+    bound (w.r.t. the exact result's maximum representable magnitude
+    ``n·A``) that arbitration gates on: ``ring_ef8`` only enters the
+    candidate set when the caller declares ``rel_error_tol >= bound(n)``
+    (see :func:`repro.core.pccl.candidate_algorithms`).  First-order:
+    quantization error feeding later hops' payload maxima is second-order
+    small and deliberately ignored; callers needing exactness simply leave
+    ``rel_error_tol`` unset.
+    """
+    if n < 2:
+        raise ValueError(f"collective needs n >= 2 ranks, got {n}")
+    return (n - 1) / 127.0

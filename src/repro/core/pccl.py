@@ -24,7 +24,13 @@ from dataclasses import dataclass, replace
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from . import schedules as S
-from .cost_model import HardwareParams, ScheduleCost, ideal_cost, schedule_cost_fixed
+from .cost_model import (
+    HardwareParams,
+    ScheduleCost,
+    compressed_ef_error_bound,
+    ideal_cost,
+    schedule_cost_fixed,
+)
 from .planner import (
     ConcurrentPlan,
     HierarchicalPlan,
@@ -77,13 +83,22 @@ class CollectiveRequest:
     n: int
     buffer_bytes: float
     algorithm: str = "paper_default"  # or explicit name, or "auto"
+    # Caller-declared tolerance on the result's relative error (w.r.t. the
+    # exact result's max representable magnitude — see
+    # cost_model.compressed_ef_error_bound).  None = exact results only;
+    # setting it lets auto arbitration also consider lossy wire-compressed
+    # algorithms (ring_ef8) whose documented bound fits under it.
+    rel_error_tol: Optional[float] = None
 
 
 def _pow2(n: int) -> bool:
     return n >= 2 and (n & (n - 1)) == 0
 
 
-def candidate_algorithms(collective: str, n: int, mode: str) -> List[str]:
+def candidate_algorithms(
+    collective: str, n: int, mode: str,
+    rel_error_tol: Optional[float] = None,
+) -> List[str]:
     if mode not in ("auto", "paper_default"):
         return [mode]
     if collective in ("reduce_scatter", "all_gather", "all_reduce"):
@@ -94,6 +109,15 @@ def candidate_algorithms(collective: str, n: int, mode: str) -> List[str]:
         algos = ["ring", "bucket2d", "bucket3d"]
         if _pow2(n):
             algos.append("rhd")
+        if (
+            collective == "all_reduce"
+            and rel_error_tol is not None
+            and rel_error_tol >= compressed_ef_error_bound(n)
+        ):
+            # int8-on-the-wire ring: bytes/4 serialization, lossy within the
+            # documented bound — only a candidate when the caller's declared
+            # tolerance covers that bound.
+            algos.append("ring_ef8")
         return algos
     if collective == "all_to_all":
         if mode == "paper_default":
@@ -193,7 +217,10 @@ def plan_collective_sweep(
     sizes = list(sizes)
     best: List[Optional[PcclPlan]] = [None] * len(sizes)
     cands: List[List[Tuple[str, float]]] = [[] for _ in sizes]
-    for algo in candidate_algorithms(request.collective, request.n, request.algorithm):
+    for algo in candidate_algorithms(
+        request.collective, request.n, request.algorithm,
+        request.rel_error_tol,
+    ):
         algo_dims, usable = candidate_dims(algo, request.n, dims)
         if not usable:
             continue
@@ -248,7 +275,10 @@ def plan_collective_hierarchical(
         standard = default_standard_set(request.n)
     best: Optional[PcclPlan] = None
     cands: List[Tuple[str, float]] = []
-    for algo in candidate_algorithms(request.collective, request.n, request.algorithm):
+    for algo in candidate_algorithms(
+        request.collective, request.n, request.algorithm,
+        request.rel_error_tol,
+    ):
         algo_dims, usable = candidate_dims(algo, request.n, dims)
         if not usable:
             continue
@@ -295,7 +325,10 @@ def replan_collective(
         standard = default_standard_set(request.n)
     best: Optional[PcclPlan] = None
     cands: List[Tuple[str, float]] = []
-    for algo in candidate_algorithms(request.collective, request.n, request.algorithm):
+    for algo in candidate_algorithms(
+        request.collective, request.n, request.algorithm,
+        request.rel_error_tol,
+    ):
         algo_dims, usable = candidate_dims(algo, request.n, dims)
         if not usable:
             continue
@@ -447,7 +480,10 @@ def plan_concurrent_collectives(
         best_plan: Optional[Plan] = None
         best_sched: Optional[Schedule] = None
         best_struct: Optional[PlanStructure] = None
-        for algo in candidate_algorithms(req.collective, m, req.algorithm):
+        for algo in candidate_algorithms(
+            req.collective, m, req.algorithm,
+            getattr(req, "rel_error_tol", None),
+        ):
             algo_dims, usable = candidate_dims(algo, m, None)
             if not usable:
                 continue

@@ -235,6 +235,25 @@ def ring_all_reduce(n: int, d: float) -> Schedule:
     return Schedule("all_reduce", "ring", n, d, rs.rounds + ag.rounds)
 
 
+def ring_ef8_all_reduce(n: int, d: float) -> Schedule:
+    """Ring all-reduce with int8-on-the-wire payloads (algorithm ``ring_ef8``).
+
+    Same transfers and chunk metadata as :func:`ring_all_reduce` — the
+    dataflow verifier proves the identical postcondition — but every
+    round's wire size is ``/4``: payloads travel as int8 plus one fp32
+    scale (amortized away for the chunk sizes the planner prices), so the
+    cost model automatically prices bytes/4 serialization from
+    ``Round.size`` with no special-casing.  Execution routes through
+    :func:`repro.comm.fusion.all_reduce_quantized`; the result is *lossy*,
+    bounded by :func:`repro.core.cost_model.compressed_ef_error_bound`, so
+    arbitration only considers this algorithm when the caller declares a
+    tolerance at least that large (``rel_error_tol``).
+    """
+    base = ring_all_reduce(n, d)
+    rounds = tuple(Round(r.transfers, r.size * 0.25) for r in base.rounds)
+    return Schedule("all_reduce", "ring_ef8", n, d, rounds)
+
+
 # ------------------------------------------------------------------------- RHD
 
 
@@ -764,6 +783,7 @@ def _build_schedule(collective: str, algorithm: str, n: int, d: float,
         ("all_gather", "ring"): ring_all_gather,
         ("all_gather", "rhd"): rhd_all_gather,
         ("all_reduce", "ring"): ring_all_reduce,
+        ("all_reduce", "ring_ef8"): ring_ef8_all_reduce,
         ("all_reduce", "rhd"): rhd_all_reduce,
         ("all_reduce", "swing"): swing_all_reduce,
         ("all_to_all", "dex"): dex_all_to_all,

@@ -1,0 +1,2 @@
+from .ops import matmul, tiles_exactly  # noqa: F401
+from .ref import matmul_reference  # noqa: F401

@@ -1,0 +1,94 @@
+"""Pallas TPU kernel: blocked matmul with a reduce-scatter-ready epilogue.
+
+Grid ``(M/bm, N/bn, K/bk)`` with the contraction axis **innermost** (Pallas
+TPU iterates it sequentially per output tile): a ``(bm, bn)`` fp32 VMEM
+scratch accumulator is reset when the K index wraps to 0, accumulates one
+``(bm, bk) @ (bk, bn)`` MXU product per step, and the epilogue writes the
+finished tile (cast to the output dtype) on the last K step only.
+
+The epilogue is what the comm/compute fusion layer (``repro.comm.fusion``)
+feeds on: output row-blocks are produced tile-by-tile in grid-row order, so
+a reduce-scatter chunk (a contiguous row block) is complete — and ready to
+enter its collective round — as soon as its row of tiles has been written.
+The fused executor calls this kernel once *per chunk* (``M = chunk rows``);
+because each output tile depends only on its own row block of ``x`` and the
+shared ``w``, per-chunk calls are **bit-identical** to one whole-``M`` call
+at the same block sizes (same fp32 accumulation order per tile).
+
+Block sizes must tile the operands exactly; the wrapper raises
+``ValueError`` otherwise (callers — ``ops.matmul`` and the fusion layer —
+fall back to the unfused/reference path instead of silently padding, which
+would break the bit-identity contract above).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _reset():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(ki == n_k - 1)
+    def _epilogue():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_pallas(
+    x: jax.Array,   # (M, K)
+    w: jax.Array,   # (K, N)
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Blocked ``x @ w`` with fp32 accumulation, output in ``x.dtype``.
+
+    Requested block sizes are clipped to the operand dims; the clipped
+    blocks must then divide ``(M, K, N)`` exactly (no padding — see module
+    docstring).  Raises ``ValueError`` on non-divisible shapes so callers
+    can take their unfused/reference fallback.
+    """
+    if x.ndim != 2 or w.ndim != 2 or x.shape[1] != w.shape[0]:
+        raise ValueError(
+            f"matmul_pallas: need (M,K)@(K,N), got {x.shape} @ {w.shape}"
+        )
+    M, K = x.shape
+    N = w.shape[1]
+    if M == 0 or K == 0 or N == 0:
+        raise ValueError(f"matmul_pallas: empty operand {x.shape} @ {w.shape}")
+    bm, bk, bn = min(block_m, M), min(block_k, K), min(block_n, N)
+    if M % bm or K % bk or N % bn:
+        raise ValueError(
+            f"matmul_pallas: blocks ({bm},{bk},{bn}) do not tile "
+            f"({M},{K},{N}) exactly"
+        )
+    n_k = K // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

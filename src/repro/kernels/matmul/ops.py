@@ -1,0 +1,62 @@
+"""Jit'd entry point for the blocked matmul: Pallas kernel or jnp oracle.
+
+Same dispatcher contract as the other kernel packages: ``use_pallas``
+selects the kernel, ``PCCL_VERIFY=1`` runs the static kernel analyzer on
+the exact shapes about to execute (memoized per signature), and
+``interpret`` defaults to interpret mode on CPU.  Shapes the requested
+blocks cannot tile exactly fall back to the reference (the kernel refuses
+to pad — see ``kernel.py``); ``tiles_exactly`` exposes that predicate so
+the fusion layer can decide *before* building a fused executable.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+from .ref import matmul_reference
+
+
+def tiles_exactly(
+    M: int, K: int, N: int,
+    *, block_m: int = 128, block_n: int = 128, block_k: int = 128,
+) -> bool:
+    """True iff the (clipped) blocks tile ``(M, K, N)`` with no remainder."""
+    if M == 0 or K == 0 or N == 0:
+        return False
+    bm, bk, bn = min(block_m, M), min(block_k, K), min(block_n, N)
+    return not (M % bm or K % bk or N % bn)
+
+
+def matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    use_pallas: bool = False,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if not use_pallas or not tiles_exactly(
+        x.shape[0], x.shape[1], w.shape[1],
+        block_m=block_m, block_n=block_n, block_k=block_k,
+    ):
+        return matmul_reference(x, w)
+    from .kernel import matmul_pallas
+
+    if os.environ.get("PCCL_VERIFY", "0") not in ("", "0"):
+        from ...analysis.kernel_lint import verify_entry_point
+
+        verify_entry_point(
+            "matmul", matmul_pallas, (x, w),
+            dict(block_m=block_m, block_n=block_n, block_k=block_k),
+        )
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return matmul_pallas(
+        x, w, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret,
+    )

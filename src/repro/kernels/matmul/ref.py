@@ -1,0 +1,23 @@
+"""jnp oracle for the blocked matmul kernel.
+
+Numerically equivalent (fp32 accumulation, output cast to the input dtype)
+but *not* bit-identical to the blocked kernel when ``K > block_k`` — XLA's
+contraction order differs from the kernel's per-K-block accumulation.
+Bit-level checks therefore compare blocked-vs-blocked (whole-``M`` call vs
+per-chunk calls at the same block sizes, see ``kernel.py``); this reference
+carries the allclose-level correctness tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_reference(x: jax.Array, w: jax.Array) -> jax.Array:
+    out = jnp.dot(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(x.dtype)

@@ -53,6 +53,12 @@ class TrainerConfig:
     microbatches: int = 1
     seed: int = 0
     max_restarts: int = 8
+    # Relative-error tolerance the job accepts on the DP gradient
+    # all-reduce (see repro.core.cost_model.compressed_ef_error_bound):
+    # when set, PCCL's auto arbitration may plan the int8-on-the-wire
+    # ring_ef8 algorithm (bytes/4 wire time) for the gradient collective.
+    # None (default) keeps the gradient sum exact.
+    grad_allreduce_rel_error_tol: Optional[float] = None
 
 
 class Trainer:
@@ -88,8 +94,15 @@ class Trainer:
         grad_bytes = 4.0 * param_count(jax.eval_shape(self.model.init, jax.random.PRNGKey(0)))
         self.pccl = PcclSession(cm.TPU_V5E_PHOTONIC)
         if n_dp >= 2:
-            cold = self.pccl.plan("all_reduce", grad_bytes, n=n_dp, algorithm="auto")
-            warm = self.pccl.plan("all_reduce", grad_bytes, n=n_dp, algorithm="auto")
+            tol = trainer_cfg.grad_allreduce_rel_error_tol
+            cold = self.pccl.plan(
+                "all_reduce", grad_bytes, n=n_dp, algorithm="auto",
+                rel_error_tol=tol,
+            )
+            warm = self.pccl.plan(
+                "all_reduce", grad_bytes, n=n_dp, algorithm="auto",
+                rel_error_tol=tol,
+            )
             self.grad_allreduce_algorithm = warm.algorithm
             self.grad_allreduce_cost_s = {"cold": cold.cost, "steady": warm.cost}
         else:
