@@ -48,6 +48,17 @@ speedup is a ratio of two warm dispatch paths on the same machine, so it
 transfers across hosts far better than absolute times, but 1.1-1.8x-scale
 wins still halve under pathological co-tenancy — the smoke assertion, not
 the gate, carries the 1.3x acceptance bar.
+
+The serve bench (``BENCH_serve.json``, points keyed ``trace``/``load``)
+gets a *tighter* 0.5 in CI: its ``speedup`` is the FIFO-vs-arbiter p99
+token-latency ratio computed purely from planned costs on seeded traces —
+fully machine-independent — but the committed baseline runs 400-event
+traces while ``--smoke`` runs 150, so tail percentiles shift with trace
+length; 0.5 absorbs that while still catching a control-plane regression
+(EDF ordering lost, preemption dead, joint planning off) that collapses
+the win toward 1x.  Its absolute bars (>= 1.2x somewhere, never worse,
+bounded overload p99) live in the bench's own assertions, which run every
+smoke.
 """
 
 from __future__ import annotations
@@ -60,11 +71,13 @@ from typing import Dict, List, Tuple
 
 # fields that identify a point (the metric fields are everything else);
 # "shape"/"mode" distinguish the exec bench's fused comm/compute rows
-# (mode="fused", shape="MxKxN") from its engine rows
+# (mode="fused", shape="MxKxN") from its engine rows; "trace"/"load"
+# identify the serve bench's operating points (arrival trace x load
+# multiple — its "speedup" is the FIFO/arbiter p99 token-latency ratio)
 ID_KEYS = (
     "n", "collective", "algorithm", "pod_size", "tp", "dp",
     "tp_collective", "dp_collective", "tp_mb", "dp_mb", "sizes_mb",
-    "shape", "mode",
+    "shape", "mode", "trace", "load",
 )
 # gated metric -> direction ("higher" or "lower" is better)
 METRICS = {

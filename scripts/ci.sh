@@ -75,6 +75,10 @@ stage_smoke() {
   # concurrent-group smoke (n=16): joint plans reproducible, never worse
   # than sequential, >= 1.2x at some swept point
   python -m benchmarks.concurrent_bench --smoke --json-out "$BENCH_DIR/BENCH_concurrent.json"
+  # serving control-plane smoke (tp=4 x dp=4): arbiter >= 1.2x FIFO p99 at
+  # some operating point, never worse anywhere, and at 2x overload shedding
+  # engages with admitted-request p99 still bounded
+  python -m benchmarks.serve_bench --smoke --json-out "$BENCH_DIR/BENCH_serve.json"
 }
 
 stage_tests() {
@@ -92,12 +96,17 @@ stage_bench() {
     python -m benchmarks.exec_bench --smoke --json-out "$BENCH_DIR/BENCH_exec.json"
   [ -f "$BENCH_DIR/BENCH_concurrent.json" ] || \
     python -m benchmarks.concurrent_bench --smoke --json-out "$BENCH_DIR/BENCH_concurrent.json"
+  [ -f "$BENCH_DIR/BENCH_serve.json" ] || \
+    python -m benchmarks.serve_bench --smoke --json-out "$BENCH_DIR/BENCH_serve.json"
   # exec gets a looser tolerance: its warm-leg denominator is milliseconds
-  # and legitimately swings under co-tenant load (see bench_gate docstring)
+  # and legitimately swings under co-tenant load (see bench_gate docstring);
+  # serve gets a tighter 0.5: its speedups are ratios of planned costs on
+  # seeded traces (machine-independent), only the smoke trace length differs
   python scripts/bench_gate.py \
     "$BENCH_DIR/BENCH_planner.json:BENCH_planner.json" \
     "$BENCH_DIR/BENCH_exec.json:BENCH_exec.json:0.1" \
-    "$BENCH_DIR/BENCH_concurrent.json:BENCH_concurrent.json"
+    "$BENCH_DIR/BENCH_concurrent.json:BENCH_concurrent.json" \
+    "$BENCH_DIR/BENCH_serve.json:BENCH_serve.json:0.5"
 }
 
 # ---- argument parsing: stage names, then optional -- pytest args ----------

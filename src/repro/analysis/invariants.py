@@ -566,7 +566,10 @@ def check_concurrent_plan(
     out: List[InvariantViolation] = []
     schedules = [g.schedule for g in cp.groups]
     structures = [build_structure(g0, standard, sch, cp.hw) for sch in schedules]
-    ev = _JointState(g0, structures, schedules, cp.hw)
+    # offsets=() predates the arrival-offset field (and means all-zero)
+    ev = _JointState(
+        g0, structures, schedules, cp.hw, offsets=cp.offsets or None
+    )
 
     seqs = []
     for gi, grp in enumerate(cp.groups):
@@ -614,8 +617,13 @@ def check_concurrent_plan(
         prev = u
 
     # every group's traffic routes inside its own allocated topology
+    # (joint-round indices: a group with an arrival offset moves traffic
+    # only inside its [offset, offset + rounds) window; loads() is empty
+    # outside it and the check below is vacuous there)
     for g in range(ev.G):
-        for i in range(len(schedules[g].rounds)):
+        for i in range(ev.R):
+            if not ev.pairs[g][i]:
+                continue
             ld = ev.loads(g, i, seqs[g][i])
             if ld is None:
                 out.append(InvariantViolation(

@@ -27,19 +27,36 @@ from .backends import (
     register_backend,
 )
 from .communicator import Communicator, subgroup_schedule
-from .session import CacheStats, PcclSession, PlanCache, StructureCache
+from .session import (
+    AnyPlanRequest,
+    CacheStats,
+    ConcurrentPlanRequest,
+    HierarchicalPlanRequest,
+    PcclSession,
+    PlanCache,
+    PlanRequest,
+    PlanSweepRequest,
+    ReplanRequest,
+    StructureCache,
+)
 
 __all__ = [
+    "AnyPlanRequest",
     "Backend",
     "CacheStats",
     "Communicator",
     "ConcurrentCollectiveRequest",
     "ConcurrentPcclPlan",
+    "ConcurrentPlanRequest",
+    "HierarchicalPlanRequest",
     "InterpBackend",
     "PcclSession",
     "PlanCache",
-    "StructureCache",
+    "PlanRequest",
+    "PlanSweepRequest",
+    "ReplanRequest",
     "SimBackend",
+    "StructureCache",
     "XlaBackend",
     "get_backend",
     "register_backend",

@@ -73,6 +73,141 @@ PlanKey = Tuple[str, int, float, str, Optional[Tuple[int, ...]], FrozenSet[Edge]
 StructureKey = Tuple[str, int, str, Optional[Tuple[int, ...]], FrozenSet[Edge]]
 
 
+# --------------------------------------------------------------------------
+# The PlanRequest family — the session's unified planning surface.
+#
+# Every way to ask the planner for something is a frozen, hashable request
+# value handed to :meth:`PcclSession.submit`.  The five named entrypoints
+# (``plan`` / ``plan_sweep`` / ``plan_hierarchical`` / ``replan`` /
+# ``plan_concurrent``) are thin wrappers that build one of these — callers
+# that construct requests directly (queues, arbiters, RPC layers) get the
+# exact same cached behavior, and requests can be stored, compared, and
+# replayed.  These types are API-stable (see CONTRIBUTING.md): fields are
+# only ever *added*, with defaults that preserve old behavior.
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PlanRequest:
+    """One reconfiguration-aware plan from the current fabric state.
+
+    Equivalent to :meth:`PcclSession.plan` with the same arguments.
+    """
+
+    collective: str
+    nbytes: float
+    n: Optional[int] = None
+    algorithm: str = "paper_default"
+    dims: Optional[Tuple[int, ...]] = None
+    rel_error_tol: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "nbytes", float(self.nbytes))
+        if self.dims is not None:
+            object.__setattr__(self, "dims", tuple(self.dims))
+
+
+@dataclass(frozen=True)
+class PlanSweepRequest:
+    """Price one collective at many buffer sizes in one batched numeric
+    phase (:meth:`PcclSession.plan_sweep`); fabric state is not threaded."""
+
+    collective: str
+    sizes: Tuple[float, ...]
+    n: Optional[int] = None
+    algorithm: str = "paper_default"
+    dims: Optional[Tuple[int, ...]] = None
+    rel_error_tol: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "sizes", tuple(float(d) for d in self.sizes))
+        if self.dims is not None:
+            object.__setattr__(self, "dims", tuple(self.dims))
+
+
+@dataclass(frozen=True)
+class HierarchicalPlanRequest:
+    """Two-level (per-pod exact + coarse inter-pod) plan
+    (:meth:`PcclSession.plan_hierarchical`)."""
+
+    collective: str
+    nbytes: float
+    n: Optional[int] = None
+    algorithm: str = "paper_default"
+    dims: Optional[Tuple[int, ...]] = None
+    pods: Optional[Tuple[Tuple[int, ...], ...]] = None
+    pod_size: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "nbytes", float(self.nbytes))
+        if self.dims is not None:
+            object.__setattr__(self, "dims", tuple(self.dims))
+        if self.pods is not None:
+            object.__setattr__(
+                self, "pods", tuple(tuple(p) for p in self.pods)
+            )
+
+
+@dataclass(frozen=True)
+class ReplanRequest:
+    """Warm incremental replan after link/rank failures
+    (:meth:`PcclSession.replan`); permanently degrades the fabric."""
+
+    collective: str
+    nbytes: float
+    n: Optional[int] = None
+    algorithm: str = "paper_default"
+    dims: Optional[Tuple[int, ...]] = None
+    failed_edges: Tuple[Edge, ...] = ()
+    failed_ranks: Tuple[int, ...] = ()
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "nbytes", float(self.nbytes))
+        if self.dims is not None:
+            object.__setattr__(self, "dims", tuple(self.dims))
+        object.__setattr__(
+            self,
+            "failed_edges",
+            tuple((int(u), int(v)) for (u, v) in self.failed_edges),
+        )
+        object.__setattr__(
+            self, "failed_ranks", tuple(int(r) for r in self.failed_ranks)
+        )
+
+
+@dataclass(frozen=True)
+class ConcurrentPlanRequest:
+    """Joint plan for several concurrently-active collectives
+    (:meth:`PcclSession.plan_concurrent`).
+
+    ``offsets`` gives each constituent request an arrival-round offset —
+    group ``g``'s round ``i`` executes at joint round ``i + offsets[g]`` —
+    so staggered admissions (a decode wave joining mid-prefill) don't force
+    round-0 alignment; during its idle prefix a group may pre-position into
+    any state enterable at its first round.
+    """
+
+    requests: Tuple[ConcurrentCollectiveRequest, ...]
+    n: Optional[int] = None
+    offsets: Optional[Tuple[int, ...]] = None
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "requests", tuple(self.requests))
+        if self.offsets is not None:
+            object.__setattr__(
+                self, "offsets", tuple(int(o) for o in self.offsets)
+            )
+
+
+AnyPlanRequest = (
+    PlanRequest,
+    PlanSweepRequest,
+    HierarchicalPlanRequest,
+    ReplanRequest,
+    ConcurrentPlanRequest,
+)
+
+
 @dataclass(frozen=True)
 class CacheStats:
     hits: int
@@ -350,6 +485,35 @@ class PcclSession:
         self.structures.store(skey, bundle)
         return plans
 
+    def submit(self, request: Any) -> Any:
+        """Unified planning entrypoint: dispatch one frozen request value.
+
+        Accepts any member of the :data:`AnyPlanRequest` family and returns
+        what the corresponding named method would: a :class:`PcclPlan`
+        (:class:`PlanRequest` / :class:`HierarchicalPlanRequest` /
+        :class:`ReplanRequest`), a list of plans
+        (:class:`PlanSweepRequest`), or a
+        :class:`~repro.core.pccl.ConcurrentPcclPlan`
+        (:class:`ConcurrentPlanRequest`).  The named methods are thin
+        wrappers over this — ``session.plan(c, b)`` and
+        ``session.submit(PlanRequest(c, b))`` are bit-identical, share the
+        same caches, and thread fabric state the same way.
+        """
+        if isinstance(request, PlanRequest):
+            return self._submit_plan(request)
+        if isinstance(request, PlanSweepRequest):
+            return self._submit_sweep(request)
+        if isinstance(request, HierarchicalPlanRequest):
+            return self._submit_hierarchical(request)
+        if isinstance(request, ReplanRequest):
+            return self._submit_replan(request)
+        if isinstance(request, ConcurrentPlanRequest):
+            return self._submit_concurrent(request)
+        raise TypeError(
+            f"submit() takes a PlanRequest-family value, got "
+            f"{type(request).__name__!r}"
+        )
+
     def plan(
         self,
         collective: str,
@@ -368,25 +532,31 @@ class PcclSession:
         Tolerant plans get their own cache entries (the key is extended
         only when the tolerance is set).
         """
+        return self.submit(PlanRequest(
+            collective, nbytes, n=n, algorithm=algorithm,
+            dims=tuple(dims) if dims is not None else None,
+            rel_error_tol=rel_error_tol,
+        ))
+
+    def _submit_plan(self, req: PlanRequest) -> PcclPlan:
         with self._plan_lock:
-            n = self._resolve_n(n)
+            n = self._resolve_n(req.n)
             g0 = self.fabric(n)
-            dims_t = tuple(dims) if dims is not None else None
             key: PlanKey = (
-                collective,
+                req.collective,
                 n,
-                float(nbytes),
-                algorithm,
-                dims_t,
+                req.nbytes,
+                req.algorithm,
+                req.dims,
                 g0.edges,
             )
-            if rel_error_tol is not None:
-                key = key + (float(rel_error_tol),)
+            if req.rel_error_tol is not None:
+                key = key + (float(req.rel_error_tol),)
             plan = self.cache.lookup(key)
             if plan is None:
                 plan = self._plan_missing(
-                    collective, [float(nbytes)], n, g0, algorithm, dims_t,
-                    dims, rel_error_tol,
+                    req.collective, [req.nbytes], n, g0, req.algorithm,
+                    req.dims, req.dims, req.rel_error_tol,
                 )[0]
                 self.cache.store(key, plan)
             if self.thread_fabric and plan.final_topology is not None:
@@ -417,16 +587,24 @@ class PcclSession:
         already-planned sizes are served from it, and newly planned sizes
         are stored for later :meth:`plan` calls.
         """
+        return self.submit(PlanSweepRequest(
+            collective, tuple(float(d) for d in sizes), n=n,
+            algorithm=algorithm,
+            dims=tuple(dims) if dims is not None else None,
+            rel_error_tol=rel_error_tol,
+        ))
+
+    def _submit_sweep(self, req: PlanSweepRequest) -> List[PcclPlan]:
         with self._plan_lock:
-            n = self._resolve_n(n)
+            n = self._resolve_n(req.n)
             g0 = self.fabric(n)
-            dims_t = tuple(dims) if dims is not None else None
-            sizes_f = [float(d) for d in sizes]
+            sizes_f = list(req.sizes)
             keys: List[PlanKey] = [
-                (collective, n, d, algorithm, dims_t, g0.edges) for d in sizes_f
+                (req.collective, n, d, req.algorithm, req.dims, g0.edges)
+                for d in sizes_f
             ]
-            if rel_error_tol is not None:
-                keys = [k + (float(rel_error_tol),) for k in keys]
+            if req.rel_error_tol is not None:
+                keys = [k + (float(req.rel_error_tol),) for k in keys]
             plans: Dict[int, PcclPlan] = {}
             missing: List[int] = []
             for k, key in enumerate(keys):
@@ -437,8 +615,8 @@ class PcclSession:
                     missing.append(k)
             if missing:
                 fresh = self._plan_missing(
-                    collective, [sizes_f[k] for k in missing], n, g0,
-                    algorithm, dims_t, dims, rel_error_tol,
+                    req.collective, [sizes_f[k] for k in missing], n, g0,
+                    req.algorithm, req.dims, req.dims, req.rel_error_tol,
                 )
                 for k, p in zip(missing, fresh):
                     self.cache.store(keys[k], p)
@@ -467,36 +645,41 @@ class PcclSession:
         bit-identically.  Hierarchical plans carry no single final fabric
         (pods own disjoint circuits), so fabric state is **not** threaded.
         """
+        return self.submit(HierarchicalPlanRequest(
+            collective, nbytes, n=n, algorithm=algorithm,
+            dims=tuple(dims) if dims is not None else None,
+            pods=tuple(tuple(p) for p in pods) if pods is not None else None,
+            pod_size=pod_size,
+        ))
+
+    def _submit_hierarchical(self, req: HierarchicalPlanRequest) -> PcclPlan:
         with self._plan_lock:
-            n = self._resolve_n(n)
+            n = self._resolve_n(req.n)
             g0 = self.fabric(n)
-            dims_t = tuple(dims) if dims is not None else None
-            pods_t = (
-                tuple(tuple(p) for p in pods) if pods is not None else None
-            )
             key = (
                 "__hierarchical__",
-                collective,
+                req.collective,
                 n,
-                float(nbytes),
-                algorithm,
-                dims_t,
-                pods_t,
-                pod_size,
+                req.nbytes,
+                req.algorithm,
+                req.dims,
+                req.pods,
+                req.pod_size,
                 g0.edges,
             )
             plan = self.cache.lookup(key)
             if plan is None:
                 plan = plan_collective_hierarchical(
                     CollectiveRequest(
-                        collective, n, float(nbytes), algorithm=algorithm
+                        req.collective, n, req.nbytes,
+                        algorithm=req.algorithm,
                     ),
                     g0,
                     self.hw,
                     standard=self.standard_set(n),
-                    dims=dims,
-                    pods=pods_t,
-                    pod_size=pod_size,
+                    dims=req.dims,
+                    pods=req.pods,
+                    pod_size=req.pod_size,
                 )
                 self.cache.store(key, plan)
             return plan
@@ -526,25 +709,34 @@ class PcclSession:
         links only, and the refreshed structures are cached under the
         degraded fingerprint for further warm events.
         """
+        return self.submit(ReplanRequest(
+            collective, nbytes, n=n, algorithm=algorithm,
+            dims=tuple(dims) if dims is not None else None,
+            failed_edges=tuple(failed_edges),
+            failed_ranks=tuple(failed_ranks),
+        ))
+
+    def _submit_replan(self, req: ReplanRequest) -> PcclPlan:
         with self._plan_lock:
-            n = self._resolve_n(n)
+            n = self._resolve_n(req.n)
             g0 = self.fabric(n)
-            dims_t = tuple(dims) if dims is not None else None
             failed_e = frozenset(
-                e for (u, v) in failed_edges for e in ((u, v), (v, u))
+                e for (u, v) in req.failed_edges for e in ((u, v), (v, u))
             )
-            failed_r = frozenset(failed_ranks)
-            skey: StructureKey = (collective, n, algorithm, dims_t, g0.edges)
+            failed_r = frozenset(req.failed_ranks)
+            skey: StructureKey = (
+                req.collective, n, req.algorithm, req.dims, g0.edges
+            )
             bundle = self.structures.lookup(skey) or {}
             new_bundle: Dict[str, PlanStructure] = {}
             plan = replan_collective(
                 CollectiveRequest(
-                    collective, n, float(nbytes), algorithm=algorithm
+                    req.collective, n, req.nbytes, algorithm=req.algorithm
                 ),
                 g0,
                 self.hw,
                 standard=self.standard_set(n),
-                dims=dims,
+                dims=req.dims,
                 changed_edges=tuple(failed_e),
                 changed_ranks=tuple(failed_r),
                 structure_for=bundle.get,
@@ -561,10 +753,12 @@ class PcclSession:
                     self._initial[n], failed_e, failed_r
                 )
             self.structures.store(
-                (collective, n, algorithm, dims_t, d_g0.edges), new_bundle
+                (req.collective, n, req.algorithm, req.dims, d_g0.edges),
+                new_bundle,
             )
             self.cache.store(
-                (collective, n, float(nbytes), algorithm, dims_t, d_g0.edges),
+                (req.collective, n, req.nbytes, req.algorithm, req.dims,
+                 d_g0.edges),
                 plan,
             )
             if self.thread_fabric and plan.final_topology is not None:
@@ -576,6 +770,7 @@ class PcclSession:
         requests: Sequence[ConcurrentCollectiveRequest],
         *,
         n: Optional[int] = None,
+        offsets: Optional[Sequence[int]] = None,
     ) -> ConcurrentPcclPlan:
         """Jointly plan several concurrently-active collectives (cached).
 
@@ -602,15 +797,30 @@ class PcclSession:
         ``n`` (the shared fabric domain size) is inferred from any request
         that carries process groups; pass it explicitly when every request
         spans the whole domain.
+
+        ``offsets`` (one non-negative int per request) staggers arrivals:
+        request ``g``'s round ``i`` executes at joint round
+        ``i + offsets[g]``, and during its idle prefix the group may
+        pre-position into any state enterable at its first round — so a
+        collective admitted mid-flight doesn't force round-0 alignment.
         """
+        return self.submit(ConcurrentPlanRequest(
+            tuple(requests), n=n,
+            offsets=tuple(offsets) if offsets is not None else None,
+        ))
+
+    def _submit_concurrent(
+        self, req: ConcurrentPlanRequest
+    ) -> ConcurrentPcclPlan:
         with self._plan_lock:
-            requests = tuple(requests)
+            requests = req.requests
             if not requests:
                 raise ValueError("plan_concurrent needs at least one request")
+            n = req.n
             if n is None:
-                for req in requests:
-                    if req.groups is not None:
-                        n = sum(len(g) for g in req.groups)
+                for r in requests:
+                    if r.groups is not None:
+                        n = sum(len(g) for g in r.groups)
                         break
             n = self._resolve_n(n)
             g0 = self.fabric(n)
@@ -623,10 +833,15 @@ class PcclSession:
                 ),
                 g0.edges,
             )
+            if req.offsets is not None and any(req.offsets):
+                # appended only for nonzero staggering, keeping every
+                # pre-existing round-0-aligned cache key unchanged
+                key = key + (req.offsets,)
             plan = self.cache.lookup(key)
             if plan is None:
                 plan = plan_concurrent_collectives(
-                    requests, n, g0, self.hw, standard=self.standard_set(n)
+                    requests, n, g0, self.hw,
+                    standard=self.standard_set(n), offsets=req.offsets,
                 )
                 self.cache.store(key, plan)
             if self.thread_fabric and plan.final_topology is not None:

@@ -45,8 +45,13 @@ class PcclComm:
     algorithm: str = "auto"  # auto | xla | ring | rhd | dex | direct
 
     def __post_init__(self) -> None:
+        from repro.core.pccl import SHIM_REMOVAL_VERSION
+
         warnings.warn(
-            "PcclComm is deprecated; use repro.api.PcclSession.communicator()",
+            f"PcclComm is deprecated and will be removed in repro "
+            f"{SHIM_REMOVAL_VERSION}; use repro.api.PcclSession.communicator()"
+            f" for execution and PcclSession.submit(PlanRequest(...)) for "
+            f"planning (it delegates bit-identically until then)",
             DeprecationWarning,
             stacklevel=2,
         )

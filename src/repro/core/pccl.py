@@ -20,6 +20,7 @@ exposes to distributed-ML programmers.
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, replace
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -75,6 +76,24 @@ class PcclPlan:
 
     def breakdown(self) -> Dict[str, float]:
         return self.plan.breakdown()
+
+
+# Version in which the PR-1 deprecation shims (bare plan_collective /
+# choose_algorithm here, PcclComm in repro.comm) are removed.  Their
+# replacement is the unified request surface: PcclSession.submit(PlanRequest)
+# (repro.api.session) — every shim warning names both, and
+# tests/test_pccl_facade.py asserts the shims still delegate bit-identically
+# until then.
+SHIM_REMOVAL_VERSION = "2.0"
+
+
+def _warn_deprecated(old: str, replacement: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated and will be removed in repro "
+        f"{SHIM_REMOVAL_VERSION}; use {replacement} instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 @dataclass(frozen=True)
@@ -169,11 +188,18 @@ def plan_collective(
     ``hw.with_link_reconfig(r_link, overlap=True)``.
 
     .. deprecated::
-        Application code should go through :class:`repro.api.PcclSession`,
-        which adds plan caching and fabric-state threading across
-        collectives.  This free function remains as the stateless planning
-        kernel the session calls into (and as a back-compat shim).
+        Removed in repro 2.0 (``SHIM_REMOVAL_VERSION``).  Application code
+        should go through ``PcclSession.submit(PlanRequest(...))``
+        (:class:`repro.api.PcclSession`), which adds plan caching and
+        fabric-state threading across collectives.  The stateless planning
+        kernel the session calls into is :func:`plan_collective_sweep`,
+        which stays; this bare entry point warns and delegates
+        bit-identically until removal.
     """
+    _warn_deprecated(
+        "bare plan_collective",
+        "PcclSession.submit(PlanRequest(collective, nbytes)) from repro.api",
+    )
     return plan_collective_sweep(
         request, [request.buffer_bytes], g0, hw, standard=standard, dims=dims
     )[0]
@@ -421,6 +447,11 @@ class ConcurrentPcclPlan:
     def final_topology(self) -> Optional[Topology]:
         return self.plan.final_topology
 
+    @property
+    def offsets(self) -> Tuple[int, ...]:
+        """Per-request arrival-round offsets the joint plan was built for."""
+        return self.plan.offsets
+
     def solo_costs(self) -> Tuple[float, ...]:
         """Per-request fabric-to-itself planned costs (the sequential parts)."""
         return tuple(g.solo.total_cost for g in self.plan.groups)
@@ -451,6 +482,8 @@ def plan_concurrent_collectives(
     g0: Topology,
     hw: HardwareParams,
     standard: Optional[Sequence[Topology]] = None,
+    *,
+    offsets: Optional[Sequence[int]] = None,
 ) -> ConcurrentPcclPlan:
     """Jointly plan several concurrently-active collectives on one fabric.
 
@@ -463,10 +496,18 @@ def plan_concurrent_collectives(
     multi-group arbiter :func:`repro.core.planner.plan_concurrent`, which
     overlaps the groups' rounds with per-link contention pricing and never
     prices worse than running the solo plans sequentially.
+
+    ``offsets`` (one arrival round per request) staggers admissions: request
+    ``k``'s rounds start at joint round ``offsets[k]`` — see
+    :func:`repro.core.planner.plan_concurrent`.
     """
     requests = tuple(requests)
     if not requests:
         raise ValueError("plan_concurrent_collectives needs at least one request")
+    if offsets is not None and len(tuple(offsets)) != len(requests):
+        raise ValueError(
+            f"got {len(tuple(offsets))} offsets for {len(requests)} requests"
+        )
     if standard is None:
         standard = default_standard_set(n)
     _validate_concurrent_groups(requests, n)
@@ -514,6 +555,7 @@ def plan_concurrent_collectives(
     joint = plan_concurrent(
         g0, standard, chosen_scheds, hw,
         structures=chosen_structs, solo_plans=chosen_solos,
+        offsets=offsets,
     )
     return ConcurrentPcclPlan(
         requests=requests,
@@ -556,10 +598,19 @@ def choose_algorithm(
     collective: str, n: int, buffer_bytes: float, hw: HardwareParams,
     g0: Optional[Topology] = None,
 ) -> str:
-    """.. deprecated:: use ``PcclSession.choose_algorithm`` (cached, fabric
-    aware).  Kept as a stateless shim for existing call sites/tests."""
-    g0 = g0 or ring(n)
-    p = plan_collective(
-        CollectiveRequest(collective, n, buffer_bytes, algorithm="auto"), g0, hw
+    """.. deprecated:: removed in repro 2.0 (``SHIM_REMOVAL_VERSION``) —
+    use ``PcclSession.choose_algorithm`` or
+    ``PcclSession.submit(PlanRequest(..., algorithm="auto")).algorithm``
+    (cached, fabric aware).  Kept as a stateless shim that delegates
+    bit-identically until then."""
+    _warn_deprecated(
+        "bare choose_algorithm",
+        "PcclSession.choose_algorithm (or PcclSession.submit(PlanRequest("
+        "..., algorithm='auto')).algorithm) from repro.api",
     )
+    g0 = g0 or ring(n)
+    p = plan_collective_sweep(
+        CollectiveRequest(collective, n, buffer_bytes, algorithm="auto"),
+        [buffer_bytes], g0, hw,
+    )[0]
     return p.algorithm

@@ -1491,13 +1491,16 @@ class ConcurrentPlan:
 
     hw: HardwareParams
     groups: Tuple[ConcurrentGroupPlan, ...]
-    n_rounds: int                   # joint horizon = max group round count
+    n_rounds: int                   # joint horizon = max group offset+rounds
     joint_cost: float               # converged aligned-overlap cost
     sequential_cost: float          # Σ solo costs (time-multiplexed fabric)
     serialized: bool                # joint overlap did not pay; run back-to-back
     comm_cost: float                # joint decomposition (aligned candidate)
     reconfig_cost: float
     final_topology: Optional[Topology] = None
+    # per-group arrival-round offsets (empty = every group starts at round 0);
+    # the invariant checker replays the joint cost with these
+    offsets: Tuple[int, ...] = ()
 
     @property
     def total_cost(self) -> float:
@@ -1519,7 +1522,16 @@ class _JointState:
     """Shared arrays for joint evaluation and best-response over one
     concurrent instance: the directed-edge universe of every group's states,
     per-group incidence/dilation/feasibility matrices padded to the joint
-    horizon, and a memo of per-(group, round, state) link loads."""
+    horizon, and a memo of per-(group, round, state) link loads.
+
+    ``offsets`` gives each group an *arrival round*: group ``g``'s schedule
+    round ``i`` executes at joint round ``i + offsets[g]``, so staggered
+    admissions (a serving arbiter admitting requests mid-step) are not
+    forced into round-0 alignment.  Before its offset a group moves no
+    traffic; it holds ``G0`` by default but may *pre-position* into any
+    state enterable at its round 0 (paying the union reconfiguration then —
+    which overlapped reconfiguration can hide behind the other groups'
+    in-flight rounds, exactly the reconfigure-during-idle-gaps win)."""
 
     def __init__(
         self,
@@ -1527,13 +1539,25 @@ class _JointState:
         structures: Sequence[PlanStructure],
         schedules: Sequence[Schedule],
         hw: HardwareParams,
+        *,
+        offsets: Optional[Sequence[int]] = None,
     ) -> None:
         self.hw = hw
         self.structures = list(structures)
         self.schedules = list(schedules)
         self.G = len(structures)
         self.rounds_g = [len(sch.rounds) for sch in schedules]
-        self.R = max(self.rounds_g)
+        if offsets is None:
+            self.offsets: Tuple[int, ...] = (0,) * self.G
+        else:
+            self.offsets = tuple(int(o) for o in offsets)
+            if len(self.offsets) != self.G:
+                raise ValueError(
+                    f"got {len(self.offsets)} offsets for {self.G} schedules"
+                )
+            if any(o < 0 for o in self.offsets):
+                raise ValueError(f"offsets must be >= 0, got {self.offsets}")
+        self.R = max(o + r for o, r in zip(self.offsets, self.rounds_g))
         universe = set(g0.edges)
         for st in self.structures:
             for s in st.states:
@@ -1552,7 +1576,9 @@ class _JointState:
         self.sizes: List[np.ndarray] = []    # (R,) bytes/transfer, padded 0
         self.pairs: List[List[List[Tuple[int, int]]]] = []
         self.pair_keys: List[List] = []
-        for st, sch, rg in zip(self.structures, self.schedules, self.rounds_g):
+        for st, sch, rg, off in zip(
+            self.structures, self.schedules, self.rounds_g, self.offsets
+        ):
             ns = len(st.states)
             inc = np.zeros((ns, self.E), dtype=bool)
             for s in st.states:
@@ -1560,11 +1586,14 @@ class _JointState:
                     inc[s.idx, self._eidx[e]] = True
             self.inc.append(inc)
             dil = np.zeros((self.R, ns))
-            dil[:rg] = st.dilation
+            dil[off:off + rg] = st.dilation
             feas = np.ones((self.R, ns), dtype=bool)
-            feas[:rg] = st.feasible
+            feas[off:off + rg] = st.feasible
             ent = np.zeros((self.R, ns), dtype=bool)
-            ent[:rg] = st.enterable
+            ent[off:off + rg] = st.enterable
+            if off:
+                # idle prefix: pre-position into anything round 0 may enter
+                ent[:off] = st.enterable[0]
             self.dil.append(dil)
             self.feas.append(feas)
             self.enter.append(ent)
@@ -1572,10 +1601,11 @@ class _JointState:
             prs: List[List[Tuple[int, int]]] = []
             keys: List = []
             for i in range(self.R):
-                if i < rg:
-                    prs.append(pairs_of(sch.rounds[i]))
-                    keys.append(st.round_keys[i])
-                    sz[i] = sch.rounds[i].size
+                j = i - off
+                if 0 <= j < rg:
+                    prs.append(pairs_of(sch.rounds[j]))
+                    keys.append(st.round_keys[j])
+                    sz[i] = sch.rounds[j].size
                 else:
                     prs.append([])
                     keys.append(None)
@@ -1590,8 +1620,9 @@ class _JointState:
         """(edge-index array, count array) of group ``g``'s round-``i``
         transfers routed on state ``s``'s topology — each group's traffic is
         confined to its own allocation.  ``None`` when unroutable; empty
-        arrays for empty rounds and rounds past the group's schedule."""
-        if i >= self.rounds_g[g] or not self.pairs[g][i]:
+        arrays for empty rounds and joint rounds outside the group's
+        ``[offset, offset + rounds)`` window."""
+        if not self.pairs[g][i]:
             return _EMPTY_LOADS
         key = (g, self.pair_keys[g][i], s)
         hit = self._loads.get(key, _MISS)
@@ -1837,6 +1868,7 @@ def plan_concurrent(
     structures: Optional[Sequence[PlanStructure]] = None,
     solo_plans: Optional[Sequence[Plan]] = None,
     refine_passes: int = 6,
+    offsets: Optional[Sequence[int]] = None,
 ) -> ConcurrentPlan:
     """Jointly plan several concurrently-active collectives on one fabric.
 
@@ -1857,6 +1889,12 @@ def plan_concurrent(
     sequential independent planning; ``serialized`` says the bound was the
     better choice (it can be, e.g., under overlapped reconfiguration, where
     serial execution hides reprogramming better than sharing does).
+
+    ``offsets`` staggers arrivals: group ``g``'s round ``i`` executes at
+    joint round ``i + offsets[g]`` (see :class:`_JointState`) — the online
+    arbiter's admission path, where a prefill collective admitted mid-step
+    joins decode rounds already in flight instead of forcing round-0
+    alignment.
     """
     schedules = list(schedules)
     if not schedules:
@@ -1878,11 +1916,15 @@ def plan_concurrent(
         ]
     sequential_cost = float(sum(p.total_cost for p in solo))
 
-    ev = _JointState(g0, structures, schedules, hw)
+    ev = _JointState(g0, structures, schedules, hw, offsets=offsets)
     R, G = ev.R, ev.G
 
-    def padded(plan: Plan) -> Tuple[int, ...]:
-        seq = [s.state_idx for s in plan.steps]
+    def padded(plan: Plan, g: int) -> Tuple[int, ...]:
+        # idle prefix holds G0 (the solo seed never pre-positions; the
+        # best-response refinement may), then the solo states, then the
+        # final state carried to the joint horizon
+        seq = [structures[g].g0_idx] * ev.offsets[g]
+        seq += [s.state_idx for s in plan.steps]
         seq += [seq[-1]] * (R - len(seq))
         return tuple(seq)
 
@@ -1903,7 +1945,7 @@ def plan_concurrent(
                 break
         return seqs, total
 
-    base = [padded(p) for p in solo]
+    base = [padded(p, g) for g, p in enumerate(solo)]
     candidates = [refine(list(base))]
     if G > 1:
         # staggered greedy seeds: grant the fabric in priority order, each
@@ -1946,6 +1988,9 @@ def plan_concurrent(
         comm_cost=float(sum(comm)),
         reconfig_cost=float(sum(reconf)),
         final_topology=final_topo,
+        # all-zero staggering IS round-0 alignment: normalize to the empty
+        # tuple so aligned plans compare equal however the caller spelled it
+        offsets=ev.offsets if any(ev.offsets) else (),
     )
 
 
@@ -1957,19 +2002,21 @@ def plan_concurrent_exact(
     *,
     structures: Optional[Sequence[PlanStructure]] = None,
     max_product_states: int = 4096,
+    offsets: Optional[Sequence[int]] = None,
 ) -> float:
     """Exact joint DP over the product state space (oracle for n ≤ 8 tests).
 
     Returns the optimal *aligned* joint cost — the quantity
     ``plan_concurrent(...).joint_cost`` approximates; the serialized
-    fallback is deliberately outside its search space."""
+    fallback is deliberately outside its search space.  ``offsets`` carries
+    the same arrival-round semantics as :func:`plan_concurrent`."""
     import itertools
 
     schedules = list(schedules)
     if not schedules:
         raise ValueError("plan_concurrent_exact needs at least one schedule")
     structures = _concurrent_structures(g0, standard, schedules, hw, structures)
-    ev = _JointState(g0, structures, schedules, hw)
+    ev = _JointState(g0, structures, schedules, hw, offsets=offsets)
     G, R = ev.G, ev.R
     ns_list = [len(st.states) for st in structures]
     n_prod = 1

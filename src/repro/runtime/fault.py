@@ -67,6 +67,25 @@ def replan_after_failure(
     )
 
 
+def fail_link(target: Any, u: int, v: int, *, n: int = None) -> LinkFailure:
+    """Kill the physical link ``u — v`` (both directions) mid-stream.
+
+    ``target`` is either a :class:`~repro.serve.arbiter.FabricArbiter`
+    (anything with ``on_fault``) — the serving control plane warm-replans
+    and keeps ticking on the degraded fabric — or a bare
+    :class:`~repro.api.PcclSession`, which is degraded via
+    :func:`replan_after_failure` on a representative all-reduce.  Returns
+    the injected :class:`LinkFailure` so tests can assert on it.
+    """
+    failure = LinkFailure(edges=((u, v),))
+    on_fault = getattr(target, "on_fault", None)
+    if on_fault is not None:
+        on_fault(failure)
+    else:
+        replan_after_failure(target, failure, "all_reduce", 4096.0, n=n)
+    return failure
+
+
 @dataclass
 class FailureInjector:
     """Deterministic failure schedule: raise at the given steps (tests) —

@@ -14,8 +14,6 @@ communication time and algorithm.
 
 from __future__ import annotations
 
-import dataclasses
-import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -23,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import ConcurrentCollectiveRequest, PcclSession
+from repro.api import PcclSession
 from repro.configs.base import ModelConfig
 from repro.core import cost_model as cm
 from repro.models import build_model
@@ -38,13 +36,147 @@ class Request:
     done: bool = False
 
 
-@dataclass
-class EngineConfig:
+@dataclass(frozen=True)
+class ModelSection:
+    """Decoding-policy knobs: how tokens are sampled from the model."""
+
+    greedy: bool = True
+
+
+@dataclass(frozen=True)
+class RuntimeSection:
+    """Batching/KV-cache shape: how many sequences share the engine."""
+
     batch_size: int = 4
     max_len: int = 256
-    greedy: bool = True
-    tp: int = 1                     # tensor-parallel degree priced via PCCL
-    dp: int = 1                     # data-parallel replicas sharing the fabric
+
+    def __post_init__(self) -> None:
+        if self.batch_size < 1:
+            raise ValueError(
+                f"RuntimeSection.batch_size must be >= 1, got {self.batch_size}"
+            )
+        if self.max_len < 1:
+            raise ValueError(
+                f"RuntimeSection.max_len must be >= 1, got {self.max_len}"
+            )
+        if self.batch_size > self.max_len:
+            raise ValueError(
+                f"RuntimeSection: batch_size={self.batch_size} exceeds the "
+                f"max_len={self.max_len} KV slots one sequence owns — the "
+                f"engine cannot admit more sequences than slots"
+            )
+
+
+@dataclass(frozen=True)
+class FabricSection:
+    """Parallelism layout on the shared photonic fabric."""
+
+    tp: int = 1                 # tensor-parallel degree priced via PCCL
+    dp: int = 1                 # data-parallel replicas sharing the fabric
+    mesh_n: Optional[int] = None  # fabric domain size; defaults to tp·dp
+
+    def __post_init__(self) -> None:
+        if self.tp < 1:
+            raise ValueError(f"FabricSection.tp must be >= 1, got {self.tp}")
+        if self.dp < 1:
+            raise ValueError(f"FabricSection.dp must be >= 1, got {self.dp}")
+        if self.mesh_n is not None and self.mesh_n != self.tp * self.dp:
+            raise ValueError(
+                f"FabricSection: tp*dp = {self.tp}*{self.dp} = "
+                f"{self.tp * self.dp} does not cover mesh_n={self.mesh_n} "
+                f"fabric ranks — fix tp/dp or drop mesh_n"
+            )
+
+    @property
+    def n(self) -> int:
+        """The fabric domain size every plan spans."""
+        return self.mesh_n if self.mesh_n is not None else self.tp * self.dp
+
+
+class EngineConfig:
+    """Sectioned engine configuration with construction-time validation.
+
+    Three frozen sections — :class:`ModelSection` (decoding policy),
+    :class:`RuntimeSection` (batching/KV shape), :class:`FabricSection`
+    (parallelism layout) — each validating its own invariants so a bad
+    config raises an attributable ``ValueError`` at construction instead of
+    failing deep inside planning.  The historical flat surface is kept
+    intact both ways: flat constructor kwargs
+    (``EngineConfig(batch_size=2, tp=4)``) build the sections, and flat
+    attributes (``cfg.batch_size`` …) read through to them.  Pass whole
+    sections for anything beyond the defaults::
+
+        EngineConfig(runtime=RuntimeSection(8, 4096),
+                     fabric=FabricSection(tp=8, dp=4, mesh_n=32))
+    """
+
+    def __init__(
+        self,
+        batch_size: Optional[int] = None,
+        max_len: Optional[int] = None,
+        greedy: Optional[bool] = None,
+        tp: Optional[int] = None,
+        dp: Optional[int] = None,
+        *,
+        model: Optional[ModelSection] = None,
+        runtime: Optional[RuntimeSection] = None,
+        fabric: Optional[FabricSection] = None,
+    ) -> None:
+        if runtime is not None and (batch_size is not None or max_len is not None):
+            raise ValueError(
+                "EngineConfig: pass runtime= or flat batch_size/max_len, not both"
+            )
+        if model is not None and greedy is not None:
+            raise ValueError("EngineConfig: pass model= or flat greedy, not both")
+        if fabric is not None and (tp is not None or dp is not None):
+            raise ValueError("EngineConfig: pass fabric= or flat tp/dp, not both")
+        self.model = model if model is not None else ModelSection(
+            greedy=True if greedy is None else greedy
+        )
+        self.runtime = runtime if runtime is not None else RuntimeSection(
+            batch_size=4 if batch_size is None else batch_size,
+            max_len=256 if max_len is None else max_len,
+        )
+        self.fabric = fabric if fabric is not None else FabricSection(
+            tp=1 if tp is None else tp, dp=1 if dp is None else dp
+        )
+
+    # ------------------------------------------------- flat read-through
+    @property
+    def greedy(self) -> bool:
+        return self.model.greedy
+
+    @property
+    def batch_size(self) -> int:
+        return self.runtime.batch_size
+
+    @property
+    def max_len(self) -> int:
+        return self.runtime.max_len
+
+    @property
+    def tp(self) -> int:
+        return self.fabric.tp
+
+    @property
+    def dp(self) -> int:
+        return self.fabric.dp
+
+    def __repr__(self) -> str:
+        return (
+            f"EngineConfig(model={self.model!r}, runtime={self.runtime!r}, "
+            f"fabric={self.fabric!r})"
+        )
+
+    def __eq__(self, other: object) -> bool:
+        if not isinstance(other, EngineConfig):
+            return NotImplemented
+        return (self.model, self.runtime, self.fabric) == (
+            other.model, other.runtime, other.fabric
+        )
+
+    def __hash__(self) -> int:
+        return hash((self.model, self.runtime, self.fabric))
 
 
 class ServeEngine:
@@ -53,6 +185,7 @@ class ServeEngine:
                  session: Optional[PcclSession] = None):
         self.cfg = cfg
         self.ecfg = engine_cfg
+        self._arbiter = None
         self.model = build_model(cfg)
         self.params = params if params is not None else unbox(
             self.model.init(jax.random.PRNGKey(seed))
@@ -107,6 +240,24 @@ class ServeEngine:
             report["concurrent"] = self.concurrent_report()
         return report
 
+    def arbiter(self, cfg: Optional[Any] = None) -> Any:
+        """The engine's online fabric arbiter (lazily built, then shared).
+
+        Returns a :class:`repro.serve.arbiter.FabricArbiter` bound to this
+        engine's session and ``tp × dp`` layout; pass an
+        :class:`~repro.serve.arbiter.ArbiterConfig` to rebuild with
+        different control-plane policy.
+        """
+        from repro.serve.arbiter import FabricArbiter
+
+        if self._arbiter is None or cfg is not None:
+            self.pccl = self.pccl or PcclSession(cm.TPU_V5E_PHOTONIC)
+            self._arbiter = FabricArbiter(
+                self.pccl, tp=self.ecfg.tp, dp=self.ecfg.dp,
+                d_model=self.cfg.d_model, cfg=cfg,
+            )
+        return self._arbiter
+
     def concurrent_report(self) -> Dict[str, Any]:
         """Joint fabric pricing for a continuous-batching step with ``dp``
         replicas on one photonic fabric: the prefill TP all-reduces (full
@@ -115,30 +266,16 @@ class ServeEngine:
         all-gather (per-token activations exchanged across replicas).  The
         arbiter overlaps the two axes with per-link contention pricing;
         ``speedup`` is the planned gain over pricing each collective as if
-        it owned the fabric (sequential baseline).
+        it owned the fabric (sequential baseline).  Pricing goes through
+        :meth:`arbiter`, the same control plane that runs the online
+        admission/preemption loop (see ``repro.serve.arbiter``).
         """
         tp, dp = self.ecfg.tp, self.ecfg.dp
         if tp < 2 or dp < 2:
             return {"tp": tp, "dp": dp, "speedup": 1.0, "serialized": False}
-        from repro.core.schedules import mesh_groups
-
-        n = tp * dp
-        # replica r owns ranks [r·tp, (r+1)·tp) (TP rows); the DP groups are
-        # the columns — one rank per replica at the same TP index.
-        tp_groups, dp_groups = mesh_groups(tp, dp)
         prefill_bytes = 4.0 * self.ecfg.batch_size * self.ecfg.max_len * self.cfg.d_model
         decode_bytes = 4.0 * self.ecfg.batch_size * self.cfg.d_model
-        cp = self.pccl.plan_concurrent(
-            [
-                ConcurrentCollectiveRequest(
-                    "all_reduce", prefill_bytes, groups=tp_groups, algorithm="auto"
-                ),
-                ConcurrentCollectiveRequest(
-                    "all_gather", decode_bytes, groups=dp_groups, algorithm="auto"
-                ),
-            ],
-            n=n,
-        )
+        cp = self.arbiter().price_joint(prefill_bytes, decode_bytes)
         return {
             "tp": tp,
             "dp": dp,

@@ -358,3 +358,108 @@ def test_request_groups_normalized_for_cache_keys():
     assert cp.n == 4
     sess.plan_concurrent([as_tuples])
     assert sess.stats.hits == 1  # same key, cache hit
+
+
+# ------------------------------------------------------- arrival offsets
+def test_zero_offsets_bit_identical_to_none():
+    """offsets=(0, 0) must be the no-offset plan bit-for-bit: same tables,
+    same horizon, same joint DP — staggering only changes anything when an
+    offset is nonzero."""
+    scheds = two_axis_schedules(8, 2, 4)
+    g0 = T.ring(8)
+    std = default_standard_set(8)
+    base = plan_concurrent(g0, std, scheds, cm.H100_DGX)
+    zero = plan_concurrent(g0, std, scheds, cm.H100_DGX, offsets=(0, 0))
+    assert zero.joint_cost == base.joint_cost
+    assert zero.n_rounds == base.n_rounds
+    assert [g.states for g in zero.groups] == [g.states for g in base.groups]
+    assert base.offsets == () and zero.offsets == ()
+
+
+@pytest.mark.parametrize("offsets", [(2, 0), (0, 3), (1, 2)])
+def test_offsets_shift_horizon_and_keep_bounds(offsets):
+    """A staggered plan spans max(offset + rounds) joint rounds, records its
+    offsets, still never prices worse than the (equally staggered)
+    sequential baseline, and replays cleanly through the invariant
+    checker."""
+    from repro.analysis.invariants import check_concurrent_plan
+
+    scheds = two_axis_schedules(8, 2, 4)
+    g0 = T.ring(8)
+    std = default_standard_set(8)
+    cp = plan_concurrent(g0, std, scheds, cm.H100_DGX, offsets=offsets)
+    assert cp.offsets == offsets
+    assert cp.n_rounds == max(
+        o + s.num_rounds for o, s in zip(offsets, scheds)
+    )
+    assert cp.joint_cost <= cp.sequential_cost * (1 + 1e-12)
+    assert check_concurrent_plan(cp, g0, std) == []
+
+
+@pytest.mark.parametrize("mode", sorted(HW_MODES))
+def test_offsets_heuristic_matches_exact(mode):
+    """The greedy+refinement solver under offsets stays within its usual
+    envelope of the exact product-state DP (never better than exact;
+    serialized fallback keeps it bounded above)."""
+    hw = HW_MODES[mode]
+    scheds = two_axis_schedules(4, 2, 2, s1=1 * MB, s2=64 * MB)
+    g0 = T.ring(4)
+    std = default_standard_set(4)
+    for offsets in ((0, 0), (1, 0), (0, 2)):
+        cp = plan_concurrent(g0, std, scheds, hw, offsets=offsets)
+        exact = plan_concurrent_exact(g0, std, scheds, hw, offsets=offsets)
+        assert cp.joint_cost >= exact - 1e-15
+        assert cp.joint_cost <= cp.sequential_cost * (1 + 1e-12)
+
+
+def test_offsets_idle_prefix_holds_or_prepositions():
+    """During its idle prefix a group occupies states enterable at its
+    first round — the prefix rows of the padded sequence are valid
+    pre-positioning, and the post-offset suffix is a complete execution."""
+    scheds = two_axis_schedules(8, 2, 4)
+    g0 = T.ring(8)
+    std = default_standard_set(8)
+    off = (3, 0)
+    cp = plan_concurrent(g0, std, scheds, cm.H100_DGX, offsets=off)
+    for g, grp in enumerate(cp.groups):
+        assert len(grp.states) == cp.n_rounds
+        # the group's own rounds occupy the suffix starting at its offset
+        assert cp.n_rounds - off[g] >= scheds[g].num_rounds
+
+
+def test_offsets_validation():
+    scheds = two_axis_schedules(8, 2, 4)
+    g0 = T.ring(8)
+    std = default_standard_set(8)
+    with pytest.raises(ValueError, match="offsets"):
+        plan_concurrent(g0, std, scheds, cm.H100_DGX, offsets=(1,))
+    with pytest.raises(ValueError, match="offsets"):
+        plan_concurrent(g0, std, scheds, cm.H100_DGX, offsets=(-1, 0))
+    reqs = [
+        ConcurrentCollectiveRequest("all_reduce", MB, groups=((0, 1), (2, 3))),
+        ConcurrentCollectiveRequest("all_gather", MB, groups=((0, 2), (1, 3))),
+    ]
+    with pytest.raises(ValueError, match="offsets"):
+        plan_concurrent_collectives(reqs, 4, T.ring(4), cm.H100_DGX,
+                                    offsets=(1, 2, 3))
+
+
+def test_facade_offsets_roundtrip():
+    """plan_concurrent_collectives forwards offsets and the wrapper exposes
+    them; a session caches staggered and aligned variants separately."""
+    from repro.api import PcclSession
+
+    reqs = [
+        ConcurrentCollectiveRequest("all_reduce", MB, groups=((0, 1), (2, 3))),
+        ConcurrentCollectiveRequest("all_gather", MB, groups=((0, 2), (1, 3))),
+    ]
+    cp = plan_concurrent_collectives(reqs, 4, T.ring(4), cm.H100_DGX,
+                                     offsets=(0, 2))
+    assert cp.offsets == (0, 2)
+    sess = PcclSession(cm.H100_DGX, thread_fabric=False)
+    a = sess.plan_concurrent(reqs, n=4)
+    b = sess.plan_concurrent(reqs, n=4, offsets=(0, 2))
+    c = sess.plan_concurrent(reqs, n=4, offsets=(0, 0))  # aligned == None
+    assert b.offsets == (0, 2)
+    assert a.joint_cost == c.joint_cost
+    assert sess.stats.hits == 1 and sess.stats.misses == 2

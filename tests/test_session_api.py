@@ -202,3 +202,105 @@ def test_pcclcomm_shim_warns_and_delegates():
     a2 = comm._schedule("all_reduce", 4 * MB)
     assert a1 is a2  # served by the session plan cache
     assert comm._session.thread_fabric is False
+
+
+def test_plan_collective_shim_warns_and_delegates_bit_identically():
+    """The bare free functions remain available until the named removal
+    version, warn with the submit() replacement, and return exactly what
+    the non-deprecated sweep path returns."""
+    import warnings
+
+    from repro.core.pccl import (
+        SHIM_REMOVAL_VERSION,
+        choose_algorithm,
+        plan_collective_sweep,
+    )
+
+    req = CollectiveRequest("all_reduce", 16, 4 * MB)
+    g0 = T.ring(16)
+    with pytest.warns(DeprecationWarning) as rec:
+        shimmed = plan_collective(req, g0, HW)
+    msg = str(rec[0].message)
+    assert SHIM_REMOVAL_VERSION in msg and "submit" in msg
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        direct = plan_collective_sweep(req, [req.buffer_bytes], g0, HW)[0]
+    assert shimmed == direct  # bit-identical delegation
+
+    with pytest.warns(DeprecationWarning, match=SHIM_REMOVAL_VERSION):
+        algo = choose_algorithm("all_reduce", 16, 4 * MB, HW, g0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        auto = plan_collective_sweep(
+            CollectiveRequest("all_reduce", 16, 4 * MB, algorithm="auto"),
+            [4 * MB], g0, HW,
+        )[0]
+    assert algo == auto.algorithm
+
+    from repro.comm.pccl_collectives import PcclComm
+
+    with pytest.warns(DeprecationWarning, match=SHIM_REMOVAL_VERSION):
+        PcclComm(axis_name="x", n=8)
+
+
+# -------------------------------------------------------- submit() surface
+def test_submit_parity_with_named_entrypoints():
+    """session.submit(Request(...)) must be bit-identical to the named
+    method with the same arguments — same results, same cache traffic."""
+    from repro.api import (
+        ConcurrentCollectiveRequest,
+        ConcurrentPlanRequest,
+        HierarchicalPlanRequest,
+        PlanRequest,
+        PlanSweepRequest,
+        ReplanRequest,
+    )
+    from repro.core.schedules import mesh_groups
+
+    a = PcclSession(HW, g0=T.ring(16))
+    b = PcclSession(HW, g0=T.ring(16))
+    assert a.plan("all_reduce", 4 * MB) == b.submit(
+        PlanRequest("all_reduce", 4 * MB)
+    )
+    assert a.plan_sweep("all_gather", [MB, 8 * MB]) == b.submit(
+        PlanSweepRequest("all_gather", (MB, 8 * MB))
+    )
+    assert a.plan_hierarchical("all_reduce", MB, pod_size=4) == b.submit(
+        HierarchicalPlanRequest("all_reduce", MB, pod_size=4)
+    )
+    tp_groups, dp_groups = mesh_groups(4, 4)
+    creqs = (
+        ConcurrentCollectiveRequest("all_reduce", 4 * MB, groups=tp_groups),
+        ConcurrentCollectiveRequest("all_gather", MB, groups=dp_groups),
+    )
+    ca = a.plan_concurrent(creqs)
+    cb = b.submit(ConcurrentPlanRequest(creqs))
+    assert ca.plan == cb.plan and ca.joint_cost == cb.joint_cost
+    assert a.replan("all_reduce", 4 * MB, failed_edges=[(0, 1)]) == b.submit(
+        ReplanRequest("all_reduce", 4 * MB, failed_edges=((0, 1),))
+    )
+    # both sessions saw identical cache traffic and fabric threading
+    assert (a.stats.hits, a.stats.misses) == (b.stats.hits, b.stats.misses)
+    assert a.fabric(16).edges == b.fabric(16).edges
+
+
+def test_submit_rejects_non_requests():
+    s = PcclSession(HW, g0=T.ring(8))
+    with pytest.raises(TypeError, match="PlanRequest-family"):
+        s.submit({"collective": "all_reduce"})
+
+
+def test_plan_request_normalization():
+    """Requests normalize their fields at construction so equal requests
+    hash equal however the caller spelled them."""
+    from repro.api import PlanRequest, PlanSweepRequest, ReplanRequest
+
+    assert PlanRequest("all_reduce", 4 * MB, dims=[4, 4]) == PlanRequest(
+        "all_reduce", float(4 * MB), dims=(4, 4)
+    )
+    assert hash(PlanSweepRequest("all_gather", [1, 2])) == hash(
+        PlanSweepRequest("all_gather", (1.0, 2.0))
+    )
+    r = ReplanRequest("all_reduce", MB, failed_edges=[[0, 1]],
+                      failed_ranks=[np.int64(3)])
+    assert r.failed_edges == ((0, 1),) and r.failed_ranks == (3,)
